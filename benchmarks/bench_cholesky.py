@@ -1,0 +1,27 @@
+"""Framework generality (paper §3.1): Cholesky under the variant set.
+GFLOPS = n³/3."""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import emit, gflops, random_spd, time_fn
+from repro.core.lookahead import get_variant
+
+VARIANTS = ("mtb", "rtm", "la")
+
+
+def run(sizes=(512, 1024), b: int = 192, variants=VARIANTS):
+    rows = []
+    for n in sizes:
+        a = random_spd(n, 4)
+        flops = n ** 3 / 3.0
+        for var in variants:
+            fn = jax.jit(lambda x, v=var: get_variant("cholesky", v)(x, b))
+            t = time_fn(fn, a)
+            rows.append(emit(f"cholesky_{var}_n{n}_b{b}", t,
+                             f"{gflops(flops, t):.2f}GFLOPS"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

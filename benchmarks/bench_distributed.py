@@ -1,0 +1,75 @@
+"""Pod-scale look-ahead evidence: distributed LU schedule comparison.
+
+Runs in a subprocess with 8 virtual host devices (the only place outside
+``launch/dryrun.py`` that forces a device count).  Two artifacts per size:
+
+* wall-clock of ``lu_block_cyclic`` with ``lookahead=True`` vs ``False``
+  (virtual CPU devices — directional only, recorded as such), and
+* the **HLO schedule evidence**: collective instruction count and operand
+  bytes for both variants.  The MTB variant carries the fork–join
+  ``optimization_barrier``; LA hoists the panel psum before the trailing
+  GEMMs so the async collective can overlap — visible in the optimized HLO.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+from benchmarks.common import emit
+
+_CHILD = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json, time
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import distributed as dist
+from repro.launch.roofline import collective_bytes
+
+n, b, nd = 512, 64, 4
+mesh = jax.make_mesh((nd,), ("model",))
+rng = np.random.default_rng(0)
+a = jnp.asarray(rng.standard_normal((n, n)).astype(np.float32))
+out = {}
+for la in (False, True):
+    fn = jax.jit(lambda x, la=la: dist.lu_block_cyclic(x, b, mesh, lookahead=la)[0])
+    lowered = fn.lower(a)
+    compiled = lowered.compile()
+    coll = collective_bytes(compiled.as_text())
+    jax.block_until_ready(fn(a))
+    ts = []
+    for _ in range(3):
+        t0 = time.perf_counter(); jax.block_until_ready(fn(a))
+        ts.append(time.perf_counter() - t0)
+    out["la" if la else "mtb"] = {
+        "seconds": float(np.median(ts)),
+        "collectives": coll,
+    }
+print("RESULT:" + json.dumps(out))
+"""
+
+
+def run():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = env.get("PYTHONPATH", "src")
+    proc = subprocess.run([sys.executable, "-c", _CHILD], env=env,
+                          capture_output=True, text=True, timeout=900)
+    rows = []
+    for line in proc.stdout.splitlines():
+        if line.startswith("RESULT:"):
+            res = json.loads(line[len("RESULT:"):])
+            for var, d in res.items():
+                coll = d["collectives"]
+                rows.append(emit(
+                    f"dist_lu_{var}_n512_b64_nd4", d["seconds"],
+                    f"coll_count={coll['count']};coll_bytes="
+                    f"{sum(v for k, v in coll.items() if k != 'count')}"))
+            return rows
+    print(proc.stdout[-2000:])
+    print(proc.stderr[-2000:])
+    raise RuntimeError("distributed bench failed")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,30 @@
+"""Paper Figs. 2 (bottom) / 4 / 6: LUpp under MTB vs RTM vs LA scheduling.
+
+GFLOPS uses the paper's count 2n³/3.  ``b=192`` default block matches the
+paper's choice (§6.1).
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import emit, gflops, random_matrix, time_fn
+from repro.core.lookahead import get_variant
+
+VARIANTS = ("mtb", "rtm", "la")
+
+
+def run(sizes=(512, 1024), b: int = 192, variants=VARIANTS):
+    rows = []
+    for n in sizes:
+        a = random_matrix(n, 2)
+        flops = 2.0 * n ** 3 / 3.0
+        for var in variants:
+            fn = jax.jit(lambda x, v=var: get_variant("lu", v)(x, b)[0])
+            t = time_fn(fn, a)
+            rows.append(emit(f"lu_{var}_n{n}_b{b}", t,
+                             f"{gflops(flops, t):.2f}GFLOPS"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

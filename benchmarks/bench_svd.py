@@ -1,0 +1,31 @@
+"""Paper Fig. 8: two-sided reduction to band (SVD stage 1), MTB vs LA.
+
+The paper reports GFLOPS against the full bidiagonalization count 8n³/3
+("a scaled metric for the inverse of time", §6.4) — we follow that.
+w = b = 192 default (paper uses w = 384 with b = 192; our w tracks b).
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import emit, gflops, random_matrix, time_fn
+from repro.core.lookahead import get_variant
+
+VARIANTS = ("mtb", "la")
+
+
+def run(sizes=(384, 768), b: int = 192, variants=VARIANTS):
+    rows = []
+    for n in sizes:
+        a = random_matrix(n, 5)
+        flops = 8.0 * n ** 3 / 3.0
+        for var in variants:
+            fn = jax.jit(lambda x, v=var: get_variant("band_reduction", v)(x, b))
+            t = time_fn(fn, a)
+            rows.append(emit(f"svd_band_{var}_n{n}_w{b}", t,
+                             f"{gflops(flops, t):.2f}GFLOPS"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,48 @@
+"""Benchmark utilities: timing, GFLOPS, CSV emission.
+
+All wall-clock numbers here are REAL measurements on the CPU backend (the
+paper's experiments are CPU experiments — repro band 5/5).  Kernel-level
+Pallas timings are excluded: interpret mode executes the kernel body in
+Python, so its wall-clock is meaningless; kernels are validated for
+correctness in tests and analyzed via the dry-run rooflines instead.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+
+def time_fn(fn, *args, warmup: int = 1, repeats: int = 3) -> float:
+    """Median seconds per call (fn must be jit'd or jit-compatible)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def emit(name: str, seconds: float, derived: str) -> str:
+    """CSV row: name,us_per_call,derived."""
+    row = f"{name},{seconds * 1e6:.1f},{derived}"
+    print(row, flush=True)
+    return row
+
+
+def gflops(flops: float, seconds: float) -> float:
+    return flops / seconds / 1e9
+
+
+def random_matrix(n: int, seed: int = 0, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    return jax.numpy.asarray(rng.standard_normal((n, n)).astype(dtype))
+
+
+def random_spd(n: int, seed: int = 0, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((n, n)).astype(dtype)
+    return jax.numpy.asarray(a @ a.T + n * np.eye(n, dtype=dtype))

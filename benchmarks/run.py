@@ -1,0 +1,46 @@
+"""Benchmark harness — one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--large]
+
+Emits ``name,us_per_call,derived`` CSV rows (also aggregated at the end).
+Mapping to the paper: bench_gemm → Fig 2 (top); bench_lu → Figs 2/4/6;
+bench_qr → Fig 7; bench_svd → Fig 8; bench_cholesky → §3.1 generality;
+bench_blocksizes → §6.1 block-size choice; bench_distributed → §4 at pod
+scale (schedule evidence from the optimized HLO).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--large", action="store_true",
+                    help="larger problem sizes (slower)")
+    ap.add_argument("--skip-distributed", action="store_true")
+    args = ap.parse_args()
+
+    from benchmarks import (bench_blocksizes, bench_cholesky, bench_distributed,
+                            bench_gemm, bench_lu, bench_qr, bench_svd)
+
+    sizes = (512, 1024, 2048) if args.large else (512, 1024)
+    svd_sizes = (384, 768, 1152) if args.large else (384, 768)
+    rows = []
+    print("name,us_per_call,derived")
+    rows += bench_gemm.run(sizes=sizes)
+    rows += bench_lu.run(sizes=sizes)
+    rows += bench_qr.run(sizes=sizes)
+    rows += bench_cholesky.run(sizes=sizes)
+    rows += bench_svd.run(sizes=svd_sizes)
+    rows += bench_blocksizes.run(n=sizes[-1])
+    if not args.skip_distributed:
+        try:
+            rows += bench_distributed.run()
+        except Exception as e:  # subprocess env issues shouldn't kill the run
+            print(f"bench_distributed skipped: {e!r}", file=sys.stderr)
+    print(f"\n# {len(rows)} rows")
+
+
+if __name__ == "__main__":
+    main()

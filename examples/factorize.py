@@ -1,0 +1,50 @@
+"""DMF scheduling-variant demo — the paper's experiment in miniature.
+
+    PYTHONPATH=src python examples/factorize.py [--n 1024] [--b 192]
+
+Times MTB (fork–join) vs RTM (fragmented) vs LA (static look-ahead) for
+LU / QR / Cholesky on this machine's CPU backend and validates that all
+variants produce identical results (the paper's key numerics claim).
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.lookahead import get_variant
+
+FLOPS = {"lu": lambda n: 2 * n**3 / 3, "qr": lambda n: 4 * n**3 / 3,
+         "cholesky": lambda n: n**3 / 3}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=1024)
+    ap.add_argument("--b", type=int, default=192)
+    args = ap.parse_args()
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.standard_normal((args.n, args.n)).astype(np.float32))
+    spd = a @ a.T + args.n * jnp.eye(args.n)
+
+    for dmf, x in (("lu", a), ("qr", a), ("cholesky", spd)):
+        print(f"--- {dmf} (n={args.n}, b={args.b}) ---")
+        outs = {}
+        for variant in ("mtb", "rtm", "la"):
+            fn = jax.jit(lambda m, v=variant: get_variant(dmf, v)(m, args.b))
+            jax.block_until_ready(fn(x))           # compile + warm
+            t0 = time.perf_counter()
+            out = fn(x)
+            jax.block_until_ready(out)
+            dt = time.perf_counter() - t0
+            outs[variant] = jax.tree.leaves(out)[0]
+            gf = FLOPS[dmf](args.n) / dt / 1e9
+            print(f"  {variant:3s}: {dt*1e3:8.1f} ms   {gf:7.2f} GFLOPS")
+        for v in ("rtm", "la"):
+            d = float(jnp.abs(outs[v] - outs["mtb"]).max())
+            print(f"  max|{v} − mtb| = {d:.2e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""Architecture configs — one module per assigned arch + the registry."""
+from repro.configs.base import ModelConfig, MoESpec, ShapeSpec, STANDARD_SHAPES
+from repro.configs.registry import ARCH_IDS, all_configs, get_config, reduced_config
+
+__all__ = ["ModelConfig", "MoESpec", "ShapeSpec", "STANDARD_SHAPES",
+           "ARCH_IDS", "all_configs", "get_config", "reduced_config"]

@@ -1,0 +1,26 @@
+"""Chameleon-34B — early-fusion VLM backbone [arXiv:2405.09818].
+
+Dense decoder; images are VQ tokens in the shared 65536 vocab, so the
+"frontend" is the tokenizer itself (stub: ``input_specs`` supplies token
+ids).  Chameleon's stabilization uses qk-norm — kept.  Full attention ⇒
+``long_500k`` skipped (DESIGN.md §6).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="chameleon-34b",
+    family="vlm",
+    num_layers=48,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=22016,
+    vocab_size=65536,
+    qk_norm=True,
+    mlp_type="swiglu",
+    norm_type="rmsnorm",
+    rope_theta=10000.0,
+    sub_quadratic=False,
+    notes="early fusion: VQ image tokens share the vocab; frontend is a stub",
+)

@@ -1,0 +1,21 @@
+"""Gemma-7B — GeGLU, head_dim=256, (1+w) RMSNorm, tied embeddings
+[arXiv:2403.08295; hf]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma-7b",
+    family="dense",
+    num_layers=28,
+    d_model=3072,
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=256,
+    d_ff=24576,
+    vocab_size=256000,
+    mlp_type="geglu",
+    norm_type="rmsnorm_plus_one",
+    tie_embeddings=True,
+    scale_embed=True,
+    rope_theta=10000.0,
+    sub_quadratic=False,
+)

@@ -1,0 +1,25 @@
+"""Llama-4-Scout-17B-16E — MoE 16 routed experts top-1 + 1 shared, early
+fusion [hf:meta-llama/Llama-4-Scout-17B-16E].
+
+Every layer is MoE (16 routed, top-1, d_ff_expert=8192) with one always-on
+shared expert, per the Llama-4 architecture.  Full attention ⇒ ``long_500k``
+skipped (Scout's iRoPE long-context scheme is not reproduced — DESIGN.md §6).
+"""
+from repro.configs.base import ModelConfig, MoESpec
+
+CONFIG = ModelConfig(
+    name="llama4-scout-17b-a16e",
+    family="moe",
+    num_layers=48,
+    d_model=5120,
+    num_heads=40,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=8192,
+    vocab_size=202048,
+    moe=MoESpec(num_experts=16, top_k=1, d_ff_expert=8192, num_shared=1),
+    mlp_type="swiglu",
+    norm_type="rmsnorm",
+    rope_theta=500000.0,
+    sub_quadratic=False,
+)

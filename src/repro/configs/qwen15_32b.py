@@ -1,0 +1,19 @@
+"""Qwen1.5-32B — dense, MHA-equal GQA (kv=40), QKV bias [hf:Qwen/Qwen1.5]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen1.5-32b",
+    family="dense",
+    num_layers=64,
+    d_model=5120,
+    num_heads=40,
+    num_kv_heads=40,
+    head_dim=128,
+    d_ff=27392,
+    vocab_size=152064,
+    qkv_bias=True,
+    mlp_type="swiglu",
+    norm_type="rmsnorm",
+    rope_theta=1000000.0,
+    sub_quadratic=False,
+)

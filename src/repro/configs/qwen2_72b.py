@@ -1,0 +1,20 @@
+"""Qwen2-72B — dense, GQA kv=8, QKV bias [arXiv:2407.10671; hf]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-72b",
+    family="dense",
+    num_layers=80,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=29568,
+    vocab_size=152064,
+    qkv_bias=True,
+    mlp_type="swiglu",
+    norm_type="rmsnorm",
+    rope_theta=1000000.0,
+    sub_quadratic=False,
+    attn_gather_kv=True,   # §Perf iter1: per-layer KV gather (coll 208s→21.5s)
+)

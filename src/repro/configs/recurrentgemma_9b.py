@@ -1,0 +1,31 @@
+"""RecurrentGemma-9B — Griffin hybrid: RG-LRU + local attention 1:2
+[arXiv:2402.19427].
+
+38 blocks = 12 × (RG-LRU, RG-LRU, local-attn-2048) + 2 × RG-LRU tail.
+Local attention is MQA (kv=1) with head_dim 256.  O(1) recurrent state +
+windowed KV ⇒ ``long_500k`` RUNS.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-9b",
+    family="hybrid",
+    num_layers=38,
+    d_model=4096,
+    num_heads=16,
+    num_kv_heads=1,
+    head_dim=256,
+    d_ff=12288,
+    vocab_size=256000,
+    pattern=("rg", "rg", "local"),
+    pattern_tail=("rg", "rg"),
+    local_window=2048,
+    d_rnn=4096,
+    conv_width=4,
+    mlp_type="geglu",
+    norm_type="rmsnorm_plus_one",
+    tie_embeddings=True,
+    scale_embed=True,
+    rope_theta=10000.0,
+    sub_quadratic=True,
+)

@@ -1,0 +1,145 @@
+"""Architecture registry: ``--arch <id>`` resolution, input specs, smoke configs.
+
+Every assigned architecture is registered here with its exact published
+configuration (one module per arch).  ``reduced_config`` derives the smoke-
+test preset (same family/structure, tiny widths); ``input_specs`` builds the
+ShapeDtypeStruct stand-ins the dry-run lowers against (no allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+
+ARCH_IDS = (
+    "chameleon-34b",
+    "qwen2-72b",
+    "qwen1.5-32b",
+    "gemma-7b",
+    "phi3-medium-14b",
+    "llama4-scout-17b-a16e",
+    "deepseek-moe-16b",
+    "whisper-small",
+    "recurrentgemma-9b",
+    "rwkv6-7b",
+)
+
+_MODULES = {
+    "chameleon-34b": "chameleon_34b",
+    "qwen2-72b": "qwen2_72b",
+    "qwen1.5-32b": "qwen15_32b",
+    "gemma-7b": "gemma_7b",
+    "phi3-medium-14b": "phi3_medium_14b",
+    "llama4-scout-17b-a16e": "llama4_scout_17b_a16e",
+    "deepseek-moe-16b": "deepseek_moe_16b",
+    "whisper-small": "whisper_small",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "rwkv6-7b": "rwkv6_7b",
+}
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; have {ARCH_IDS}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+    return mod.CONFIG
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}
+
+
+def reduced_config(cfg: ModelConfig) -> ModelConfig:
+    """Tiny same-family preset for CPU smoke tests."""
+    kv_ratio = cfg.num_kv_heads / cfg.num_heads
+    heads = 4
+    kv = max(1, int(heads * kv_ratio))
+    changes = dict(
+        num_layers=max(len(cfg.pattern) + len(cfg.pattern_tail),
+                       2 if cfg.moe is None or not cfg.moe.first_dense_layers
+                       else cfg.moe.first_dense_layers + len(cfg.pattern)),
+        d_model=128,
+        num_heads=heads,
+        num_kv_heads=kv,
+        head_dim=32,
+        d_ff=256,
+        vocab_size=512,
+        attn_chunk_q=64,
+        attn_chunk_k=64,
+        rwkv_chunk=16,
+        dtype="float32",
+        remat=False,
+    )
+    if cfg.local_window:
+        changes["local_window"] = 32
+    if cfg.d_rnn:
+        changes["d_rnn"] = 128
+    if cfg.encoder_layers:
+        changes["encoder_layers"] = 2
+        changes["num_layers"] = 2
+    if cfg.moe is not None:
+        changes["moe"] = dataclasses.replace(
+            cfg.moe,
+            num_experts=8,
+            top_k=min(cfg.moe.top_k, 2),
+            d_ff_expert=64,
+        )
+    if cfg.family == "ssm":
+        changes["num_heads"] = 4       # head_dim = 128/4 = 32
+        changes["num_kv_heads"] = 4
+    return dataclasses.replace(cfg, name=cfg.name + "-smoke", **changes)
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins — the dry-run contract)
+# ---------------------------------------------------------------------------
+def _tok(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """Abstract inputs for (arch × shape).  ``train``/``prefill`` take the
+    full sequence; ``decode`` takes one token (the cache is a separate spec —
+    see :func:`cache_specs`).
+
+    Enc-dec budget split: enc frames = seq_len/2 (stub embeddings),
+    dec tokens = seq_len/2 (DESIGN.md §6).
+    """
+    gb, s = shape.global_batch, shape.seq_len
+    if cfg.is_enc_dec:
+        half = s // 2
+        if shape.kind == "train":
+            return {
+                "enc_embed": jax.ShapeDtypeStruct((gb, half, cfg.d_model),
+                                                  jnp.dtype(cfg.dtype)),
+                "tokens": _tok((gb, half)),
+                "labels": _tok((gb, half)),
+            }
+        if shape.kind == "prefill":
+            return {
+                "enc_embed": jax.ShapeDtypeStruct((gb, half, cfg.d_model),
+                                                  jnp.dtype(cfg.dtype)),
+                "tokens": _tok((gb, half)),
+            }
+        return {"tokens": _tok((gb, 1))}
+    if shape.kind == "train":
+        return {"tokens": _tok((gb, s)), "labels": _tok((gb, s))}
+    if shape.kind == "prefill":
+        return {"tokens": _tok((gb, s))}
+    return {"tokens": _tok((gb, 1))}
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeSpec):
+    """Abstract decode-cache pytree for a decode shape (eval_shape, no alloc)."""
+    from repro.models import api
+
+    gb, s = shape.global_batch, shape.seq_len
+    enc_len = s // 2 if cfg.is_enc_dec else 0
+    max_len = s // 2 if cfg.is_enc_dec else s
+    return jax.eval_shape(
+        lambda: api.init_decode_cache(cfg, gb, max_len, enc_len))

@@ -1,0 +1,26 @@
+"""Whisper-small — enc-dec audio backbone [arXiv:2212.04356].
+
+Conv/mel frontend is a STUB: ``input_specs`` supplies precomputed frame
+embeddings.  Enc/dec sequence budget: seq_len/2 each (DESIGN.md §6).
+Full attention enc-dec ⇒ ``long_500k`` skipped.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-small",
+    family="audio",
+    num_layers=12,                 # decoder layers
+    encoder_layers=12,
+    d_model=768,
+    num_heads=12,
+    num_kv_heads=12,
+    head_dim=64,
+    d_ff=3072,
+    vocab_size=51865,
+    mlp_type="gelu",
+    norm_type="layernorm",
+    norm_eps=1e-5,
+    tie_embeddings=True,
+    rope_theta=0.0,                # sinusoidal absolute positions
+    sub_quadratic=False,
+)

@@ -1,0 +1,26 @@
+"""Core: the paper's contribution — DMFs with static look-ahead.
+
+See DESIGN.md §1–4.  Public surface:
+
+* factorizations: :mod:`repro.core.lu`, :mod:`repro.core.cholesky`,
+  :mod:`repro.core.qr`, :mod:`repro.core.ldlt`,
+  :mod:`repro.core.gauss_jordan`, :mod:`repro.core.band_reduction`
+* scheduling variants: :func:`repro.core.lookahead.get_variant`
+* distributed (pod-scale) versions: :mod:`repro.core.distributed`
+"""
+from repro.core.backend import Backend, JNP_BACKEND, get_backend
+from repro.core.blocking import PanelStep, num_panels, panel_steps, split_trailing
+from repro.core.lookahead import FACTORIZATIONS, VARIANTS, get_variant
+
+__all__ = [
+    "Backend",
+    "JNP_BACKEND",
+    "get_backend",
+    "PanelStep",
+    "num_panels",
+    "panel_steps",
+    "split_trailing",
+    "FACTORIZATIONS",
+    "VARIANTS",
+    "get_variant",
+]

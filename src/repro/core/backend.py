@@ -1,0 +1,78 @@
+"""Compute backend used by the factorization drivers.
+
+The paper builds its DMFs on a cache-aware BLAS (BLIS).  Here the same role is
+played by a small backend vtable: the default implementation lowers to XLA's
+native ops (the "vendor BLAS" analogue), while :mod:`repro.kernels.ops`
+provides a drop-in backend built from our Pallas kernels (the "modified BLIS"
+analogue — paper §6.1 uses a modified BLIS 0.1.8).
+
+Keeping the factorization *algorithms* independent of the backend mirrors the
+paper's separation between the DMF framework (§3) and the BLAS layer (§2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def _acc_dtype(dtype) -> jnp.dtype:
+    """f32 accumulation for low-precision inputs (MXU semantics)."""
+    if dtype in (jnp.bfloat16, jnp.float16):
+        return jnp.float32
+    return dtype
+
+
+def gemm_jnp(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """C = A·B with f32 accumulation for bf16 inputs."""
+    out = jnp.matmul(a, b, preferred_element_type=_acc_dtype(a.dtype))
+    return out.astype(a.dtype)
+
+
+def trsm_jnp(
+    t: jnp.ndarray,
+    b: jnp.ndarray,
+    *,
+    side: str = "left",
+    lower: bool = True,
+    trans: bool = False,
+    unit_diagonal: bool = False,
+) -> jnp.ndarray:
+    """Solve ``op(T)·X = B`` (side=left) or ``X·op(T) = B`` (side=right)."""
+    if side == "left":
+        return lax.linalg.triangular_solve(
+            t, b, left_side=True, lower=lower,
+            transpose_a=trans, unit_diagonal=unit_diagonal)
+    elif side == "right":
+        return lax.linalg.triangular_solve(
+            t, b, left_side=False, lower=lower,
+            transpose_a=trans, unit_diagonal=unit_diagonal)
+    raise ValueError(f"side must be left/right, got {side}")
+
+
+@dataclasses.dataclass(frozen=True)
+class Backend:
+    """BLAS-like vtable the DMF drivers are written against."""
+
+    name: str
+    gemm: Callable[..., jnp.ndarray]
+    trsm: Callable[..., jnp.ndarray]
+
+    def update(self, c: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+        """Rank-k update ``C - A·B`` — the trailing-update workhorse."""
+        return (c - self.gemm(a, b)).astype(c.dtype)
+
+
+JNP_BACKEND = Backend(name="jnp", gemm=gemm_jnp, trsm=trsm_jnp)
+
+
+def get_backend(name: str = "jnp") -> Backend:
+    if name == "jnp":
+        return JNP_BACKEND
+    if name == "pallas":
+        from repro.kernels import ops as kops  # local import; optional dep
+
+        return kops.PALLAS_BACKEND
+    raise ValueError(f"unknown backend {name!r} (expected 'jnp' or 'pallas')")

@@ -1,0 +1,124 @@
+"""Two-sided reduction to band form — stage 1 of the SVD (paper §6.4).
+
+Großer–Lang style blocked reduction: at step k (offset ``o = k·w``)
+  1. QR-factor the panel ``A[o:, o:o+w]``  → zeros below the diagonal,
+  2. apply ``Qᴸᵀ`` to the trailing columns,
+  3. LQ-factor the row block ``A[o:o+w, o+w:]`` → zeros right of the band,
+  4. apply ``Qᴿ`` to the trailing rows.
+The result is upper-triangular with superdiagonal bandwidth ``w``; the
+singular values are preserved (orthogonal equivalence), which is what the
+tests check.  GFLOP accounting uses the paper's 8n³/3 convention.
+
+Look-ahead variant (after Rodríguez-Sánchez et al. [29], simplified — see
+DESIGN.md): within the right update, the wide product ``W = A·V_R`` is shared
+between (a) ``PU(k+1)`` — update of the *next* QR panel's columns followed by
+its factorization — and (b) ``TU_right`` — update of the remaining columns.
+(a) and (b) are data-independent given ``W``, so the next panel factorization
+overlaps the bulk outer-product update, exactly the paper's §4 scheme mapped
+onto the two-sided operation.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.backend import Backend, JNP_BACKEND
+from repro.core.blocking import panel_steps
+from repro.core.qr import (_factor_panel, apply_qt_blocked, build_t_matrix,
+                           unpack_v)
+
+__all__ = ["band_reduction_blocked", "band_reduction_lookahead"]
+
+
+def _right_panel(a_rows: jnp.ndarray):
+    """LQ of a (w × m) row block via QR of its transpose.
+
+    Returns (l_block, v, t): ``l_block`` is the (w × m) block after the right
+    transform (``[Rᵀ 0]``), and ``Q_full = I − V·T·Vᵀ`` is the (m × m) right
+    transform to apply to the remaining rows.
+    """
+    w, m = a_rows.shape
+    packed, tau, pnl = _factor_panel(a_rows.T)         # (m × w)
+    r = jnp.triu(packed[:w])                           # (w × w)
+    l_block = jnp.zeros_like(a_rows).at[:, :w].set(r.T)
+    return l_block, pnl.v, pnl.t
+
+
+def _apply_right(c: jnp.ndarray, v: jnp.ndarray, t: jnp.ndarray,
+                 backend: Backend) -> jnp.ndarray:
+    """``C ← C·(I − V·T·Vᵀ)`` — right application of the LQ transform."""
+    w = backend.gemm(c, v)                             # (rows × w)
+    w = backend.gemm(w, t)
+    return (c - backend.gemm(w, v.T)).astype(c.dtype)
+
+
+def band_reduction_blocked(a: jnp.ndarray, w: int = 128, *,
+                           backend: Backend = JNP_BACKEND) -> jnp.ndarray:
+    """Blocked two-sided reduction to band width ``w`` — MTB analogue."""
+    n = a.shape[0]
+    if n % w:
+        raise ValueError(f"band reduction requires n % w == 0 (n={n}, w={w})")
+    for st in panel_steps(n, w):
+        o, bw, nxt = st.k, st.bk, st.k_next
+        # ---- left QR panel + left update -------------------------------
+        packed, tau, pnl = _factor_panel(a[o:, o : o + bw])
+        a = a.at[o:, o : o + bw].set(
+            jnp.zeros_like(packed).at[:bw].set(jnp.triu(packed[:bw])))
+        if nxt < n:
+            a = a.at[o:, nxt:].set(apply_qt_blocked(pnl, a[o:, nxt:], backend))
+            # ---- right LQ panel + right update --------------------------
+            lblk, v2, t2 = _right_panel(a[o : o + bw, nxt:])
+            a = a.at[o : o + bw, nxt:].set(lblk)
+            if nxt < n:
+                a = a.at[nxt:, nxt:].set(
+                    _apply_right(a[nxt:, nxt:], v2, t2, backend))
+    return a
+
+
+def band_reduction_lookahead(a: jnp.ndarray, w: int = 128, *,
+                             backend: Backend = JNP_BACKEND) -> jnp.ndarray:
+    """Band reduction with look-ahead on the right update (see module doc)."""
+    n = a.shape[0]
+    if n % w:
+        raise ValueError(f"band reduction requires n % w == 0 (n={n}, w={w})")
+    steps = list(panel_steps(n, w))
+    pnl_next = None                                    # factored next QR panel
+
+    for idx, st in enumerate(steps):
+        o, bw, nxt = st.k, st.bk, st.k_next
+        # ---- left QR panel (maybe pre-factored by PU at step k−1) ------
+        if pnl_next is None:
+            packed, tau, pnl = _factor_panel(a[o:, o : o + bw])
+        else:
+            packed, pnl = pnl_next
+        a = a.at[o:, o : o + bw].set(
+            jnp.zeros_like(packed).at[:bw].set(jnp.triu(packed[:bw])))
+        pnl_next = None
+        if nxt >= n:
+            break
+        # ---- left update (whole trailing — the LQ row panel needs it) --
+        a = a.at[o:, nxt:].set(apply_qt_blocked(pnl, a[o:, nxt:], backend))
+        # ---- right LQ panel ---------------------------------------------
+        lblk, v2, t2 = _right_panel(a[o : o + bw, nxt:])
+        a = a.at[o : o + bw, nxt:].set(lblk)
+        if nxt >= n:
+            break
+        # ---- shared wide product W = A·V_R ------------------------------
+        c = a[nxt:, nxt:]
+        wprod = backend.gemm(backend.gemm(c, v2), t2)   # (rows × bw)
+        b_next = st.b_next
+        if b_next > 0:
+            # PU(k+1): finish the next panel's columns and QR-factor them.
+            upd_l = (c[:, :b_next]
+                     - backend.gemm(wprod, v2[:b_next].T)).astype(a.dtype)
+            packed_n, tau_n, pnl_n = _factor_panel(upd_l)
+            pnl_next = (packed_n, pnl_n)
+            a = a.at[nxt:, nxt : nxt + b_next].set(packed_n)
+            # TU_right: remaining columns — independent of PU(k+1).
+            if nxt + b_next < n:
+                upd_r = (c[:, b_next:]
+                         - backend.gemm(wprod, v2[b_next:].T)).astype(a.dtype)
+                a = a.at[nxt:, nxt + b_next :].set(upd_r)
+        else:
+            a = a.at[nxt:, nxt:].set(
+                (c - backend.gemm(wprod, v2.T)).astype(a.dtype))
+    return a

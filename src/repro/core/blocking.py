@@ -1,0 +1,54 @@
+"""Blocking / partitioning helpers — the FLAME ``FLA_Part_2x2`` analogues.
+
+The paper's general framework (Listing 2/3) walks a matrix in steps of ``b``
+columns per iteration.  In JAX we realise the same traversal as a Python-level
+loop with *static* slice bounds (``k`` is a Python int), so every iteration
+lowers to static-shape ops and the whole factorization unrolls under ``jit``
+— the direct analogue of the FLAME repartitioning.
+"""
+from __future__ import annotations
+
+from typing import Iterator, NamedTuple
+
+
+class PanelStep(NamedTuple):
+    """One iteration of the DMF skeleton (paper Listing 3).
+
+    Attributes:
+      k:      start column/row of the current panel (``A11`` origin).
+      bk:     width of the current panel (== b except possibly the last step).
+      k_next: start of the *next* panel (== k + bk).
+      b_next: width of the next panel (0 on the last step).
+      last:   True on the final iteration.
+    """
+
+    k: int
+    bk: int
+    k_next: int
+    b_next: int
+    last: bool
+
+
+def panel_steps(n: int, b: int) -> Iterator[PanelStep]:
+    """Iterate the panel schedule for an ``n``-wide traversal with block ``b``."""
+    if b <= 0:
+        raise ValueError(f"block size must be positive, got {b}")
+    ks = list(range(0, n, b))
+    for i, k in enumerate(ks):
+        bk = min(b, n - k)
+        k_next = k + bk
+        b_next = min(b, n - k_next) if k_next < n else 0
+        yield PanelStep(k, bk, k_next, b_next, i == len(ks) - 1)
+
+
+def num_panels(n: int, b: int) -> int:
+    return (n + b - 1) // b
+
+
+def split_trailing(k_next: int, b_next: int, n: int) -> tuple[slice, slice]:
+    """Split the trailing columns ``[k_next, n)`` into (TU^L, TU^R).
+
+    TU^L covers exactly the columns of the next panel — the static look-ahead
+    split of paper §4: ``TU_k -> (TU_k^L | TU_k^R)``.
+    """
+    return slice(k_next, k_next + b_next), slice(k_next + b_next, n)

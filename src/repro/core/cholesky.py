@@ -1,0 +1,135 @@
+"""Cholesky factorization (lower, A = L·Lᵀ) — all scheduling variants.
+
+Same variant family as :mod:`repro.core.lu` (the paper's framework §3.1
+covers Cholesky explicitly): unblocked, blocked right-looking (MTB), tiled
+(RTM), and static look-ahead (LA / LA_MB via ``fused_pu``).
+
+Cholesky needs no pivoting, which makes it the cleanest illustration of the
+look-ahead restructuring: ``PU(k+1)`` (update + factor the next block column)
+and ``TU_right(k)`` share only the read-only ``L21`` of panel k.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.backend import Backend, JNP_BACKEND
+from repro.core.blocking import panel_steps, split_trailing
+
+__all__ = [
+    "cholesky_unblocked",
+    "cholesky_panel",
+    "cholesky_blocked",
+    "cholesky_tiled",
+    "cholesky_lookahead",
+]
+
+
+def cholesky_unblocked(a: jnp.ndarray) -> jnp.ndarray:
+    """Unblocked right-looking Cholesky of a (nb × nb) SPD block (lower)."""
+    nb = a.shape[0]
+    rows = jnp.arange(nb)
+
+    def body(j, a):
+        d = jnp.sqrt(a[j, j])
+        col = jnp.where(rows > j, a[:, j] / d, 0.0).astype(a.dtype)
+        a = a - jnp.outer(col, col)
+        a = a.at[:, j].set(jnp.where(rows > j, col, a[:, j])).at[j, j].set(d)
+        return a
+
+    a = lax.fori_loop(0, nb, body, a)
+    return jnp.tril(a)
+
+
+def cholesky_panel(panel: jnp.ndarray, nb: int,
+                   backend: Backend = JNP_BACKEND) -> jnp.ndarray:
+    """PF for Cholesky: factor the (m × nb) panel (diag block + below)."""
+    l11 = cholesky_unblocked(panel[:nb])
+    out = panel.at[:nb].set(l11)
+    if panel.shape[0] > nb:
+        l21 = backend.trsm(l11, panel[nb:], side="right", lower=True, trans=True)
+        out = out.at[nb:].set(l21)
+    return out
+
+
+def cholesky_blocked(a: jnp.ndarray, b: int = 128, *,
+                     backend: Backend = JNP_BACKEND) -> jnp.ndarray:
+    """Right-looking blocked Cholesky — the MTB analogue."""
+    n = a.shape[0]
+    for st in panel_steps(n, b):
+        k, bk, k_next = st.k, st.bk, st.k_next
+        # PF(k)
+        a = a.at[k:, k : k + bk].set(
+            cholesky_panel(a[k:, k : k + bk], bk, backend))
+        # TU(k): A22 -= L21 · L21ᵀ  (full trailing, one op, implicit barrier)
+        if k_next < n:
+            l21 = a[k_next:, k : k + bk]
+            a = a.at[k_next:, k_next:].set(
+                backend.update(a[k_next:, k_next:], l21, l21.T))
+    return jnp.tril(a)
+
+
+def cholesky_tiled(a: jnp.ndarray, b: int = 128, *,
+                   backend: Backend = JNP_BACKEND) -> jnp.ndarray:
+    """RTM analogue: trailing update fragmented into b×b tile tasks."""
+    n = a.shape[0]
+    for st in panel_steps(n, b):
+        k, bk, k_next = st.k, st.bk, st.k_next
+        a = a.at[k:, k : k + bk].set(
+            cholesky_panel(a[k:, k : k + bk], bk, backend))
+        for j in range(k_next, n, b):
+            bj = min(b, n - j)
+            lj = a[j : j + bj, k : k + bk]
+            for i in range(j, n, b):  # lower triangle only
+                bi = min(b, n - i)
+                li = a[i : i + bi, k : k + bk]
+                a = a.at[i : i + bi, j : j + bj].set(
+                    backend.update(a[i : i + bi, j : j + bj], li, lj.T))
+    return jnp.tril(a)
+
+
+def cholesky_lookahead(
+    a: jnp.ndarray,
+    b: int = 128,
+    *,
+    backend: Backend = JNP_BACKEND,
+    fused_pu: Optional[Callable] = None,
+) -> jnp.ndarray:
+    """Cholesky with static look-ahead (paper Listing 5 restructuring).
+
+    ``fused_pu``: optional fused kernel ``(l21_top, l21_rest, panel) ->
+    factored_panel`` realizing GEMM-update + PF in one VMEM-resident call.
+    """
+    n = a.shape[0]
+    steps = list(panel_steps(n, b))
+
+    # PF(0)
+    st0 = steps[0]
+    a = a.at[:, : st0.bk].set(cholesky_panel(a[:, : st0.bk], st0.bk, backend))
+
+    for st in steps:
+        k, bk, k_next = st.k, st.bk, st.k_next
+        if k_next >= n:
+            break
+        lcols, rcols = split_trailing(k_next, st.b_next, n)
+        l21 = a[k_next:, k : k + bk]          # rows below panel k (read-only)
+
+        # --- PU(k+1): update next block column, then factor it ----------
+        if st.b_next > 0:
+            lrow_next = a[lcols, k : k + bk]  # L rows of the next block col
+            if fused_pu is not None:
+                panel_next = fused_pu(lrow_next, l21, a[k_next:, lcols])
+            else:
+                upd = backend.update(a[k_next:, lcols], l21, lrow_next.T)
+                panel_next = cholesky_panel(upd, st.b_next, backend)
+            a = a.at[k_next:, lcols].set(panel_next)
+
+        # --- TU_right(k): independent of PU(k+1) ------------------------
+        if rcols.start < n:
+            lrow_r = a[rcols, k : k + bk]
+            a = a.at[rcols.start :, rcols].set(
+                backend.update(a[rcols.start :, rcols],
+                               a[rcols.start :, k : k + bk], lrow_r.T))
+    return jnp.tril(a)

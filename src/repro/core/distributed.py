@@ -1,0 +1,346 @@
+"""Distributed DMFs over a pod mesh — block-cyclic + look-ahead (shard_map).
+
+This is the paper's §4 insight applied at pod scale (DESIGN.md §2/§5): the
+panel factorization is the *serial* resource; at 256 chips the trailing
+update per chip shrinks by 256× while the panel cost is unchanged, so hiding
+the panel (and its broadcast) behind the bulk update is worth far more than
+on the paper's 8 cores.
+
+Layout: 1-D **column block-cyclic** over one mesh axis (ScaLAPACK style).
+Column block ``j`` (width b) lives on device ``j % nd``, local slot
+``j // nd``.  Every device owns *full columns*, so LU partial pivoting stays
+local to the panel and the pivot sequence is **identical to single-device
+GETRF** — the numerics-preserving property the paper contrasts with RTM
+incremental pivoting (§3.3).
+
+Panel handling is *replicated factorization*: the (updated, unfactored)
+panel is broadcast (masked ``psum``) and factored redundantly on every
+device.  This trades one tiny replicated O(m·b²) computation for a second
+broadcast + pivot exchange — the latency-optimal choice at small b.
+
+Scheduling variants:
+
+* ``lookahead=False`` (MTB analogue): broadcast panel k → factor → update
+  all local trailing blocks → ``optimization_barrier`` (the fork–join BLAS
+  boundary) → next iteration.
+* ``lookahead=True`` (LA): the owner updates its ``k+1`` block FIRST and the
+  broadcast (psum) of the next panel is issued *before* the bulk trailing
+  update; the two have no data dependence, so XLA's latency-hiding scheduler
+  overlaps the collective with the local GEMMs — the pod-scale analogue of
+  running ``PU(k+1)`` in a parallel section next to ``TU_right(k)``.
+
+The per-block ``lax.cond(g > k, …)`` guards give true SPMD-uniform code with
+no wasted trailing FLOPs on already-factored blocks.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.cholesky import cholesky_panel
+from repro.core.lu import laswp, lu_unblocked
+from repro.core.qr import _Panel, build_t_matrix, qr_unblocked, unpack_v
+
+def _acc_dt(dtype):
+    """f32 accumulation for low-precision inputs, native otherwise."""
+    return jnp.float32 if dtype in (jnp.bfloat16, jnp.float16) else dtype
+
+
+__all__ = [
+    "to_block_cyclic",
+    "from_block_cyclic",
+    "lu_block_cyclic",
+    "cholesky_block_cyclic",
+    "qr_block_cyclic",
+]
+
+
+# ---------------------------------------------------------------------------
+# Layout conversion
+# ---------------------------------------------------------------------------
+def _cyclic_perm(n: int, nd: int, b: int) -> np.ndarray:
+    nblocks = n // b
+    perm = []
+    for p in range(nd):
+        for lj in range(nblocks // nd):
+            g = lj * nd + p
+            perm.extend(range(g * b, (g + 1) * b))
+    return np.asarray(perm)
+
+
+def to_block_cyclic(a: jnp.ndarray, nd: int, b: int) -> jnp.ndarray:
+    """(n, n) → (nd, n, n/nd): device-major column block-cyclic layout."""
+    n = a.shape[1]
+    if n % (b * nd):
+        raise ValueError(f"need n % (b·nd) == 0, got n={n}, b={b}, nd={nd}")
+    perm = _cyclic_perm(n, nd, b)
+    return a[:, perm].reshape(a.shape[0], nd, n // nd).transpose(1, 0, 2)
+
+
+def from_block_cyclic(a_cyc: jnp.ndarray, b: int) -> jnp.ndarray:
+    """Inverse of :func:`to_block_cyclic`."""
+    nd, m, l = a_cyc.shape
+    n = nd * l
+    flat = a_cyc.transpose(1, 0, 2).reshape(m, n)
+    perm = _cyclic_perm(n, nd, b)
+    inv = np.argsort(perm)
+    return flat[:, inv]
+
+
+def _bcast_from(val: jnp.ndarray, me, owner: int, axis: str) -> jnp.ndarray:
+    """Broadcast ``val`` from the owner device (masked psum)."""
+    contrib = jnp.where(me == owner, val, jnp.zeros_like(val))
+    return lax.psum(contrib, axis)
+
+
+# ---------------------------------------------------------------------------
+# LU with partial pivoting
+# ---------------------------------------------------------------------------
+def lu_block_cyclic(a: jnp.ndarray, b: int, mesh: Mesh, *,
+                    axis: str = "model", lookahead: bool = True):
+    """Distributed LUpp.  Returns (packed LU (n, n), ipiv (n,)).
+
+    ``a`` is the replicated (n, n) input; the function converts to/from the
+    block-cyclic layout internally.  Pivots match single-device GETRF.
+    """
+    n = a.shape[0]
+    nd = mesh.shape[axis]
+    nblocks = n // b
+    lb = nblocks // nd                              # local blocks per device
+    a_cyc = to_block_cyclic(a, nd, b)
+
+    def step_update(al, packed, k):
+        """TRSM + GEMM for one local block (factory for lax.cond)."""
+        l11 = packed[:b]
+        l21 = packed[b:]
+
+        def make(lj):
+            def do(colblk):
+                u12 = lax.linalg.triangular_solve(
+                    l11, colblk[k * b : (k + 1) * b],
+                    left_side=True, lower=True, unit_diagonal=True)
+                upd = colblk[(k + 1) * b :] - jnp.dot(
+                    l21, u12, preferred_element_type=_acc_dt(colblk.dtype)
+                ).astype(colblk.dtype)
+                return (colblk.at[k * b : (k + 1) * b].set(u12)
+                        .at[(k + 1) * b :].set(upd))
+            return do
+        return make
+
+    def local_fn(a_loc):
+        al = a_loc[0]                                # (n, L)
+        me = lax.axis_index(axis)
+        ipiv = jnp.zeros((n,), jnp.int32)
+
+        # initial broadcast: panel 0 (owner 0), full rows
+        panel = _bcast_from(al[:, 0:b], me, 0, axis)
+
+        for k in range(nblocks):
+            owner, lk = k % nd, k // nd
+            # ---- replicated PF on the broadcast panel -------------------
+            packed, piv = lu_unblocked(panel[k * b :])
+            ipiv = ipiv.at[k * b : (k + 1) * b].set(piv + k * b)
+            # ---- row interchanges on all local columns ------------------
+            al = laswp(al, piv, offset=k * b)
+            # ---- owner stores the factored panel ------------------------
+            mine = al[:, lk * b : (lk + 1) * b].at[k * b :].set(packed)
+            al = al.at[:, lk * b : (lk + 1) * b].set(
+                jnp.where(me == owner, mine, al[:, lk * b : (lk + 1) * b]))
+
+            if k + 1 >= nblocks:
+                break
+            upd_of = step_update(al, packed, k)
+
+            if lookahead:
+                # ---- PU(k+1): update block k+1 & issue its broadcast ----
+                for lj in range(lb):
+                    g = lj * nd + me
+                    blk = al[:, lj * b : (lj + 1) * b]
+                    blk = lax.cond(g == k + 1, upd_of(lj), lambda c: c, blk)
+                    al = al.at[:, lj * b : (lj + 1) * b].set(blk)
+                    contrib = jnp.where(g == k + 1, blk, jnp.zeros_like(blk))
+                    if lj == 0:
+                        nxt = contrib
+                    else:
+                        nxt = nxt + contrib
+                panel = lax.psum(nxt, axis)          # async; overlaps below
+                # ---- TU_right(k): bulk local updates (g > k+1) ----------
+                for lj in range(lb):
+                    g = lj * nd + me
+                    blk = al[:, lj * b : (lj + 1) * b]
+                    blk = lax.cond(g > k + 1, upd_of(lj), lambda c: c, blk)
+                    al = al.at[:, lj * b : (lj + 1) * b].set(blk)
+            else:
+                # ---- MTB: update everything, then barrier, then bcast ---
+                for lj in range(lb):
+                    g = lj * nd + me
+                    blk = al[:, lj * b : (lj + 1) * b]
+                    blk = lax.cond(g > k, upd_of(lj), lambda c: c, blk)
+                    al = al.at[:, lj * b : (lj + 1) * b].set(blk)
+                (al,) = lax.optimization_barrier((al,))  # fork–join boundary
+                nlk = (k + 1) // nd
+                panel = _bcast_from(al[:, nlk * b : (nlk + 1) * b],
+                                    me, (k + 1) % nd, axis)
+
+        return al[None], ipiv
+
+    run = jax.shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(P(axis, None, None),),
+        out_specs=(P(axis, None, None), P()))
+    out_cyc, ipiv = run(a_cyc)
+    return from_block_cyclic(out_cyc, b), ipiv
+
+
+# ---------------------------------------------------------------------------
+# Cholesky
+# ---------------------------------------------------------------------------
+def cholesky_block_cyclic(a: jnp.ndarray, b: int, mesh: Mesh, *,
+                          axis: str = "model", lookahead: bool = True):
+    """Distributed Cholesky (lower).  Returns L (n, n)."""
+    n = a.shape[0]
+    nd = mesh.shape[axis]
+    nblocks = n // b
+    lb = nblocks // nd
+    a_cyc = to_block_cyclic(a, nd, b)
+
+    def local_fn(a_loc):
+        al = a_loc[0]
+        me = lax.axis_index(axis)
+        panel = _bcast_from(al[:, 0:b], me, 0, axis)
+
+        for k in range(nblocks):
+            owner, lk = k % nd, k // nd
+            packed = cholesky_panel(panel[k * b :], b)   # replicated PF
+            mine = al[:, lk * b : (lk + 1) * b].at[k * b :].set(packed)
+            al = al.at[:, lk * b : (lk + 1) * b].set(
+                jnp.where(me == owner, mine, al[:, lk * b : (lk + 1) * b]))
+            if k + 1 >= nblocks:
+                break
+            l21 = packed[b:]                             # rows (k+1)b:
+
+            def upd(lj, g, colblk):
+                lrow = lax.dynamic_slice_in_dim(
+                    l21, (g - k - 1) * b, b, axis=0)      # (b, b) of L
+                new = colblk[(k + 1) * b :] - jnp.dot(
+                    l21, lrow.T, preferred_element_type=_acc_dt(colblk.dtype)
+                ).astype(colblk.dtype)
+                return colblk.at[(k + 1) * b :].set(new)
+
+            if lookahead:
+                for lj in range(lb):
+                    g = lj * nd + me
+                    blk = al[:, lj * b : (lj + 1) * b]
+                    blk = lax.cond(g == k + 1,
+                                   lambda c, g=g, lj=lj: upd(lj, g, c),
+                                   lambda c: c, blk)
+                    al = al.at[:, lj * b : (lj + 1) * b].set(blk)
+                    contrib = jnp.where(g == k + 1, blk, jnp.zeros_like(blk))
+                    nxt = contrib if lj == 0 else nxt + contrib
+                panel = lax.psum(nxt, axis)
+                for lj in range(lb):
+                    g = lj * nd + me
+                    blk = al[:, lj * b : (lj + 1) * b]
+                    blk = lax.cond(g > k + 1,
+                                   lambda c, g=g, lj=lj: upd(lj, g, c),
+                                   lambda c: c, blk)
+                    al = al.at[:, lj * b : (lj + 1) * b].set(blk)
+            else:
+                for lj in range(lb):
+                    g = lj * nd + me
+                    blk = al[:, lj * b : (lj + 1) * b]
+                    blk = lax.cond(g > k,
+                                   lambda c, g=g, lj=lj: upd(lj, g, c),
+                                   lambda c: c, blk)
+                    al = al.at[:, lj * b : (lj + 1) * b].set(blk)
+                (al,) = lax.optimization_barrier((al,))
+                nlk = (k + 1) // nd
+                panel = _bcast_from(al[:, nlk * b : (nlk + 1) * b],
+                                    me, (k + 1) % nd, axis)
+        return al[None]
+
+    run = jax.shard_map(local_fn, mesh=mesh,
+                        in_specs=(P(axis, None, None),),
+                        out_specs=P(axis, None, None))
+    out = from_block_cyclic(run(a_cyc), b)
+    # zero the upper-triangle junk written by the uniform row updates
+    return jnp.tril(out)
+
+
+# ---------------------------------------------------------------------------
+# QR (Householder, compact WY)
+# ---------------------------------------------------------------------------
+def qr_block_cyclic(a: jnp.ndarray, b: int, mesh: Mesh, *,
+                    axis: str = "model", lookahead: bool = True):
+    """Distributed GEQRF.  Returns (packed (n, n), tau (n,))."""
+    n = a.shape[0]
+    nd = mesh.shape[axis]
+    nblocks = n // b
+    lb = nblocks // nd
+    a_cyc = to_block_cyclic(a, nd, b)
+
+    def local_fn(a_loc):
+        al = a_loc[0]
+        me = lax.axis_index(axis)
+        taus = jnp.zeros((n,), a.dtype)
+        panel = _bcast_from(al[:, 0:b], me, 0, axis)
+
+        for k in range(nblocks):
+            owner, lk = k % nd, k // nd
+            packed, tau = qr_unblocked(panel[k * b :])   # replicated PF
+            v = unpack_v(packed, b)
+            t = build_t_matrix(v, tau)
+            taus = taus.at[k * b : (k + 1) * b].set(tau)
+            mine = al[:, lk * b : (lk + 1) * b].at[k * b :].set(packed)
+            al = al.at[:, lk * b : (lk + 1) * b].set(
+                jnp.where(me == owner, mine, al[:, lk * b : (lk + 1) * b]))
+            if k + 1 >= nblocks:
+                break
+
+            def upd(colblk):
+                c = colblk[k * b :]
+                w = jnp.dot(t.T, jnp.dot(v.T, c,
+                                         preferred_element_type=_acc_dt(c.dtype))
+                            .astype(c.dtype))
+                new = c - jnp.dot(v, w.astype(c.dtype),
+                                  preferred_element_type=_acc_dt(c.dtype)
+                                  ).astype(c.dtype)
+                return colblk.at[k * b :].set(new.astype(colblk.dtype))
+
+            if lookahead:
+                for lj in range(lb):
+                    g = lj * nd + me
+                    blk = al[:, lj * b : (lj + 1) * b]
+                    blk = lax.cond(g == k + 1, upd, lambda c: c, blk)
+                    al = al.at[:, lj * b : (lj + 1) * b].set(blk)
+                    contrib = jnp.where(g == k + 1, blk, jnp.zeros_like(blk))
+                    nxt = contrib if lj == 0 else nxt + contrib
+                panel = lax.psum(nxt, axis)
+                for lj in range(lb):
+                    g = lj * nd + me
+                    blk = al[:, lj * b : (lj + 1) * b]
+                    blk = lax.cond(g > k + 1, upd, lambda c: c, blk)
+                    al = al.at[:, lj * b : (lj + 1) * b].set(blk)
+            else:
+                for lj in range(lb):
+                    g = lj * nd + me
+                    blk = al[:, lj * b : (lj + 1) * b]
+                    blk = lax.cond(g > k, upd, lambda c: c, blk)
+                    al = al.at[:, lj * b : (lj + 1) * b].set(blk)
+                (al,) = lax.optimization_barrier((al,))
+                nlk = (k + 1) // nd
+                panel = _bcast_from(al[:, nlk * b : (nlk + 1) * b],
+                                    me, (k + 1) % nd, axis)
+        return al[None], taus
+
+    run = jax.shard_map(local_fn, mesh=mesh,
+                        in_specs=(P(axis, None, None),),
+                        out_specs=(P(axis, None, None), P()))
+    out_cyc, taus = run(a_cyc)
+    return from_block_cyclic(out_cyc, b), taus

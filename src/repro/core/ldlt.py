@@ -1,0 +1,115 @@
+"""LDLᵀ factorization (symmetric indefinite, no pivoting) — variant set.
+
+``A = L·D·Lᵀ`` with unit-lower L and diagonal D.  The paper lists LDLᵀ among
+the DMFs its framework accommodates (§3.1).  We implement the unpivoted
+variant (valid for quasi-definite / diagonally dominant symmetric matrices);
+Bunch–Kaufman pivoting is out of scope and noted in DESIGN.md — the paper
+itself makes the analogous caveat for LUpp vs incremental pivoting (§3.3).
+
+Packed format: L strictly below the diagonal (unit diagonal implicit), D on
+the diagonal.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.backend import Backend, JNP_BACKEND
+from repro.core.blocking import panel_steps, split_trailing
+
+__all__ = ["ldlt_unblocked", "ldlt_panel", "ldlt_blocked", "ldlt_lookahead",
+           "unpack_ldlt"]
+
+
+def ldlt_unblocked(a: jnp.ndarray) -> jnp.ndarray:
+    """Unblocked right-looking LDLᵀ of an (nb × nb) symmetric block."""
+    nb = a.shape[0]
+    rows = jnp.arange(nb)
+
+    def body(j, a):
+        d = a[j, j]
+        l = jnp.where(rows > j, a[:, j] / d, 0.0).astype(a.dtype)
+        a = a - jnp.outer(l, l) * d
+        a = a.at[:, j].set(jnp.where(rows > j, l, a[:, j])).at[j, j].set(d)
+        return a
+
+    a = lax.fori_loop(0, nb, body, a)
+    return jnp.tril(a)
+
+
+def ldlt_panel(panel: jnp.ndarray, nb: int,
+               backend: Backend = JNP_BACKEND) -> jnp.ndarray:
+    """PF for LDLᵀ: factor diag block, then ``L21 = A21·L11⁻ᵀ·D⁻¹``."""
+    fac = ldlt_unblocked(panel[:nb])
+    out = panel.at[:nb].set(fac)
+    if panel.shape[0] > nb:
+        x = backend.trsm(fac, panel[nb:], side="right", lower=True,
+                         trans=True, unit_diagonal=True)
+        d = jnp.diagonal(fac)
+        out = out.at[nb:].set((x / d[None, :]).astype(panel.dtype))
+    return out
+
+
+def ldlt_blocked(a: jnp.ndarray, b: int = 128, *,
+                 backend: Backend = JNP_BACKEND) -> jnp.ndarray:
+    """Blocked right-looking LDLᵀ — MTB analogue."""
+    n = a.shape[0]
+    for st in panel_steps(n, b):
+        k, bk, k_next = st.k, st.bk, st.k_next
+        a = a.at[k:, k : k + bk].set(ldlt_panel(a[k:, k : k + bk], bk, backend))
+        if k_next < n:
+            l21 = a[k_next:, k : k + bk]
+            d = jnp.diagonal(a[k : k + bk, k : k + bk])
+            w = (l21 * d[None, :]).astype(a.dtype)          # L21·D
+            a = a.at[k_next:, k_next:].set(
+                backend.update(a[k_next:, k_next:], l21, w.T))
+    return jnp.tril(a)
+
+
+def ldlt_lookahead(
+    a: jnp.ndarray,
+    b: int = 128,
+    *,
+    backend: Backend = JNP_BACKEND,
+    fused_pu: Optional[Callable] = None,
+) -> jnp.ndarray:
+    """LDLᵀ with static look-ahead — same restructuring as Cholesky."""
+    n = a.shape[0]
+    steps = list(panel_steps(n, b))
+    st0 = steps[0]
+    a = a.at[:, : st0.bk].set(ldlt_panel(a[:, : st0.bk], st0.bk, backend))
+
+    for st in steps:
+        k, bk, k_next = st.k, st.bk, st.k_next
+        if k_next >= n:
+            break
+        lcols, rcols = split_trailing(k_next, st.b_next, n)
+        l21 = a[k_next:, k : k + bk]
+        d = jnp.diagonal(a[k : k + bk, k : k + bk])
+
+        if st.b_next > 0:
+            lrow = a[lcols, k : k + bk]
+            w = (lrow * d[None, :]).astype(a.dtype)
+            upd = backend.update(a[k_next:, lcols], l21, w.T)
+            if fused_pu is not None:
+                panel_next = fused_pu(upd, st.b_next)
+            else:
+                panel_next = ldlt_panel(upd, st.b_next, backend)
+            a = a.at[k_next:, lcols].set(panel_next)
+
+        if rcols.start < n:
+            lrow_r = a[rcols, k : k + bk]
+            w = (lrow_r * d[None, :]).astype(a.dtype)
+            a = a.at[rcols.start :, rcols].set(
+                backend.update(a[rcols.start :, rcols],
+                               a[rcols.start :, k : k + bk], w.T))
+    return jnp.tril(a)
+
+
+def unpack_ldlt(packed: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Split packed LDLᵀ into (unit-lower L, diagonal d)."""
+    n = packed.shape[0]
+    l = jnp.tril(packed, -1) + jnp.eye(n, dtype=packed.dtype)
+    return l, jnp.diagonal(packed)

@@ -1,0 +1,82 @@
+"""Variant registry + the static look-ahead scheduling contract.
+
+The paper evaluates five parallelization strategies per DMF (§6.4):
+``MTB`` (fork–join multithreaded BLAS), ``RTM`` (task-runtime, fragmented
+trailing update), ``LA`` (static look-ahead), and ``LA_MB_*`` (look-ahead +
+malleable BLAS).  This module exposes the same taxonomy programmatically so
+benchmarks, tests, and the optimizer can select a scheduling variant by name:
+
+    fn = get_variant("lu", "la")          # -> lu_lookahead
+    fn = get_variant("qr", "mtb")         # -> qr_blocked
+
+On TPU the variants differ in *dataflow structure* rather than thread
+mapping (DESIGN.md §2): MTB = one barrier-separated panel/update pair per
+iteration; RTM = fragmented per-tile ops; LA = panel-update of iteration k+1
+made data-independent of the bulk trailing update of iteration k; LA_MB = LA
+plus the fused VMEM-resident panel-update kernel from
+``repro.kernels.fused_panel_update``.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+from repro.core import band_reduction, cholesky, gauss_jordan, ldlt, lu, qr
+
+# variant name -> per-DMF callable
+_REGISTRY: Dict[str, Dict[str, Callable]] = {
+    "lu": {
+        "mtb": lu.lu_blocked,
+        "rtm": lu.lu_tiled,
+        "la": lu.lu_lookahead,
+    },
+    "cholesky": {
+        "mtb": cholesky.cholesky_blocked,
+        "rtm": cholesky.cholesky_tiled,
+        "la": cholesky.cholesky_lookahead,
+    },
+    "qr": {
+        "mtb": qr.qr_blocked,
+        "rtm": qr.qr_tiled,
+        "la": qr.qr_lookahead,
+    },
+    "ldlt": {
+        "mtb": ldlt.ldlt_blocked,
+        "la": ldlt.ldlt_lookahead,
+    },
+    "gauss_jordan": {
+        "mtb": gauss_jordan.gj_inverse_blocked,
+        "la": gauss_jordan.gj_inverse_lookahead,
+    },
+    "band_reduction": {
+        "mtb": band_reduction.band_reduction_blocked,
+        "la": band_reduction.band_reduction_lookahead,
+    },
+}
+
+VARIANTS = ("mtb", "rtm", "la", "la_mb")
+FACTORIZATIONS = tuple(_REGISTRY)
+
+
+def get_variant(dmf: str, variant: str) -> Callable:
+    """Resolve (factorization, scheduling-variant) to a callable.
+
+    ``la_mb`` resolves to the look-ahead driver with the fused Pallas
+    panel-update kernel plugged in (falls back to ``la`` for DMFs without a
+    fused kernel).
+    """
+    if dmf not in _REGISTRY:
+        raise KeyError(f"unknown DMF {dmf!r}; expected one of {FACTORIZATIONS}")
+    table = _REGISTRY[dmf]
+    if variant == "la_mb":
+        from repro.kernels import ops as kops
+
+        la = table["la"]
+        fused = kops.FUSED_PU.get(dmf)
+        if fused is None:
+            return la
+        return lambda a, b=128, **kw: la(a, b, fused_pu=fused, **kw)
+    if variant not in table:
+        raise KeyError(
+            f"variant {variant!r} not available for {dmf!r}; "
+            f"have {tuple(table)} (+ 'la_mb')")
+    return table[variant]

@@ -1,0 +1,277 @@
+"""LU factorization with partial pivoting (LUpp) — all scheduling variants.
+
+Variants mirror the paper's experimental lines (§6.4):
+
+* :func:`lu_unblocked`            — GETF2 analogue; also the PF building block.
+* :func:`lu_blocked`              — right-looking blocked GETRF; the **MTB**
+  analogue (panel, barrier, trailing update as separate ops).
+* :func:`lu_tiled`                — **RTM** analogue: the trailing update is
+  fragmented into per-panel (and per-tile) tasks, mirroring Listing 4.
+* :func:`lu_lookahead`            — **LA**: static look-ahead (Listing 5).
+  ``TU_k^L + PF_{k+1}`` (= ``PU(k+1)``) is made *data-independent* of
+  ``TU_k^R`` within each iteration so the scheduler can overlap them — the
+  TPU analogue of the paper's two ``parallel sections``.
+* ``lu_lookahead(fused_pu=...)``  — **LA_MB**: look-ahead plus a fused
+  VMEM-resident panel-update kernel (the malleable-BLAS analogue; see
+  ``repro/kernels/fused_panel_update.py``).
+
+Pivoting follows GETRF semantics: ``ipiv[j]`` (0-based, global) is the row
+swapped with row ``j`` at step ``j``; row interchanges apply to the full row,
+so ``P·A = L·U`` exactly — the numerics are unchanged by look-ahead, which is
+the property the paper highlights against RTM incremental pivoting (§3.3).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.backend import Backend, JNP_BACKEND
+from repro.core.blocking import panel_steps, split_trailing
+
+__all__ = [
+    "lu_unblocked",
+    "lu_blocked",
+    "lu_tiled",
+    "lu_lookahead",
+    "laswp",
+    "permutation_from_pivots",
+    "unpack_lu",
+]
+
+
+# ---------------------------------------------------------------------------
+# Unblocked panel factorization (PF) — GETF2 with masked full-width updates.
+# ---------------------------------------------------------------------------
+def lu_unblocked(panel: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Factor an (m × nb) panel in place: returns (packed LU, piv).
+
+    ``piv`` is panel-relative: at step j, rows ``j`` and ``piv[j]`` (>= j)
+    were interchanged.  Uses masked rank-1 updates so all shapes are static
+    inside the ``fori_loop`` (the j-th iteration touches only rows/cols > j).
+    """
+    m, nb = panel.shape
+    steps = min(m, nb)
+    rows = jnp.arange(m)
+    cols = jnp.arange(nb)
+
+    def body(j, carry):
+        a, piv = carry
+        # --- pivot search over rows >= j of column j --------------------
+        col = jnp.abs(a[:, j])
+        col = jnp.where(rows < j, -jnp.inf, col)
+        p = jnp.argmax(col).astype(jnp.int32)
+        piv = piv.at[j].set(p)
+        # --- row interchange j <-> p ------------------------------------
+        rj, rp = a[j], a[p]
+        a = a.at[j].set(rp).at[p].set(rj)
+        # --- scale L column and rank-1 update ---------------------------
+        pivval = a[j, j]
+        l = jnp.where(rows > j, a[:, j] / pivval, 0.0).astype(a.dtype)
+        urow = jnp.where(cols > j, a[j], 0.0).astype(a.dtype)
+        a = a - jnp.outer(l, urow)
+        a = a.at[:, j].set(jnp.where(rows > j, l, a[:, j]))
+        return a, piv
+
+    piv0 = jnp.zeros((steps,), jnp.int32)
+    out, piv = lax.fori_loop(0, steps, body, (panel, piv0))
+    return out, piv
+
+
+# ---------------------------------------------------------------------------
+# Row interchanges (LASWP analogue).
+# ---------------------------------------------------------------------------
+def laswp(a: jnp.ndarray, piv: jnp.ndarray, offset: int = 0) -> jnp.ndarray:
+    """Apply the swap sequence ``row offset+j <-> row offset+piv[j]``."""
+
+    def body(j, a):
+        p = piv[j] + offset
+        q = j + offset
+        rq, rp = a[q], a[p]
+        return a.at[q].set(rp).at[p].set(rq)
+
+    return lax.fori_loop(0, piv.shape[0], body, a)
+
+
+def permutation_from_pivots(piv: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Row-permutation vector ``perm`` such that ``A[perm] == P·A``."""
+
+    def body(j, perm):
+        p = piv[j]
+        pj, pp = perm[j], perm[p]
+        return perm.at[j].set(pp).at[p].set(pj)
+
+    return lax.fori_loop(0, piv.shape[0], body, jnp.arange(n))
+
+
+def unpack_lu(lu: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Split packed LU into (unit-lower L, upper U)."""
+    l = jnp.tril(lu, -1) + jnp.eye(lu.shape[0], dtype=lu.dtype)
+    u = jnp.triu(lu)
+    return l, u
+
+
+# ---------------------------------------------------------------------------
+# Blocked right-looking GETRF — the MTB analogue.
+# ---------------------------------------------------------------------------
+def lu_blocked(
+    a: jnp.ndarray,
+    b: int = 128,
+    *,
+    backend: Backend = JNP_BACKEND,
+    panel_fn: Optional[Callable] = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Right-looking blocked LUpp.  Returns (packed LU, global ipiv)."""
+    n = a.shape[0]
+    panel_fn = panel_fn or lu_unblocked
+    ipiv = jnp.zeros((min(a.shape),), jnp.int32)
+
+    for st in panel_steps(n, b):
+        k, bk = st.k, st.bk
+        # --- PF(k): factor the panel A[k:, k:k+bk] ----------------------
+        panel, piv = panel_fn(a[k:, k : k + bk])
+        a = a.at[k:, k : k + bk].set(panel)
+        ipiv = ipiv.at[k : k + bk].set(piv + k)
+        # --- apply the interchanges to the left and right of the panel --
+        if k > 0:
+            a = a.at[:, :k].set(laswp(a[:, :k], piv, offset=k))
+        if st.k_next < n:
+            a = a.at[:, st.k_next :].set(laswp(a[:, st.k_next :], piv, offset=k))
+            # --- TU(k): TRSM + GEMM on the whole trailing matrix --------
+            l11 = a[k : k + bk, k : k + bk]
+            u12 = backend.trsm(l11, a[k : k + bk, st.k_next :],
+                               side="left", lower=True, unit_diagonal=True)
+            a = a.at[k : k + bk, st.k_next :].set(u12)
+            l21 = a[st.k_next :, k : k + bk]
+            a = a.at[st.k_next :, st.k_next :].set(
+                backend.update(a[st.k_next :, st.k_next :], l21, u12))
+    return a, ipiv
+
+
+# ---------------------------------------------------------------------------
+# Tiled trailing update — the RTM analogue (Listing 4 fragmentation).
+# ---------------------------------------------------------------------------
+def lu_tiled(
+    a: jnp.ndarray,
+    b: int = 128,
+    *,
+    backend: Backend = JNP_BACKEND,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Blocked LUpp with the trailing update fragmented into per-panel tasks.
+
+    Mirrors the RTM code in paper Listing 4: ``TU_k -> (TU_k^{k+1} | ...)``.
+    Each column panel of the trailing matrix is updated by its own TRSM and a
+    sequence of b×b GEMM "tasks" — the fragmentation that causes the paper's
+    observed RTM overhead on a fast BLAS.
+    """
+    n = a.shape[0]
+    ipiv = jnp.zeros((min(a.shape),), jnp.int32)
+
+    for st in panel_steps(n, b):
+        k, bk = st.k, st.bk
+        panel, piv = lu_unblocked(a[k:, k : k + bk])
+        a = a.at[k:, k : k + bk].set(panel)
+        ipiv = ipiv.at[k : k + bk].set(piv + k)
+        if k > 0:
+            a = a.at[:, :k].set(laswp(a[:, :k], piv, offset=k))
+        if st.k_next >= n:
+            break
+        a = a.at[:, st.k_next :].set(laswp(a[:, st.k_next :], piv, offset=k))
+        l11 = a[k : k + bk, k : k + bk]
+        # one "task" per trailing column panel j (TU_k^j), itself tiled by rows
+        for j in range(st.k_next, n, b):
+            bj = min(b, n - j)
+            u12 = backend.trsm(l11, a[k : k + bk, j : j + bj],
+                               side="left", lower=True, unit_diagonal=True)
+            a = a.at[k : k + bk, j : j + bj].set(u12)
+            for i in range(st.k_next, n, b):
+                bi = min(b, n - i)
+                l21 = a[i : i + bi, k : k + bk]
+                a = a.at[i : i + bi, j : j + bj].set(
+                    backend.update(a[i : i + bi, j : j + bj], l21, u12))
+    return a, ipiv
+
+
+# ---------------------------------------------------------------------------
+# Static look-ahead (paper §4, Listing 5) — the LA / LA_MB variants.
+# ---------------------------------------------------------------------------
+def lu_lookahead(
+    a: jnp.ndarray,
+    b: int = 128,
+    *,
+    backend: Backend = JNP_BACKEND,
+    fused_pu: Optional[Callable] = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """LUpp with static look-ahead.
+
+    Per iteration k (panel k already factored):
+      1. interchanges + TRSM over the whole trailing block row,
+      2. ``PU(k+1)`` : GEMM-update of the *next* panel columns (``TU_k^L``)
+         followed immediately by its factorization (``PF_{k+1}``),
+      3. ``TU_right(k)`` : GEMM-update of the remaining columns (``TU_k^R``).
+
+    Steps 2 and 3 share only *read* dependencies (``L21`` of panel k), so XLA
+    is free to schedule them concurrently — panel factorization leaves the
+    critical path exactly as in the paper's ``parallel sections`` version.
+    The pivots of ``PF_{k+1}`` are applied lazily to the right part at the
+    start of iteration k+1 (row interchanges commute with the row-parallel
+    GEMM update), keeping GETRF numerics bit-for-bit.
+
+    ``fused_pu``: optional fused panel-update kernel ``(l11, l21, a1l, a2l) ->
+    (u12_panel, packed_panel, piv)`` implementing TRSM+GEMM+PF in one
+    VMEM-resident call — the malleable-BLAS (LA_MB) analogue.
+    """
+    n = a.shape[0]
+    ipiv = jnp.zeros((min(a.shape),), jnp.int32)
+    steps = list(panel_steps(n, b))
+
+    # PF(0): factor the first panel before the pipelined loop (Listing 5).
+    st0 = steps[0]
+    panel, piv = lu_unblocked(a[:, : st0.bk])
+    a = a.at[:, : st0.bk].set(panel)
+    ipiv = ipiv.at[: st0.bk].set(piv)
+    pending_piv = piv  # interchanges not yet applied to columns outside panel
+
+    for st in steps:
+        k, bk, k_next = st.k, st.bk, st.k_next
+        lcols, rcols = split_trailing(k_next, st.b_next, n)
+        # --- lazily apply panel-k interchanges outside panel k ----------
+        if k > 0:
+            a = a.at[:, :k].set(laswp(a[:, :k], pending_piv, offset=k))
+        if k_next < n:
+            a = a.at[:, k_next:].set(laswp(a[:, k_next:], pending_piv, offset=k))
+        if k_next >= n:
+            break
+
+        l11 = a[k : k + bk, k : k + bk]
+        l21 = a[k_next:, k : k + bk]
+
+        # --- PU(k+1): TU_k^L + PF_{k+1} ---------------------------------
+        if fused_pu is not None and st.b_next > 0:
+            u12l, panel_next, piv_next = fused_pu(
+                l11, l21, a[k : k + bk, lcols], a[k_next:, lcols])
+            a = a.at[k : k + bk, lcols].set(u12l)
+            a = a.at[k_next:, lcols].set(panel_next)
+        elif st.b_next > 0:
+            u12l = backend.trsm(l11, a[k : k + bk, lcols],
+                                side="left", lower=True, unit_diagonal=True)
+            a = a.at[k : k + bk, lcols].set(u12l)
+            nxt = backend.update(a[k_next:, lcols], l21, u12l)
+            panel_next, piv_next = lu_unblocked(nxt)
+            a = a.at[k_next:, lcols].set(panel_next)
+        if st.b_next > 0:
+            ipiv = ipiv.at[k_next : k_next + st.b_next].set(piv_next + k_next)
+
+        # --- TU_right(k): independent of PU(k+1) ------------------------
+        if rcols.start < n:
+            u12r = backend.trsm(l11, a[k : k + bk, rcols],
+                                side="left", lower=True, unit_diagonal=True)
+            a = a.at[k : k + bk, rcols].set(u12r)
+            a = a.at[k_next:, rcols].set(
+                backend.update(a[k_next:, rcols], l21, u12r))
+
+        pending_piv = piv_next if st.b_next > 0 else None
+    return a, ipiv

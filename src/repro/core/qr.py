@@ -1,0 +1,233 @@
+"""Householder QR factorization (GEQRF semantics) — all scheduling variants.
+
+Compact-WY blocked algorithm: each panel produces Householder vectors ``V``
+(packed below the diagonal, implicit unit diagonal), scalars ``tau``, and the
+upper-triangular ``T`` such that ``Q_panel = I − V·T·Vᵀ``.  The trailing
+update applies ``Qᵀ·C = C − V·Tᵀ·(Vᵀ·C)`` — two large GEMMs, exactly the
+BLAS-3 shape the paper's trailing update relies on.
+
+Variants: :func:`qr_blocked` (MTB), :func:`qr_tiled` (RTM panel-fragmented —
+NOTE the paper's RTM-QR uses *incremental* QR [Gunter & van de Geijn 2005]
+which changes the factor representation; we implement the panel-fragmented
+task version so all variants produce identical GEQRF output, and note the
+difference in DESIGN.md), :func:`qr_lookahead` (LA / LA_MB via ``fused_pu``).
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional
+
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.backend import Backend, JNP_BACKEND
+from repro.core.blocking import panel_steps, split_trailing
+
+__all__ = [
+    "qr_unblocked",
+    "build_t_matrix",
+    "qr_blocked",
+    "qr_tiled",
+    "qr_lookahead",
+    "unpack_v",
+    "apply_qt_blocked",
+    "form_q",
+]
+
+
+def qr_unblocked(panel: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """GEQR2: Householder QR of an (m × nb) panel, m >= nb.
+
+    Returns (packed, tau): ``packed`` holds R on/above the diagonal and the
+    Householder vectors below (implicit v[j]=1); LAPACK conventions
+    ``H_j = I − tau_j v_j v_jᵀ``, ``A = H_1 H_2 … H_nb · R``.
+    """
+    m, nb = panel.shape
+    rows = jnp.arange(m)
+    cols = jnp.arange(nb)
+
+    def body(j, carry):
+        a, tau = carry
+        x = jnp.where(rows >= j, a[:, j], 0.0).astype(a.dtype)
+        alpha = a[j, j]
+        xnorm = jnp.sqrt(jnp.sum(x * x))
+        sign = jnp.where(alpha >= 0, 1.0, -1.0).astype(a.dtype)
+        beta = -sign * xnorm
+        # degenerate column (xnorm == 0): H_j = I, tau = 0
+        safe = xnorm > 0
+        tau_j = jnp.where(safe, (beta - alpha) / beta, 0.0).astype(a.dtype)
+        denom = jnp.where(safe, alpha - beta, 1.0)
+        v = jnp.where(rows > j, x / denom, 0.0).astype(a.dtype)
+        v = v.at[j].set(1.0)
+        v = jnp.where(rows >= j, v, 0.0).astype(a.dtype)
+        # apply H_j to the remaining columns (> j)
+        w = tau_j * (v @ a)                      # (nb,)
+        w = jnp.where(cols > j, w, 0.0).astype(a.dtype)
+        a = a - jnp.outer(v, w)
+        # store beta on the diagonal, v below it
+        newcol = jnp.where(rows > j, v, a[:, j])
+        newcol = newcol.at[j].set(jnp.where(safe, beta, alpha))
+        a = a.at[:, j].set(newcol.astype(a.dtype))
+        tau = tau.at[j].set(tau_j)
+        return a, tau
+
+    tau0 = jnp.zeros((nb,), panel.dtype)
+    a, tau = lax.fori_loop(0, min(m, nb), body, (panel, tau0))
+    return a, tau
+
+
+def unpack_v(packed: jnp.ndarray, nb: int) -> jnp.ndarray:
+    """Extract V (m × nb, unit diagonal) from a packed panel."""
+    m = packed.shape[0]
+    v = jnp.tril(packed[:, :nb], -1)
+    eye = jnp.eye(m, nb, dtype=packed.dtype)
+    return v + eye
+
+
+def build_t_matrix(v: jnp.ndarray, tau: jnp.ndarray) -> jnp.ndarray:
+    """LARFT (forward, columnwise): T s.t. ``H_1…H_nb = I − V·T·Vᵀ``."""
+    nb = tau.shape[0]
+    vtv = v.T @ v                                 # (nb, nb)
+    idx = jnp.arange(nb)
+
+    def body(j, t):
+        colmask = idx < j
+        rhs = jnp.where(colmask, vtv[:, j], 0.0).astype(v.dtype)
+        newcol = -tau[j] * (t @ rhs)
+        newcol = jnp.where(colmask, newcol, 0.0).at[j].set(tau[j])
+        return t.at[:, j].set(newcol.astype(v.dtype))
+
+    t0 = jnp.zeros((nb, nb), v.dtype)
+    return lax.fori_loop(0, nb, body, t0)
+
+
+class _Panel(NamedTuple):
+    v: jnp.ndarray
+    t: jnp.ndarray
+
+
+def _factor_panel(block: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray, _Panel]:
+    packed, tau = qr_unblocked(block)
+    v = unpack_v(packed, block.shape[1])
+    t = build_t_matrix(v, tau)
+    return packed, tau, _Panel(v, t)
+
+
+def apply_qt_blocked(p: _Panel, c: jnp.ndarray,
+                     backend: Backend = JNP_BACKEND) -> jnp.ndarray:
+    """``Qᵀ·C = C − V·Tᵀ·(Vᵀ·C)`` — the BLAS-3 trailing update."""
+    w = backend.gemm(p.v.T, c)                    # (nb, nc)
+    w = backend.gemm(p.t.T, w)
+    return (c - backend.gemm(p.v, w)).astype(c.dtype)
+
+
+def qr_blocked(a: jnp.ndarray, b: int = 128, *,
+               backend: Backend = JNP_BACKEND) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Blocked GEQRF — the MTB analogue.  Returns (packed A, tau)."""
+    m, n = a.shape
+    taus = jnp.zeros((min(m, n),), a.dtype)
+    for st in panel_steps(n, b):
+        k, bk, k_next = st.k, st.bk, st.k_next
+        if k >= m:
+            break
+        packed, tau, p = _factor_panel(a[k:, k : k + bk])
+        a = a.at[k:, k : k + bk].set(packed)
+        taus = taus.at[k : k + bk].set(tau[: min(bk, m - k)])
+        if k_next < n:
+            a = a.at[k:, k_next:].set(
+                apply_qt_blocked(p, a[k:, k_next:], backend))
+    return a, taus
+
+
+def qr_tiled(a: jnp.ndarray, b: int = 128, *,
+             backend: Backend = JNP_BACKEND) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """RTM analogue: trailing update fragmented into per-panel tasks."""
+    m, n = a.shape
+    taus = jnp.zeros((min(m, n),), a.dtype)
+    for st in panel_steps(n, b):
+        k, bk, k_next = st.k, st.bk, st.k_next
+        if k >= m:
+            break
+        packed, tau, p = _factor_panel(a[k:, k : k + bk])
+        a = a.at[k:, k : k + bk].set(packed)
+        taus = taus.at[k : k + bk].set(tau[: min(bk, m - k)])
+        for j in range(k_next, n, b):          # one task per column panel
+            bj = min(b, n - j)
+            a = a.at[k:, j : j + bj].set(
+                apply_qt_blocked(p, a[k:, j : j + bj], backend))
+    return a, taus
+
+
+def qr_lookahead(
+    a: jnp.ndarray,
+    b: int = 128,
+    *,
+    backend: Backend = JNP_BACKEND,
+    fused_pu: Optional[Callable] = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """GEQRF with static look-ahead (paper Listing 5).
+
+    Iteration k (panel k already factored, reflectors ``p``):
+      * ``PU(k+1)``   : apply ``Qᵀ_k`` to the next panel columns, factor them,
+      * ``TU_right(k)``: apply ``Qᵀ_k`` to the remaining columns —
+        data-independent of ``PU(k+1)``.
+
+    ``fused_pu``: optional fused kernel ``(v, t, c_panel) -> (packed, tau)``
+    that applies the block reflector and factors the result without leaving
+    VMEM (LA_MB analogue).
+    """
+    m, n = a.shape
+    taus = jnp.zeros((min(m, n),), a.dtype)
+    steps = list(panel_steps(n, b))
+
+    st0 = steps[0]
+    packed, tau, pnl = _factor_panel(a[:, : st0.bk])
+    a = a.at[:, : st0.bk].set(packed)
+    taus = taus.at[: st0.bk].set(tau[: min(st0.bk, m)])
+
+    for st in steps:
+        k, bk, k_next = st.k, st.bk, st.k_next
+        if k_next >= n or k >= m:
+            break
+        lcols, rcols = split_trailing(k_next, st.b_next, n)
+
+        # --- PU(k+1): update + factor the next panel ---------------------
+        if st.b_next > 0 and k_next < m:
+            if fused_pu is not None:
+                packed_n, tau_n = fused_pu(pnl.v, pnl.t, a[k:, lcols])
+                upd = packed_n  # fused kernel returns the updated+factored panel
+                a = a.at[k:, lcols].set(upd)
+                # re-derive reflectors for the *next* iteration
+                pkd = a[k_next:, lcols]
+                v_n = unpack_v(pkd, st.b_next)
+                pnl_next = _Panel(v_n, build_t_matrix(v_n, tau_n))
+            else:
+                upd = apply_qt_blocked(pnl, a[k:, lcols], backend)
+                packed_n, tau_n, pnl_next = _factor_panel(upd[bk:])
+                a = a.at[k:, lcols].set(upd.at[bk:].set(packed_n))
+            taus = taus.at[k_next : k_next + st.b_next].set(
+                tau_n[: min(st.b_next, m - k_next)])
+
+        # --- TU_right(k): independent of PU(k+1) -------------------------
+        if rcols.start < n:
+            a = a.at[k:, rcols].set(
+                apply_qt_blocked(pnl, a[k:, rcols], backend))
+
+        if st.b_next > 0 and k_next < m:
+            pnl = pnl_next
+    return a, taus
+
+
+def form_q(a_packed: jnp.ndarray, taus: jnp.ndarray, b: int = 128, *,
+           backend: Backend = JNP_BACKEND) -> jnp.ndarray:
+    """Form Q (m × m) explicitly from GEQRF output (ORGQR analogue)."""
+    m, n = a_packed.shape
+    q = jnp.eye(m, dtype=a_packed.dtype)
+    steps = [st for st in panel_steps(n, b) if st.k < m]
+    for st in reversed(steps):
+        k, bk = st.k, st.bk
+        v = unpack_v(a_packed[k:, k : k + bk], bk)
+        t = build_t_matrix(v, taus[k : k + bk])
+        # Q <- (I − V·T·Vᵀ) · Q  restricted to rows k:
+        w = backend.gemm(t, backend.gemm(v.T, q[k:, :]))
+        q = q.at[k:, :].set(q[k:, :] - backend.gemm(v, w))
+    return q

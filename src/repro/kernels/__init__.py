@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the DMF hot spots (validated via interpret=True).
+
+Kernel inventory (each with a pure-jnp oracle in :mod:`repro.kernels.ref`):
+
+* ``blis_gemm``           — BLIS five-loop GEMM → BlockSpec VMEM tiling (§2)
+* ``trsm``                — VMEM-resident triangular solve
+* ``panel_lu``            — GETF2 with partial pivoting, panel in VMEM
+* ``panel_qr``            — GEQR2 + LARFT (packed, tau, T) in one kernel
+* ``fused_panel_update``  — PU(k+1) fused: the malleable-BLAS analogue (§4.2)
+* ``attention``           — flash-style blockwise attention for the LM zoo
+* ``wkv6``                — fused WKV6 chunk sweep (state + score tiles in VMEM)
+
+Public entry points live in :mod:`repro.kernels.ops`.
+"""

@@ -1,0 +1,123 @@
+"""Flash-style blockwise attention Pallas kernel (forward).
+
+Used by the serving path of the LM zoo (prefill at 32k would otherwise
+materialize an O(s²) score matrix).  Online-softmax accumulation with the KV
+block index as the innermost grid dimension; running max/denominator live in
+VMEM scratch across the KV sweep — the same "keep the accumulator resident,
+stream the operands" discipline as the BLIS GEMM kernel.
+
+Training uses the pure-JAX chunked implementation in
+``repro.models.layers.chunked_attention`` (autodiff + remat for free, and it
+compiles on any backend — the dry-run lowers on CPU).  This kernel is the
+TPU-target hot-spot implementation, validated against the same oracle
+(``ref.attention``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, causal: bool, kv_steps: int,
+                  block_q: int, block_k: int):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)                  # (bq, d)
+    k = k_ref[0].astype(jnp.float32)                  # (bk, d)
+    v = v_ref[0].astype(jnp.float32)                  # (bk, dv)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if causal:
+        rows = qi * block_q + lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        cols = kj * block_k + lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(rows >= cols, s, _NEG_INF)
+
+    m_prev = m_ref[...][:, :1]                        # (bq, 1)
+    l_prev = l_ref[...][:, :1]
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)                   # (bq, 1)
+    p = jnp.exp(s - m_new)                            # (bq, bk)
+    l_new = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(kj == kv_steps - 1)
+    def _flush():
+        l = l_ref[...][:, :1]
+        # fully-masked rows (causal, short history): l == 0 -> output 0
+        safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_ref[...] / safe).astype(o_ref.dtype)
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True,
+                    scale: float | None = None,
+                    block_q: int = 512,
+                    block_k: int = 512,
+                    interpret: bool = False) -> jnp.ndarray:
+    """Blockwise attention.  q: (B, H, Sq, D); k, v: (B, Hkv, Sk, D).
+
+    GQA is handled in the BlockSpec index maps (query head h reads KV head
+    ``h // (H // Hkv)``) — no KV replication in HBM.
+    """
+    bsz, h, sq, d = q.shape
+    _, hkv, sk, dv = v.shape
+    assert k.shape == (bsz, hkv, sk, d), (q.shape, k.shape, v.shape)
+    g = h // hkv
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+
+    bq = min(block_q, sq)
+    bk = min(block_k, sk)
+    assert sq % bq == 0 and sk % bk == 0, (sq, bq, sk, bk)
+    kv_steps = sk // bk
+
+    qf = q.reshape(bsz * h, sq, d)
+    kf = k.reshape(bsz * hkv, sk, d)
+    vf = v.reshape(bsz * hkv, sk, dv)
+
+    def q_map(bh, qi, kj):
+        return (bh, qi, 0)
+
+    def kv_map(bh, qi, kj):
+        b, hh = bh // h, bh % h
+        return (b * hkv + hh // g, kj, 0)
+
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, causal=causal,
+                          kv_steps=kv_steps, block_q=bq, block_k=bk),
+        grid=(bsz * h, sq // bq, kv_steps),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), q_map),
+            pl.BlockSpec((1, bk, d), kv_map),
+            pl.BlockSpec((1, bk, dv), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dv), q_map),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 128), jnp.float32),   # running max (lane-replicated)
+            pltpu.VMEM((bq, 128), jnp.float32),   # running denominator
+            pltpu.VMEM((bq, dv), jnp.float32),    # output accumulator
+        ],
+        out_shape=jax.ShapeDtypeStruct((bsz * h, sq, dv), q.dtype),
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(bsz, h, sq, dv)

@@ -1,0 +1,180 @@
+"""Fused panel-update kernels — the malleable-BLAS (LA_MB) analogue.
+
+Paper §4.2: when the panel thread finishes, it *joins* the trailing update so
+no core idles.  A TPU core cannot change its worker count mid-kernel, but the
+bubble the paper eliminates has an exact analogue here: in the unfused LA
+variant, ``PU(k+1)`` is three kernels (TRSM → GEMM → GETF2/GEQR2) with two
+HBM round-trips of the panel between them.  These kernels fuse the whole
+``PU`` into ONE ``pallas_call`` in which the panel never leaves VMEM — the
+compute units stay busy on a single seamless pipeline, which is precisely the
+resource-utilization property malleability buys on the CPU.
+
+VMEM budget: the wrapper in ``ops.py`` checks the footprint and falls back to
+the composed path for panels that don't fit (the paper sizes b to the cache
+for the same reason).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+
+def _substitute(l: jnp.ndarray, b: jnp.ndarray, unit: bool) -> jnp.ndarray:
+    """Forward substitution L·X = B on VMEM-resident values."""
+    nb = l.shape[0]
+    rows = lax.broadcasted_iota(jnp.int32, (nb, 1), 0)
+
+    def body(i, x):
+        li = lax.dynamic_slice_in_dim(l, i, 1, axis=0)
+        solved = jnp.where(rows < i, x, 0.0)
+        contrib = jnp.dot(li, solved, preferred_element_type=jnp.float32)
+        bi = lax.dynamic_slice_in_dim(x, i, 1, axis=0)
+        div = jnp.float32(1.0) if unit else l[i, i]
+        xi = (bi - contrib) / div
+        return lax.dynamic_update_slice_in_dim(x, xi, i, axis=0)
+
+    return lax.fori_loop(0, nb, body, b)
+
+
+def _lu_factor_inplace(a: jnp.ndarray):
+    """Masked GETF2 on a VMEM-resident (m × nb) value; returns (a, piv)."""
+    m, nb = a.shape
+    rows = lax.broadcasted_iota(jnp.int32, (m, 1), 0)
+    cols = lax.broadcasted_iota(jnp.int32, (1, nb), 1)
+
+    def body(j, carry):
+        a, piv = carry
+        colj = lax.dynamic_slice_in_dim(a, j, 1, axis=1)
+        cand = jnp.where(rows < j, -jnp.inf, jnp.abs(colj))
+        p = jnp.argmax(cand, axis=0)[0].astype(jnp.int32)
+        piv = lax.dynamic_update_slice_in_dim(piv, p[None, None], j, axis=0)
+        rj = lax.dynamic_slice_in_dim(a, j, 1, axis=0)
+        rp = lax.dynamic_slice_in_dim(a, p, 1, axis=0)
+        a = lax.dynamic_update_slice_in_dim(a, rj, p, axis=0)
+        a = lax.dynamic_update_slice_in_dim(a, rp, j, axis=0)
+        pivval = lax.dynamic_slice(a, (j, j), (1, 1))
+        colj = lax.dynamic_slice_in_dim(a, j, 1, axis=1)
+        l = jnp.where(rows > j, colj / pivval, 0.0)
+        rowj = lax.dynamic_slice_in_dim(a, j, 1, axis=0)
+        u = jnp.where(cols > j, rowj, 0.0)
+        a = a - l * u
+        newcol = jnp.where(rows > j, l, lax.dynamic_slice_in_dim(a, j, 1, 1))
+        a = lax.dynamic_update_slice_in_dim(a, newcol, j, axis=1)
+        return a, piv
+
+    piv0 = jnp.zeros((nb, 1), jnp.int32)
+    return lax.fori_loop(0, min(m, nb), body, (a, piv0))
+
+
+# ---------------------------------------------------------------------------
+# LU: PU(k+1) = TRSM + GEMM + GETF2, one kernel.
+# ---------------------------------------------------------------------------
+def _fused_lu_pu_kernel(l11_ref, l21_ref, a1l_ref, a2l_ref,
+                        u12_ref, out_ref, piv_ref):
+    l11 = l11_ref[...].astype(jnp.float32)
+    l21 = l21_ref[...].astype(jnp.float32)
+    # 1. U12 = L11⁻¹ · A1L            (unit-lower substitution)
+    u12 = _substitute(l11, a1l_ref[...].astype(jnp.float32), unit=True)
+    # 2. panel = A2L − L21 · U12      (MXU contraction, TU_k^L)
+    panel = a2l_ref[...].astype(jnp.float32) - jnp.dot(
+        l21, u12, preferred_element_type=jnp.float32)
+    # 3. PF_{k+1}                     (GETF2 with partial pivoting)
+    packed, piv = _lu_factor_inplace(panel)
+    u12_ref[...] = u12.astype(u12_ref.dtype)
+    out_ref[...] = packed.astype(out_ref.dtype)
+    piv_ref[...] = piv
+
+
+def fused_lu_panel_update(l11, l21, a1l, a2l, *, interpret: bool = False):
+    """``PU(k+1)`` for LU in one VMEM-resident kernel.
+
+    Args: l11 (b,b) unit-lower, l21 (m,b), a1l (b,bn), a2l (m,bn).
+    Returns: (u12 (b,bn), packed panel (m,bn), piv (bn,)).
+    """
+    b = l11.shape[0]
+    m, bn = a2l.shape
+    u12, out, piv = pl.pallas_call(
+        _fused_lu_pu_kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((b, b), lambda i: (0, 0)),
+            pl.BlockSpec((m, b), lambda i: (0, 0)),
+            pl.BlockSpec((b, bn), lambda i: (0, 0)),
+            pl.BlockSpec((m, bn), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((b, bn), lambda i: (0, 0)),
+            pl.BlockSpec((m, bn), lambda i: (0, 0)),
+            pl.BlockSpec((bn, 1), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, bn), a1l.dtype),
+            jax.ShapeDtypeStruct((m, bn), a2l.dtype),
+            jax.ShapeDtypeStruct((bn, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(l11, l21, a1l, a2l)
+    return u12, out, piv[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# Cholesky: PU(k+1) = GEMM + (POTF2 + TRSM), one kernel.
+# ---------------------------------------------------------------------------
+def _chol_factor_top(a: jnp.ndarray, nb: int) -> jnp.ndarray:
+    """Masked unblocked Cholesky of the top (nb × nb) of a VMEM value."""
+    rows = lax.broadcasted_iota(jnp.int32, (nb, 1), 0)
+
+    def body(j, a):
+        d = jnp.sqrt(lax.dynamic_slice(a, (j, j), (1, 1)))
+        colj = lax.dynamic_slice_in_dim(a, j, 1, axis=1)
+        col = jnp.where(rows > j, colj / d, 0.0)
+        a = a - col * col.T
+        newcol = jnp.where(rows > j, col, lax.dynamic_slice_in_dim(a, j, 1, 1))
+        newcol = jnp.where(rows == j, d, newcol)
+        return lax.dynamic_update_slice_in_dim(a, newcol, j, axis=1)
+
+    return lax.fori_loop(0, nb, body, a)
+
+
+def _fused_chol_pu_kernel(lrow_ref, l21_ref, panel_ref, out_ref, *, bn: int):
+    lrow = lrow_ref[...].astype(jnp.float32)        # (bn, b)
+    l21 = l21_ref[...].astype(jnp.float32)          # (m, b)
+    panel = panel_ref[...].astype(jnp.float32)      # (m, bn)
+    # 1. TU_k^L : panel −= L21 · lrowᵀ
+    panel = panel - jnp.dot(l21, lrow.T, preferred_element_type=jnp.float32)
+    # 2. PF_{k+1}: factor diag block (tril: match the oracle's zeroed
+    #    upper triangle), substitute the rest
+    top = jnp.tril(_chol_factor_top(panel[:bn], bn))
+    if panel.shape[0] > bn:                         # static shape check
+        rest = _substitute(top, panel[bn:].T, unit=False).T  # X·L11ᵀ = A21
+        out = jnp.concatenate([top, rest])
+    else:
+        out = top
+    out_ref[...] = out.astype(out_ref.dtype)
+
+
+def fused_cholesky_panel_update(lrow, l21, panel, *, interpret: bool = False):
+    """``PU(k+1)`` for Cholesky in one VMEM-resident kernel.
+
+    Args: lrow (bn,b) = L rows of next block col, l21 (m,b), panel (m,bn).
+    Returns the factored next panel (m, bn).
+    """
+    bn = lrow.shape[0]
+    m = panel.shape[0]
+    b = lrow.shape[1]
+    return pl.pallas_call(
+        functools.partial(_fused_chol_pu_kernel, bn=bn),
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((bn, b), lambda i: (0, 0)),
+            pl.BlockSpec((m, b), lambda i: (0, 0)),
+            pl.BlockSpec((m, bn), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((m, bn), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, bn), panel.dtype),
+        interpret=interpret,
+    )(lrow, l21, panel)

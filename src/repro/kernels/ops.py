@@ -1,0 +1,143 @@
+"""Public jit'd wrappers for the Pallas kernels + the Pallas BLAS backend.
+
+On CPU (this container) every kernel runs with ``interpret=True`` — the
+kernel body executes eagerly in Python on the CPU backend, validating the
+exact dataflow that Mosaic would compile for TPU.  On a TPU backend the same
+entry points compile natively.  Toggle explicitly with
+``set_interpret(True/False)`` if needed.
+
+``PALLAS_BACKEND`` plugs into :mod:`repro.core.backend` so every DMF driver
+can run on top of the paper-analogous BLIS kernels; ``FUSED_PU`` is the
+registry the ``la_mb`` variant (look-ahead + malleable) resolves through.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.backend import Backend, gemm_jnp, trsm_jnp
+from repro.kernels import blis_gemm as _bg
+from repro.kernels import fused_panel_update as _fpu
+from repro.kernels import panel_lu as _plu
+from repro.kernels import panel_qr as _pqr
+from repro.kernels import trsm as _tr
+
+# interpret=True on CPU (validation), False on TPU (deployment).
+_INTERPRET = jax.default_backend() == "cpu"
+
+# largest panel footprint (bytes of f32) we allow a single-cell kernel to
+# claim in VMEM before falling back to the composed path.
+VMEM_PANEL_BUDGET = 10 * 1024 * 1024
+
+
+def set_interpret(flag: bool) -> None:
+    global _INTERPRET
+    _INTERPRET = flag
+
+
+def _f32_bytes(*shapes) -> int:
+    total = 0
+    for s in shapes:
+        n = 1
+        for d in s:
+            n *= d
+        total += 4 * n
+    return total
+
+
+# ---------------------------------------------------------------------------
+# GEMM / TRSM (the BLAS-3 layer)
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("blocks",))
+def gemm(a, b, blocks=None):
+    """C = A·B via the BLIS five-loop Pallas kernel."""
+    return _bg.blis_gemm(a, b, blocks=blocks, interpret=_INTERPRET)
+
+
+@functools.partial(jax.jit, static_argnames=("alpha", "blocks"))
+def gemm_accum(c, a, b, alpha=-1.0, blocks=None):
+    """O = C + alpha·A·B (fused trailing update)."""
+    return _bg.blis_gemm_accum(c, a, b, alpha=alpha, blocks=blocks,
+                               interpret=_INTERPRET)
+
+
+def trsm(t, b, *, side="left", lower=True, trans=False, unit_diagonal=False):
+    """Backend-compatible TRSM; Pallas path for the two DMF shapes."""
+    if side == "left" and lower and not trans:
+        return _tr.trsm_left_lower(t, b, unit_diagonal=unit_diagonal,
+                                   interpret=_INTERPRET)
+    if side == "right" and lower and trans:
+        return _tr.trsm_right_lower_t(t, b, unit_diagonal=unit_diagonal,
+                                      interpret=_INTERPRET)
+    # other combinations are not on the DMF hot path — defer to XLA
+    return trsm_jnp(t, b, side=side, lower=lower, trans=trans,
+                    unit_diagonal=unit_diagonal)
+
+
+# ---------------------------------------------------------------------------
+# Panel factorizations (the sequential bottleneck, VMEM-resident)
+# ---------------------------------------------------------------------------
+def lu_panel(panel):
+    """GETF2 panel kernel with jnp fallback for panels beyond VMEM."""
+    if _f32_bytes(panel.shape) > VMEM_PANEL_BUDGET:
+        from repro.core.lu import lu_unblocked
+
+        return lu_unblocked(panel)
+    return _plu.lu_panel(panel, interpret=_INTERPRET)
+
+
+def qr_panel(panel):
+    """GEQR2+LARFT panel kernel with jnp fallback."""
+    if _f32_bytes(panel.shape) > VMEM_PANEL_BUDGET:
+        from repro.kernels import ref
+
+        return ref.qr_panel(panel)
+    return _pqr.qr_panel(panel, interpret=_INTERPRET)
+
+
+# ---------------------------------------------------------------------------
+# Fused panel updates — LA_MB (malleable) building blocks
+# ---------------------------------------------------------------------------
+def fused_lu_panel_update(l11, l21, a1l, a2l):
+    if _f32_bytes(l11.shape, l21.shape, a1l.shape, a2l.shape, a2l.shape) \
+            > VMEM_PANEL_BUDGET:
+        from repro.kernels import ref
+
+        return ref.fused_lu_panel_update(l11, l21, a1l, a2l)
+    return _fpu.fused_lu_panel_update(l11, l21, a1l, a2l,
+                                      interpret=_INTERPRET)
+
+
+def fused_cholesky_panel_update(lrow, l21, panel):
+    if _f32_bytes(lrow.shape, l21.shape, panel.shape, panel.shape) \
+            > VMEM_PANEL_BUDGET:
+        from repro.kernels import ref
+
+        return ref.fused_cholesky_panel_update(lrow, l21, panel)
+    return _fpu.fused_cholesky_panel_update(lrow, l21, panel,
+                                            interpret=_INTERPRET)
+
+
+# resolved by repro.core.lookahead.get_variant("<dmf>", "la_mb")
+FUSED_PU = {
+    "lu": fused_lu_panel_update,
+    "cholesky": fused_cholesky_panel_update,
+}
+
+
+# ---------------------------------------------------------------------------
+# The Pallas BLAS backend (drop-in for repro.core.backend.JNP_BACKEND)
+# ---------------------------------------------------------------------------
+def _backend_gemm(a, b):
+    return gemm(a, b)
+
+
+def _backend_trsm(t, b, *, side="left", lower=True, trans=False,
+                  unit_diagonal=False):
+    return trsm(t, b, side=side, lower=lower, trans=trans,
+                unit_diagonal=unit_diagonal)
+
+
+PALLAS_BACKEND = Backend(name="pallas", gemm=_backend_gemm, trsm=_backend_trsm)

@@ -1,0 +1,89 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic ground truth the kernels are validated against
+(``tests/test_kernels_*.py`` sweep shapes/dtypes and ``assert_allclose``).
+No Pallas, no tiling — just the math.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def gemm(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """C = A·B with f32 accumulation."""
+    out = jnp.matmul(a, b, preferred_element_type=jnp.float32)
+    return out.astype(a.dtype)
+
+
+def gemm_accum(c: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray,
+               alpha: float = -1.0) -> jnp.ndarray:
+    """C + alpha·A·B (the trailing-update shape)."""
+    return (c + alpha * gemm(a, b)).astype(c.dtype)
+
+
+def trsm_left_lower(l: jnp.ndarray, b: jnp.ndarray,
+                    unit_diagonal: bool = True) -> jnp.ndarray:
+    """Solve L·X = B, L lower triangular."""
+    return lax.linalg.triangular_solve(
+        l, b, left_side=True, lower=True, unit_diagonal=unit_diagonal)
+
+
+def trsm_right_lower_t(l: jnp.ndarray, b: jnp.ndarray,
+                       unit_diagonal: bool = False) -> jnp.ndarray:
+    """Solve X·Lᵀ = B, L lower triangular (Cholesky L21 shape)."""
+    return lax.linalg.triangular_solve(
+        l, b, left_side=False, lower=True, transpose_a=True,
+        unit_diagonal=unit_diagonal)
+
+
+def lu_panel(panel: jnp.ndarray):
+    """GETF2 oracle — delegates to the core implementation."""
+    from repro.core.lu import lu_unblocked
+
+    return lu_unblocked(panel)
+
+
+def qr_panel(panel: jnp.ndarray):
+    """GEQR2+LARFT oracle: returns (packed, tau, T)."""
+    from repro.core.qr import build_t_matrix, qr_unblocked, unpack_v
+
+    packed, tau = qr_unblocked(panel)
+    v = unpack_v(packed, panel.shape[1])
+    t = build_t_matrix(v, tau)
+    return packed, tau, t
+
+
+def cholesky_panel(panel: jnp.ndarray, nb: int):
+    """Cholesky PF oracle."""
+    from repro.core.cholesky import cholesky_panel as _cp
+
+    return _cp(panel, nb)
+
+
+def fused_lu_panel_update(l11, l21, a1l, a2l):
+    """PU(k+1) for LU: TRSM + GEMM + GETF2 (the LA_MB fused op)."""
+    u12 = trsm_left_lower(l11, a1l, unit_diagonal=True)
+    nxt = gemm_accum(a2l, l21, u12)
+    packed, piv = lu_panel(nxt)
+    return u12, packed, piv
+
+
+def fused_cholesky_panel_update(lrow, l21, panel):
+    """PU(k+1) for Cholesky: GEMM + PF."""
+    upd = gemm_accum(panel, l21, lrow.T)
+    return cholesky_panel(upd, lrow.shape[0])
+
+
+def attention(q, k, v, *, causal: bool = True, scale: float | None = None):
+    """Softmax attention oracle (single head): q,k,v = (sq, d), (sk, d), (sk, dv)."""
+    if scale is None:
+        scale = 1.0 / (q.shape[-1] ** 0.5)
+    s = (q @ k.T) * scale
+    if causal:
+        sq, sk = q.shape[0], k.shape[0]
+        mask = jnp.arange(sq)[:, None] + (sk - sq) >= jnp.arange(sk)[None, :]
+        s = jnp.where(mask, s, -jnp.inf)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return (p @ v).astype(q.dtype)

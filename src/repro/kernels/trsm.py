@@ -1,0 +1,75 @@
+"""Triangular solve (TRSM) Pallas kernel.
+
+``L·X = B`` with L (nb × nb) lower triangular resident in VMEM and B split
+into (nb, bn) column blocks — one grid step per block, mirroring how the
+paper's TRSM parallelizes over the trailing columns.  The substitution loop
+is the latency-bound "small sequential op" of the DMF; keeping L and the
+block of B in VMEM for its entire lifetime is the point of the kernel.
+
+Right-side solves (``X·Lᵀ = B``, the Cholesky/LDLᵀ ``L21`` shape) reduce to
+the left kernel by transposition in the wrapper (XLA fuses the transposes
+into the surrounding copies).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+
+def _trsm_kernel(l_ref, b_ref, x_ref, *, nb: int, unit: bool):
+    l = l_ref[...].astype(jnp.float32)
+    x = b_ref[...].astype(jnp.float32)
+    rows = lax.broadcasted_iota(jnp.int32, (nb, 1), 0)
+
+    def body(i, x):
+        li = lax.dynamic_slice_in_dim(l, i, 1, axis=0)      # (1, nb)
+        solved = jnp.where(rows < i, x, 0.0)                # rows < i final
+        contrib = jnp.dot(li, solved,
+                          preferred_element_type=jnp.float32)  # (1, bn)
+        bi = lax.dynamic_slice_in_dim(x, i, 1, axis=0)
+        div = jnp.float32(1.0) if unit else l[i, i]
+        xi = (bi - contrib) / div
+        return lax.dynamic_update_slice_in_dim(x, xi, i, axis=0)
+
+    x = lax.fori_loop(0, nb, body, x)
+    x_ref[...] = x.astype(x_ref.dtype)
+
+
+def trsm_left_lower(l: jnp.ndarray, b: jnp.ndarray, *,
+                    unit_diagonal: bool = True,
+                    block_n: int = 512,
+                    interpret: bool = False) -> jnp.ndarray:
+    """Solve L·X = B via the Pallas substitution kernel."""
+    nb = l.shape[0]
+    assert l.shape == (nb, nb) and b.shape[0] == nb, (l.shape, b.shape)
+    n = b.shape[1]
+    bn = min(block_n, max(128, n))
+    npad = (n + bn - 1) // bn * bn
+    if npad != n:
+        b = jnp.pad(b, ((0, 0), (0, npad - n)))
+
+    out = pl.pallas_call(
+        functools.partial(_trsm_kernel, nb=nb, unit=unit_diagonal),
+        grid=(npad // bn,),
+        in_specs=[
+            pl.BlockSpec((nb, nb), lambda j: (0, 0)),   # L resident per step
+            pl.BlockSpec((nb, bn), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((nb, bn), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((nb, npad), b.dtype),
+        interpret=interpret,
+    )(l, b)
+    return out[:, :n]
+
+
+def trsm_right_lower_t(l: jnp.ndarray, b: jnp.ndarray, *,
+                       unit_diagonal: bool = False,
+                       interpret: bool = False) -> jnp.ndarray:
+    """Solve X·Lᵀ = B  ⇔  L·Xᵀ = Bᵀ (the L21 panel shape)."""
+    xt = trsm_left_lower(l, b.T, unit_diagonal=unit_diagonal,
+                         interpret=interpret)
+    return xt.T

@@ -1,0 +1,116 @@
+"""Fused WKV6 chunk kernel — VMEM-resident state + score tiles.
+
+The §Perf analysis of ``rwkv6-7b × prefill_32k`` showed the chunked WKV
+recurrence is *state-traffic* bound: the jnp lowering reads/writes the
+(dk × dv) state and the (c × c) score tile through HBM once per chunk.  This
+kernel keeps the state in VMEM scratch across the whole sequence sweep (the
+chunk index is the innermost, sequential grid dimension) and the score tile
+never leaves VMEM — the same discipline as the BLIS GEMM accumulator and the
+flash-attention kernel (paper §2's cache residency, third instantiation).
+
+Grid: (B·H, S/c); one (batch·head) stream per outer step, chunks sequential.
+Oracle: ``repro.models.rwkv6.wkv6_chunked`` (itself validated against the
+exact token-by-token recurrence).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_CLIP = 80.0
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, logw_ref, u_ref, o_ref, sfin_ref,
+                s_ref, *, nchunks: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    r = r_ref[0].astype(jnp.float32)                 # (c, dk)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)                 # (c, dv)
+    logw = logw_ref[0].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)                 # (1, dk)
+    s = s_ref[...]                                   # (dk, dv)
+
+    cum = jnp.cumsum(logw, axis=0)
+    cum_excl = cum - logw
+    r_in = r * jnp.exp(jnp.clip(cum_excl, -_CLIP, _CLIP))
+    k_out = k * jnp.exp(jnp.clip(-cum, -_CLIP, _CLIP))
+
+    inter = jnp.dot(r_in, s, preferred_element_type=jnp.float32)
+    scores = jnp.dot(r_in, k_out.T, preferred_element_type=jnp.float32)
+    c = r.shape[0]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (c, c), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (c, c), 1)
+    scores = jnp.where(rows > cols, scores, 0.0)     # strictly lower
+    bonus = jnp.sum(r * (u * k), axis=1, keepdims=True)   # (c, 1)
+    intra = jnp.dot(scores, v, preferred_element_type=jnp.float32)
+    intra = intra + bonus * v
+
+    wtot = cum[-1:, :]                                # (1, dk)
+    k_fwd = k * jnp.exp(jnp.clip(wtot - cum, -_CLIP, _CLIP))
+    s_new = (jnp.exp(jnp.clip(wtot, -_CLIP, _CLIP)).T * s
+             + jnp.dot(k_fwd.T, v, preferred_element_type=jnp.float32))
+
+    o_ref[0] = (inter + intra).astype(o_ref.dtype)
+    s_ref[...] = s_new
+
+    @pl.when(ci == nchunks - 1)
+    def _flush():
+        sfin_ref[0] = s_new.astype(sfin_ref.dtype)
+
+
+def wkv6_fused(r, k, v, logw, u, *, chunk: int = 128,
+               interpret: bool = False):
+    """Fused WKV6 sweep.  r,k,v,logw: (B, H, S, dk); u: (H, dk).
+
+    Returns (out (B,H,S,dv) f32, final state (B,H,dk,dv) f32).
+    """
+    b, h, s, dk = r.shape
+    dv = v.shape[-1]
+    c = min(chunk, s)
+    assert s % c == 0, (s, c)
+    n = s // c
+    bh = b * h
+
+    rf = r.reshape(bh, s, dk)
+    kf = k.reshape(bh, s, dk)
+    vf = v.reshape(bh, s, dv)
+    wf = logw.reshape(bh, s, dk)
+    uf = jnp.broadcast_to(u[None], (b, h, dk)).reshape(bh, 1, dk)
+
+    def seq_map(i, j):
+        return (i, j, 0)
+
+    def u_map(i, j):
+        return (i, 0, 0)
+
+    out, sfin = pl.pallas_call(
+        functools.partial(_wkv_kernel, nchunks=n),
+        grid=(bh, n),
+        in_specs=[
+            pl.BlockSpec((1, c, dk), seq_map),
+            pl.BlockSpec((1, c, dk), seq_map),
+            pl.BlockSpec((1, c, dv), seq_map),
+            pl.BlockSpec((1, c, dk), seq_map),
+            pl.BlockSpec((1, 1, dk), u_map),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, c, dv), seq_map),
+            pl.BlockSpec((1, dk, dv), lambda i, j: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, s, dv), jnp.float32),
+            jax.ShapeDtypeStruct((bh, dk, dv), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((dk, dv), jnp.float32)],
+        interpret=interpret,
+    )(rf, kf, vf, wf, uf)
+    return out.reshape(b, h, s, dv), sfin.reshape(b, h, dk, dv)

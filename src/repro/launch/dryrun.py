@@ -1,0 +1,284 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ---------------------------------------------------------------------------
+# Multi-pod dry-run: lower + compile every (arch × shape) on the production
+# mesh; prove sharding coherence and memory fit, emit roofline inputs.
+#
+#   python -m repro.launch.dryrun --arch qwen2-72b --shape train_4k
+#   python -m repro.launch.dryrun --all [--multi-pod] [--skip-existing]
+#
+# The two lines above MUST run before any other import (jax locks the device
+# count at first init).  Artifacts: artifacts/dryrun/<mesh>/<arch>__<shape>.json
+# ---------------------------------------------------------------------------
+import argparse
+import json
+import time
+import traceback
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config
+from repro.configs.registry import input_specs
+from repro.launch import roofline as RL
+from repro.launch.mesh import make_production_mesh
+from repro.models import api
+from repro.optim import adamw as _adamw
+from repro.parallel.sharding import default_rules, param_sharding, use_rules
+
+
+def _axes_and_shapes(cfg):
+    """Abstract param shapes + logical axes without allocating anything."""
+    holder = {}
+
+    def make():
+        p, ax = api.init_params(cfg, jax.random.PRNGKey(0))
+        holder["ax"] = ax
+        return p
+
+    shapes = jax.eval_shape(make)
+    return shapes, holder["ax"]
+
+
+def _cache_logical_axes(cache_tree):
+    """Map decode-cache leaves to logical axis tuples by name + rank."""
+    flat = jax.tree_util.tree_flatten_with_path(cache_tree)[0]
+    treedef = jax.tree_util.tree_structure(cache_tree)
+
+    def axes_for(path, leaf):
+        name = None
+        for k in reversed(path):
+            if hasattr(k, "key"):
+                name = str(k.key)
+                break
+        nd = len(leaf.shape)
+        def pad(base):
+            return (None,) * (nd - len(base)) + base
+        if name in ("k", "v", "xk", "xv"):
+            # kv_heads shards when divisible; otherwise the duplicate-axis
+            # guard lets the cache SEQ dim take the model axis instead
+            # (sequence-parallel decode attention).
+            return pad(("batch", "kv_heads", "seq", None))
+        if name == "pos":
+            return pad(("batch", "seq"))
+        if name == "s":
+            return pad(("batch", "heads", None, None))
+        if name in ("x_tm", "x_cm"):
+            return pad(("batch", None, None))
+        if name == "h":
+            return pad(("batch", "state"))
+        if name == "conv":
+            return pad(("batch", None, "state"))
+        return (None,) * nd
+
+    return jax.tree_util.tree_unflatten(
+        treedef, [axes_for(p, l) for p, l in flat])
+
+
+def _batch_logical_axes(specs):
+    out = {}
+    for k, v in specs.items():
+        out[k] = ("batch",) + (None,) * (len(v.shape) - 1)
+    return out
+
+
+def _mem_fields(ma):
+    out = {}
+    for k in dir(ma):
+        if k.startswith("_"):
+            continue
+        try:
+            v = getattr(ma, k)
+        except Exception:
+            continue
+        if isinstance(v, (int, float)):
+            out[k] = v
+    return out
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
+               seq_shard: bool = True, verbose: bool = True,
+               cfg_overrides: dict | None = None):
+    import dataclasses as _dc
+
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = _dc.replace(cfg, **cfg_overrides)
+    shape = {s.name: s for s in cfg.runnable_shapes()}.get(shape_name)
+    if shape is None:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "multi_pod" if multi_pod else "single_pod",
+                "status": "skipped",
+                "reason": "shape not applicable (DESIGN.md §6)"}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    rules = default_rules(mesh, seq_shard=seq_shard)
+    t0 = time.time()
+
+    params_shapes, axes = _axes_and_shapes(cfg)
+    p_shard = param_sharding(rules, axes, params_shapes)
+    repl = NamedSharding(mesh, P())
+    batch_specs = input_specs(cfg, shape)
+    b_shard = {k: rules.sharding(ax, batch_specs[k].shape)
+               for k, ax in _batch_logical_axes(batch_specs).items()}
+
+    with mesh, use_rules(rules):
+        if shape.kind == "train":
+            opt = _adamw.AdamW(learning_rate=1e-4)
+            opt_shapes = jax.eval_shape(opt.init, params_shapes)
+            opt_shard = _adamw.AdamWState(step=repl, m=p_shard, v=p_shard)
+
+            def train_step(params, opt_state, batch):
+                loss, grads = jax.value_and_grad(
+                    partial(api.loss_fn, cfg))(params, batch)
+                updates, opt_state = opt.update(grads, opt_state, params)
+                params = _adamw.apply_updates(params, updates)
+                return params, opt_state, loss
+
+            jitted = jax.jit(
+                train_step,
+                in_shardings=(p_shard, opt_shard, b_shard),
+                out_shardings=(p_shard, opt_shard, repl),
+                donate_argnums=(0, 1))
+            lowered = jitted.lower(params_shapes, opt_shapes, batch_specs)
+
+        elif shape.kind == "prefill":
+            def prefill_step(params, batch):
+                logits, cache = api.prefill(cfg, params, batch,
+                                            max_len=shape.seq_len)
+                return logits, cache
+
+            jitted = jax.jit(prefill_step, in_shardings=(p_shard, b_shard))
+            lowered = jitted.lower(params_shapes, batch_specs)
+
+        else:  # decode — serve_step: one token against the standing cache
+            enc_len = shape.seq_len // 2 if cfg.is_enc_dec else 0
+            max_len = shape.seq_len // 2 if cfg.is_enc_dec else shape.seq_len
+            cache_shapes = jax.eval_shape(
+                lambda: api.init_decode_cache(cfg, shape.global_batch,
+                                              max_len, enc_len))
+            c_axes = _cache_logical_axes(cache_shapes)
+            ax_leaves = jax.tree_util.tree_leaves(
+                c_axes, is_leaf=lambda x: isinstance(x, tuple))
+            sh_leaves, ctd = jax.tree_util.tree_flatten(cache_shapes)
+            c_shard = jax.tree_util.tree_unflatten(
+                ctd, [rules.sharding(a, l.shape)
+                      for a, l in zip(ax_leaves, sh_leaves)])
+
+            def serve_step(params, cache, tokens, pos):
+                return api.decode_step(cfg, params, cache, tokens, pos)
+
+            jitted = jax.jit(
+                serve_step,
+                in_shardings=(p_shard, c_shard, b_shard["tokens"], repl),
+                donate_argnums=(1,))
+            lowered = jitted.lower(
+                params_shapes, cache_shapes, batch_specs["tokens"],
+                jax.ShapeDtypeStruct((), jnp.int32))
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    ma = compiled.memory_analysis()
+    mem = _mem_fields(ma)
+    rl = RL.analyze(compiled, chips=chips,
+                    model_flops_total=RL.model_flops(cfg, shape))
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "kind": shape.kind,
+        "mesh": "multi_pod_2x16x16" if multi_pod else "single_pod_16x16",
+        "chips": int(chips),
+        "status": "ok",
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": mem,
+        "roofline": rl.to_json(),
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+    }
+    if verbose:
+        per_dev = mem.get("temp_size_in_bytes", 0) + mem.get(
+            "argument_size_in_bytes", 0)
+        print(f"[{result['mesh']}] {arch} × {shape_name}: OK "
+              f"compile={t_compile:.0f}s mem/dev={per_dev/2**30:.2f}GiB "
+              f"flops/dev={rl.flops:.3g} coll={rl.coll_bytes/2**20:.1f}MiB "
+              f"dominant={rl.dominant}")
+        print(f"  memory_analysis: {mem}")
+        print(f"  cost_analysis: flops={rl.flops:.4g} "
+              f"bytes={rl.bytes_accessed:.4g}")
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--no-seq-shard", action="store_true")
+    ap.add_argument("--set", action="append", default=[],
+                    help="config override key=value (hillclimb lever)")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        if v in ("True", "False"):
+            v = v == "True"
+        else:
+            try:
+                v = int(v)
+            except ValueError:
+                try:
+                    v = float(v)
+                except ValueError:
+                    pass
+        overrides[k] = v
+
+    cells = []
+    archs = ARCH_IDS if (args.all or args.arch is None) else [args.arch]
+    for arch in archs:
+        cfg = get_config(arch)
+        shapes = ([args.shape] if args.shape
+                  else [s.name for s in cfg.shapes])
+        for sh in shapes:
+            meshes = ([False, True] if (args.all or args.both_meshes)
+                      else [args.multi_pod])
+            for mp in meshes:
+                cells.append((arch, sh, mp))
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for arch, sh, mp in cells:
+        tag = "multi" if mp else "single"
+        path = os.path.join(args.out, f"{arch}__{sh}__{tag}.json")
+        if args.skip_existing and os.path.exists(path):
+            print(f"skip (exists): {path}")
+            continue
+        try:
+            res = lower_cell(arch, sh, multi_pod=mp,
+                             seq_shard=not args.no_seq_shard,
+                             cfg_overrides=overrides or None)
+        except Exception as e:
+            traceback.print_exc()
+            res = {"arch": arch, "shape": sh,
+                   "mesh": "multi_pod_2x16x16" if mp else "single_pod_16x16",
+                   "status": "error", "error": repr(e)}
+            failures += 1
+        with open(path, "w") as f:
+            json.dump(res, f, indent=1)
+    print(f"done: {len(cells)} cells, {failures} failures")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

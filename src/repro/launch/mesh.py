@@ -1,0 +1,22 @@
+"""Production mesh definition (DESIGN.md §5).
+
+Defined as a FUNCTION so importing this module never touches jax device
+state — the dry-run sets ``XLA_FLAGS=--xla_force_host_platform_device_count``
+before first jax init, and nothing here may race that.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(model: int = 1, data: int | None = None):
+    """Small mesh over whatever devices exist (tests / CPU examples)."""
+    n = jax.device_count()
+    data = data or max(1, n // model)
+    return jax.make_mesh((data, model), ("data", "model"))

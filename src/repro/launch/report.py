@@ -1,0 +1,91 @@
+"""Aggregate dry-run artifacts into the EXPERIMENTS.md tables.
+
+    PYTHONPATH=src python -m repro.launch.report [--dir artifacts/dryrun]
+
+Emits: §Dry-run status table (both meshes) and the §Roofline table
+(single-pod, per the assignment) with the three terms, dominant bottleneck,
+and MODEL_FLOPS/HLO_FLOPs useful ratio.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load(directory: str):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(directory, "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def fmt_bytes(n):
+    return f"{n / 2**30:.2f}"
+
+
+def dryrun_table(cells):
+    rows = ["| arch | shape | mesh | status | compile s | args GiB/dev | "
+            "temp GiB/dev | coll MiB/dev | coll ops |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for c in cells:
+        if c["status"] == "skipped":
+            rows.append(f"| {c['arch']} | {c['shape']} | {c['mesh']} | "
+                        f"SKIP ({c['reason'][:40]}) | | | | | |")
+            continue
+        if c["status"] == "error":
+            rows.append(f"| {c['arch']} | {c['shape']} | {c['mesh']} | "
+                        f"**ERROR** | | | | | |")
+            continue
+        m = c["memory"]
+        r = c["roofline"]
+        rows.append(
+            f"| {c['arch']} | {c['shape']} | {c['mesh']} | ok | "
+            f"{c['compile_s']} | {fmt_bytes(m.get('argument_size_in_bytes', 0))} | "
+            f"{fmt_bytes(m.get('temp_size_in_bytes', 0))} | "
+            f"{r['coll_bytes'] / 2**20:.1f} | {r['coll_breakdown']['count']} |")
+    return "\n".join(rows)
+
+
+def roofline_table(cells, mesh="single_pod_16x16"):
+    rows = ["| arch | shape | compute s | memory s | memory(kernel) s | "
+            "collective s | dominant | roofline frac | frac(kernel) | "
+            "MODEL/HLO |",
+            "|---|---|---|---|---|---|---|---|---|---|"]
+    for c in cells:
+        if c.get("mesh") != mesh or c["status"] != "ok":
+            continue
+        r = c["roofline"]
+        mk = r.get("memory_kernel_s", r["memory_s"])
+        bound = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        bound_k = max(r["compute_s"], mk, r["collective_s"])
+        frac = r["compute_s"] / bound if bound else 0.0
+        frac_k = r["compute_s"] / bound_k if bound_k else 0.0
+        rows.append(
+            f"| {c['arch']} | {c['shape']} | {r['compute_s']:.3e} | "
+            f"{r['memory_s']:.3e} | {mk:.3e} | {r['collective_s']:.3e} | "
+            f"{r['dominant']} | {frac:.2f} | {frac_k:.2f} | "
+            f"{r['useful_ratio']:.2f} |")
+    return "\n".join(rows)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="artifacts/dryrun")
+    ap.add_argument("--mesh", default="single_pod_16x16")
+    args = ap.parse_args()
+    cells = load(args.dir)
+    ok = sum(1 for c in cells if c["status"] == "ok")
+    err = sum(1 for c in cells if c["status"] == "error")
+    skip = sum(1 for c in cells if c["status"] == "skipped")
+    print(f"## Dry-run status: {ok} ok / {err} error / {skip} skipped "
+          f"(of {len(cells)} cells)\n")
+    print(dryrun_table(cells))
+    print(f"\n## Roofline ({args.mesh})\n")
+    print(roofline_table(cells, args.mesh))
+
+
+if __name__ == "__main__":
+    main()

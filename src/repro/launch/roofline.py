@@ -1,0 +1,198 @@
+"""Roofline analysis from the compiled dry-run artifact (EXPERIMENTS.md §Roofline).
+
+Three terms per (arch × shape × mesh), all in seconds **per device** (the
+SPMD module is per-device, so per-device quantities over per-chip rates equal
+the global quantities over chip-aggregate rates):
+
+    compute    = HLO_FLOPs        / peak_FLOP/s          (197 TF/s bf16, v5e)
+    memory     = HLO_bytes        / HBM_bw               (819 GB/s)
+    collective = collective_bytes / link_bw              (~50 GB/s/link ICI)
+
+``HLO_FLOPs``/``HLO_bytes`` come from ``compiled.cost_analysis()``;
+collective bytes are NOT in cost_analysis, so we parse the optimized
+(post-SPMD) HLO text and sum **operand** sizes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute instruction.
+
+``MODEL_FLOPS`` uses the standard estimate: train 6·N·D, prefill/decode
+2·N·D (N = active params, D = tokens) — the ratio MODEL_FLOPS/HLO_FLOPs
+exposes remat/redundancy waste.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict
+
+# TPU v5e hardware constants (given in the assignment)
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(pred|s8|u8|s16|u16|f16|bf16|s32|u32|f32|s64|u64|"
+                       r"f64|c64|c128)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\(?[^(]*?\)?)\s*"
+                     r"([\w\-]+)\(")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-collective-op **operand** bytes from optimized (post-SPMD) HLO.
+
+    Optimized HLO prints operands by name only, so this runs two passes:
+    (1) build a name → output-shape-bytes map from every instruction
+    definition; (2) for each collective instruction, resolve its operand
+    names through the map.  ``-start``/``-done`` async pairs are counted
+    once (on the start).
+    """
+    defs: Dict[str, int] = {}
+    lines = hlo_text.splitlines()
+    for line in lines:
+        m = _DEF_RE.match(line.strip())
+        if not m:
+            continue
+        name, type_part = m.group(1), m.group(2)
+        total = 0
+        for dm in _SHAPE_RE.finditer(type_part):
+            total += _shape_bytes(dm.group(1), dm.group(2))
+        defs[name] = total
+
+    out = {op: 0 for op in _COLLECTIVES}
+    out["count"] = 0
+    for line in lines:
+        stripped = line.strip()
+        m = _DEF_RE.match(stripped)
+        if not m:
+            continue
+        opname = m.group(3)
+        base = None
+        for op in _COLLECTIVES:
+            if opname == op or opname == op + "-start":
+                base = op
+                break
+        if base is None:
+            continue
+        # operands: names inside the call parens (up to the first metadata kw)
+        args = stripped[stripped.index(opname + "(") + len(opname) + 1:]
+        depth, end = 1, 0
+        for i, ch in enumerate(args):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        arg_str = args[:end]
+        got = 0
+        for om in _OPERAND_RE.finditer(arg_str):
+            got += defs.get(om.group(1), 0)
+        if got == 0:  # fallback: use this instruction's output bytes
+            for dm in _SHAPE_RE.finditer(m.group(2)):
+                got += _shape_bytes(dm.group(1), dm.group(2))
+        out[base] += got
+        out["count"] += 1
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float                   # per-device flops (trip-count corrected)
+    bytes_accessed: float          # per-device HBM traffic (corrected proxy)
+    coll_bytes: float              # per-device collective operand bytes
+    coll_breakdown: Dict[str, int]
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops_total: float
+    hlo_flops_total: float
+    useful_ratio: float
+    raw_cost_flops: float          # uncorrected cost_analysis (loops ×1)
+    raw_cost_bytes: float
+    resident_bytes: float = 0.0    # traffic that stays in VMEM with kernels
+    memory_kernel_s: float = 0.0   # memory term with Pallas-kernel credit
+
+    def to_json(self):
+        return dataclasses.asdict(self)
+
+
+def analyze(compiled, *, chips: int, model_flops_total: float) -> Roofline:
+    """Roofline terms from the compiled artifact.
+
+    NOTE: ``cost_analysis()`` visits while bodies ONCE (verified:
+    scan(matmul, 10) reports one matmul), so scan-structured models would be
+    undercounted ~num_layers×.  The primary numbers therefore come from
+    :mod:`repro.launch.hlo_accounting` — a per-computation HLO walk that
+    multiplies by ``known_trip_count`` — with the raw cost_analysis values
+    kept alongside for reference.
+    """
+    from repro.launch.hlo_accounting import analyze_hlo
+
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):       # older API returns [dict]
+        cost = cost[0]
+    raw_flops = float(cost.get("flops", 0.0))
+    raw_bytes = float(cost.get("bytes accessed", 0.0))
+    hlo = compiled.as_text()
+    acc = analyze_hlo(hlo)
+    flops = max(acc["flops"], raw_flops)
+    byts = max(acc["bytes"], raw_bytes)
+    coll = {k: acc[k] for k in _COLLECTIVES}
+    coll["count"] = acc["coll_count"]
+    cbytes = float(acc["coll_bytes"])
+
+    compute_s = flops / PEAK_FLOPS
+    memory_s = byts / HBM_BW
+    collective_s = cbytes / ICI_BW
+    # kernel credit: traffic inside flash/fused-chunk kernel scopes stays in
+    # VMEM on TPU (kernels/attention.py — validated vs the same oracle the
+    # jnp path implements); the kernel's own HBM I/O (q,k,v in / ctx out) is
+    # a small fraction of its internal tile traffic and is bounded by the
+    # non-resident remainder, so the credited term subtracts resident bytes.
+    resident = float(acc.get("resident_bytes", 0.0))
+    memory_kernel_s = max(byts - resident, 0.0) / HBM_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    hlo_total = flops * chips
+    ratio = model_flops_total / hlo_total if hlo_total else 0.0
+    return Roofline(
+        flops=flops, bytes_accessed=byts, coll_bytes=cbytes,
+        coll_breakdown=coll, compute_s=compute_s, memory_s=memory_s,
+        collective_s=collective_s, dominant=dominant,
+        model_flops_total=model_flops_total, hlo_flops_total=hlo_total,
+        useful_ratio=ratio, raw_cost_flops=raw_flops,
+        raw_cost_bytes=raw_bytes, resident_bytes=resident,
+        memory_kernel_s=memory_kernel_s)
+
+
+def model_flops(cfg, shape) -> float:
+    """6·N·D (train) / 2·N·D (inference), N = active params."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        d = shape.global_batch * shape.seq_len
+        return 6.0 * n * d
+    if shape.kind == "prefill":
+        d = shape.global_batch * shape.seq_len
+        return 2.0 * n * d
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch

@@ -1,0 +1,74 @@
+"""Training driver: ``python -m repro.launch.train --arch <id> [...]``.
+
+Runs the real training loop (synthetic or file corpus) on whatever devices
+exist, with checkpoint/restart, preemption handling, and the straggler
+watchdog wired in.  ``--smoke`` selects the reduced config (CPU-runnable);
+the full configs are exercised through the dry-run.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import get_config, reduced_config
+from repro.data.pipeline import make_source
+from repro.launch.mesh import make_local_mesh
+from repro.parallel.sharding import default_rules
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-72b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--per-device-batch", type=int, default=8)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--optimizer", default="adamw",
+                    choices=["adamw", "shampoo"])
+    ap.add_argument("--compression", default="none",
+                    choices=["none", "bf16", "int8"])
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--data", default="synthetic")
+    ap.add_argument("--data-path", default=None)
+    ap.add_argument("--model-parallel", type=int, default=1)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = reduced_config(cfg)
+    rules = None
+    if jax.device_count() > 1:
+        mesh = make_local_mesh(model=args.model_parallel)
+        rules = default_rules(mesh, seq_shard=False)
+
+    if args.data == "synthetic":
+        source = make_source("synthetic", vocab_size=cfg.vocab_size,
+                             seq_len=args.seq_len)
+    else:
+        source = make_source("file", path=args.data_path,
+                             vocab_size=cfg.vocab_size, seq_len=args.seq_len)
+
+    tc = TrainerConfig(
+        steps=args.steps,
+        per_device_batch=args.per_device_batch,
+        microbatches=args.microbatches,
+        optimizer=args.optimizer,
+        compression=args.compression,
+        peak_lr=args.lr,
+        ckpt_dir=args.ckpt_dir,
+        ckpt_every=args.ckpt_every,
+    )
+    trainer = Trainer(cfg, tc, source, rules=rules)
+    print(f"training {cfg.name}: {cfg.param_count():,} params, "
+          f"{jax.device_count()} devices")
+    trainer.run()
+
+
+if __name__ == "__main__":
+    main()

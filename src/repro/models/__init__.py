@@ -1,0 +1,1 @@
+"""LM zoo substrate: layers, block families, unified model API."""

@@ -1,0 +1,80 @@
+"""Unified model API: one surface for all 10 architectures.
+
+* ``init_params(cfg, key)``          → (params, logical_axes)
+* ``apply_train(cfg, params, batch)``→ logits  (teacher-forced full sequence)
+* ``loss_fn(cfg, params, batch)``    → scalar xent
+* ``init_decode_cache(cfg, batch, max_len[, enc_len])``
+* ``prefill(cfg, params, batch)``    → (last-token logits, cache)
+* ``decode_step(cfg, params, cache, tokens, pos)`` → (logits, cache)
+
+``batch`` for decoder-only archs: {"tokens", "labels"}; for enc-dec (audio):
+{"enc_embed", "tokens", "labels"} — the frontend stub supplies ``enc_embed``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.models import whisper as W
+
+
+def init_params(cfg: ModelConfig, key):
+    if cfg.is_enc_dec:
+        return W.init_params(cfg, key)
+    return T.init_params(cfg, key)
+
+
+def apply_train(cfg: ModelConfig, params, batch):
+    if cfg.is_enc_dec:
+        memory = W.encode(cfg, params, batch["enc_embed"])
+        return W.decode_train(cfg, params, memory, batch["tokens"])
+    logits, _ = T.forward(cfg, params, batch["tokens"], mode="train")
+    return logits
+
+
+def loss_fn(cfg: ModelConfig, params, batch):
+    if batch.get("mask") is not None:
+        logits = apply_train(cfg, params, batch)
+        return L.softmax_xent(logits, batch["labels"], batch.get("mask"))
+    # fused chunked unembed+xent: never materializes (B, S, V) f32 logits
+    if cfg.is_enc_dec:
+        memory = W.encode(cfg, params, batch["enc_embed"])
+        hidden = W.decode_train(cfg, params, memory, batch["tokens"],
+                                return_hidden=True)
+    else:
+        hidden, _ = T.forward(cfg, params, batch["tokens"], mode="train",
+                              return_hidden=True)
+    return L.chunked_unembed_xent(cfg, params["embed"], hidden,
+                                  batch["labels"])
+
+
+def init_decode_cache(cfg: ModelConfig, batch: int, max_len: int,
+                      enc_len: int = 0):
+    if cfg.is_enc_dec:
+        return W.init_cache(cfg, batch, max_len, enc_len)
+    return T.init_cache(cfg, batch, max_len)
+
+
+def prefill(cfg: ModelConfig, params, batch, max_len: int):
+    """Build the cache from a prompt; returns (last-token logits, cache)."""
+    if cfg.is_enc_dec:
+        return W.prefill(cfg, params, batch["enc_embed"], batch["tokens"],
+                         max_len=max_len)
+    tokens = batch["tokens"]
+    cache = T.init_cache(cfg, tokens.shape[0], max_len)
+    logits, cache = T.forward(cfg, params, tokens, cache=cache, mode="prefill")
+    return logits[:, -1:], cache
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, pos):
+    """One new token per sequence.  tokens: (B, 1); pos: scalar int32."""
+    if cfg.is_enc_dec:
+        return W.decode_step(cfg, params, cache, tokens, pos)
+    b = tokens.shape[0]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    logits, cache = T.forward(cfg, params, tokens, positions=positions,
+                              cache=cache, mode="decode")
+    return logits, cache

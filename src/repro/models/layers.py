@@ -1,0 +1,351 @@
+"""Shared neural layers for the LM zoo (pure functions, explicit params).
+
+Everything is written against plain pytrees (no flax): ``init_*`` functions
+return ``(params, logical_axes)`` where ``logical_axes`` mirrors the param
+tree with logical-axis tuples consumed by :mod:`repro.parallel.sharding`.
+
+Numerics: params live in ``cfg.dtype`` (bf16 default), norms/softmax/router
+run in f32, matmuls accumulate f32 (MXU semantics).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.parallel.sharding import shard
+
+
+def truncated_normal(key, shape, dtype, scale):
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+def rmsnorm(x: jnp.ndarray, weight: jnp.ndarray, *, eps: float = 1e-6,
+            plus_one: bool = False) -> jnp.ndarray:
+    """RMSNorm; ``plus_one`` is the Gemma (1 + w) convention."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    xf = xf * lax.rsqrt(var + eps)
+    w = weight.astype(jnp.float32)
+    if plus_one:
+        w = 1.0 + w
+    return (xf * w).astype(x.dtype)
+
+
+def layernorm(x, weight, bias, *, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    xf = (xf - mu) * lax.rsqrt(var + eps)
+    return (xf * weight.astype(jnp.float32)
+            + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def apply_norm(cfg, x, w):
+    if cfg.norm_type == "rmsnorm":
+        return rmsnorm(x, w, eps=cfg.norm_eps, plus_one=False)
+    if cfg.norm_type == "rmsnorm_plus_one":
+        return rmsnorm(x, w, eps=cfg.norm_eps, plus_one=True)
+    if cfg.norm_type == "layernorm":
+        return layernorm(x, w["scale"], w["bias"], eps=cfg.norm_eps)
+    raise ValueError(cfg.norm_type)
+
+
+def init_norm(cfg, dtype):
+    if cfg.norm_type == "layernorm":
+        return ({"scale": jnp.ones((cfg.d_model,), dtype),
+                 "bias": jnp.zeros((cfg.d_model,), dtype)},
+                {"scale": ("embed",), "bias": ("embed",)})
+    init = jnp.zeros if cfg.norm_type == "rmsnorm_plus_one" else jnp.ones
+    return init((cfg.d_model,), dtype), ("embed",)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope(x: jnp.ndarray, positions: jnp.ndarray, *,
+         theta: float = 10000.0) -> jnp.ndarray:
+    """Rotary embedding.  x: (..., S, d); positions: (..., S) or (S,)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freq     # (..., S, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA; chunked online-softmax for long context)
+# ---------------------------------------------------------------------------
+_NEG_INF = -1e30
+
+
+def _attn_mask(qpos, kpos, *, causal: bool, window: Optional[int]):
+    """(Sq, Sk) bool mask from global positions."""
+    m = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    if causal:
+        m &= qpos[:, None] >= kpos[None, :]
+    if window is not None:
+        m &= kpos[None, :] > (qpos[:, None] - window)
+    return m
+
+
+def chunked_attention(q, k, v, qpos, kpos, *, causal=True, window=None,
+                      chunk_q: int = 512, chunk_k: int = 1024,
+                      scale: Optional[float] = None):
+    """Memory-O(chunk²) attention.  q: (B,G,Hg,Sq,d), k/v: (B,G,Sk,d).
+
+    Outer ``lax.map`` over Q chunks, inner ``lax.scan`` over KV chunks with
+    online softmax — the pure-JAX analogue of the flash kernel (compiles on
+    any backend; autodiff works; remat-friendly), so the dry-run can lower it
+    on CPU while ``kernels/attention.py`` is the TPU hot-spot twin.
+    """
+    b, g, hg, sq, d = q.shape
+    sk = k.shape[2]
+    dv = v.shape[-1]
+    if scale is None:
+        scale = d ** -0.5
+    cq = min(chunk_q, sq)
+    ck = min(chunk_k, sk)
+    assert sq % cq == 0 and sk % ck == 0, (sq, cq, sk, ck)
+    nq, nk = sq // cq, sk // ck
+
+    qc = q.reshape(b, g, hg, nq, cq, d).transpose(3, 0, 1, 2, 4, 5)
+    qpc = qpos.reshape(nq, cq)
+    kc = k.reshape(b, g, nk, ck, d).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(b, g, nk, ck, dv).transpose(2, 0, 1, 3, 4)
+    kpc = kpos.reshape(nk, ck)
+
+    def q_block(args):
+        qb, qp = args                                    # (b,g,hg,cq,d), (cq,)
+
+        @partial(jax.checkpoint, prevent_cse=False)      # recompute p in bwd
+        def kv_step(carry, kv):
+            with jax.named_scope("attn_tile"):
+                m_prev, l_prev, acc = carry
+                kb, vb, kp = kv
+                s = jnp.einsum("bghqd,bgkd->bghqk", qb.astype(jnp.float32),
+                               kb.astype(jnp.float32),
+                               preferred_element_type=jnp.float32) * scale
+                mask = _attn_mask(qp, kp, causal=causal, window=window)
+                s = jnp.where(mask[None, None, None], s, _NEG_INF)
+                m_cur = jnp.max(s, axis=-1, keepdims=True)
+                m_new = jnp.maximum(m_prev, m_cur)
+                p = jnp.exp(s - m_new)
+                alpha = jnp.exp(m_prev - m_new)
+                l_new = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+                acc = acc * alpha + jnp.einsum(
+                    "bghqk,bgkv->bghqv", p, vb.astype(jnp.float32),
+                    preferred_element_type=jnp.float32)
+                return (m_new, l_new, acc), None
+
+        m0 = jnp.full((b, g, hg, cq, 1), _NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, g, hg, cq, 1), jnp.float32)
+        a0 = jnp.zeros((b, g, hg, cq, dv), jnp.float32)
+        (m, l, acc), _ = lax.scan(kv_step, (m0, l0, a0), (kc, vc, kpc))
+        l = jnp.where(l == 0.0, 1.0, l)
+        return (acc / l).astype(q.dtype)
+
+    # nested remat: never keep (cq × ck) score tensors across the backward
+    out = lax.map(jax.checkpoint(q_block, prevent_cse=False), (qc, qpc))
+    return out.transpose(1, 2, 3, 0, 4, 5).reshape(b, g, hg, sq, dv)
+
+
+def decode_attention(q, k, v, kpos, qpos, *, window=None,
+                     scale: Optional[float] = None):
+    """Single-position attention over a cache.  q: (B,G,Hg,1,d); k/v: (B,G,Sk,d).
+
+    ``kpos`` (B, Sk) carries per-slot validity: slots with kpos < 0 or
+    kpos > qpos are masked (handles ring buffers and unfilled cache).
+    """
+    d = q.shape[-1]
+    if scale is None:
+        scale = d ** -0.5
+    s = jnp.einsum("bghqd,bgkd->bghqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32),
+                   preferred_element_type=jnp.float32) * scale
+    valid = (kpos >= 0) & (kpos[:, :] <= qpos[:, None])
+    if window is not None:
+        valid &= kpos > (qpos[:, None] - window)
+    s = jnp.where(valid[:, None, None, None, :], s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bghqk,bgkv->bghqv", p, v.astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)
+
+
+def init_attention(cfg, key, dtype):
+    h, kv, hd, d = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim, cfg.d_model
+    ks = jax.random.split(key, 4)
+    scale = d ** -0.5
+    p = {
+        "wq": truncated_normal(ks[0], (d, h * hd), dtype, scale),
+        "wk": truncated_normal(ks[1], (d, kv * hd), dtype, scale),
+        "wv": truncated_normal(ks[2], (d, kv * hd), dtype, scale),
+        "wo": truncated_normal(ks[3], (h * hd, d), dtype, (h * hd) ** -0.5),
+    }
+    ax = {"wq": ("embed", "heads"), "wk": ("embed", "kv_heads"),
+          "wv": ("embed", "kv_heads"), "wo": ("heads", "embed")}
+    if cfg.qkv_bias:
+        p.update(bq=jnp.zeros((h * hd,), dtype), bk=jnp.zeros((kv * hd,), dtype),
+                 bv=jnp.zeros((kv * hd,), dtype))
+        ax.update(bq=("heads",), bk=("kv_heads",), bv=("kv_heads",))
+    if cfg.qk_norm:
+        p.update(q_norm=jnp.ones((hd,), dtype), k_norm=jnp.ones((hd,), dtype))
+        ax.update(q_norm=(None,), k_norm=(None,))
+    return p, ax
+
+
+def attention_qkv(cfg, p, x, positions):
+    """Project to (q, k, v) grouped for GQA: q (B,G,Hg,S,hd); k/v (B,G,S,hd)."""
+    b, s, _ = x.shape
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    hg = h // kv
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"])
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"])
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, kv, hg, hd).transpose(0, 2, 3, 1, 4)  # (B,G,Hg,S,hd)
+    k = k.reshape(b, s, kv, hd).transpose(0, 2, 1, 3)          # (B,G,S,hd)
+    v = v.reshape(b, s, kv, hd).transpose(0, 2, 1, 3)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], eps=cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], eps=cfg.norm_eps)
+    if cfg.rope_theta:
+        q = rope(q, positions[:, None, None], theta=cfg.rope_theta)
+        k = rope(k, positions[:, None], theta=cfg.rope_theta)
+    return q, k, v
+
+
+def attention_out(cfg, p, ctx):
+    """ctx: (B,G,Hg,S,hd) → (B,S,D)."""
+    b, g, hg, s, hd = ctx.shape
+    ctx = ctx.transpose(0, 3, 1, 2, 4).reshape(b, s, g * hg * hd)
+    return jnp.einsum("bsh,hd->bsd", ctx, p["wo"])
+
+
+def attention_block(cfg, p, x, positions, *, causal=True, window=None):
+    q, k, v = attention_qkv(cfg, p, x, positions)
+    ctx = chunked_attention(q, k, v, positions[0], positions[0],
+                            causal=causal, window=window,
+                            chunk_q=cfg.attn_chunk_q, chunk_k=cfg.attn_chunk_k)
+    ctx = shard(ctx, ("batch", "kv_heads", None, None, None))
+    return attention_out(cfg, p, ctx)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+def init_mlp(cfg, key, dtype, d_ff: Optional[int] = None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_up": truncated_normal(ks[1], (d, f), dtype, d ** -0.5),
+        "w_down": truncated_normal(ks[2], (f, d), dtype, f ** -0.5),
+    }
+    ax = {"w_up": ("embed", "mlp"), "w_down": ("mlp", "embed")}
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        p["w_gate"] = truncated_normal(ks[0], (d, f), dtype, d ** -0.5)
+        ax["w_gate"] = ("embed", "mlp")
+    return p, ax
+
+
+def mlp_block(cfg, p, x):
+    if cfg.mlp_type == "gelu":                      # plain 2-layer (whisper)
+        h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, p["w_up"]))
+    else:
+        act = {"swiglu": jax.nn.silu, "geglu": jax.nn.gelu}[cfg.mlp_type]
+        g = jnp.einsum("bsd,df->bsf", x, p["w_gate"])
+        u = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+        h = act(g) * u
+    h = shard(h, ("batch", None, "mlp"))
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+def init_embed(cfg, key, dtype):
+    ks = jax.random.split(key, 2)
+    p = {"tok": truncated_normal(ks[0], (cfg.vocab_size, cfg.d_model),
+                                 dtype, 1.0)}
+    ax = {"tok": ("vocab", "embed")}
+    if not cfg.tie_embeddings:
+        p["unembed"] = truncated_normal(
+            ks[1], (cfg.d_model, cfg.vocab_size), dtype, cfg.d_model ** -0.5)
+        ax["unembed"] = ("embed", "vocab")
+    return p, ax
+
+
+def embed(cfg, p, tokens):
+    x = jnp.take(p["tok"], tokens, axis=0)
+    if cfg.scale_embed:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    return x
+
+
+def unembed(cfg, p, x):
+    w = p["tok"].T if cfg.tie_embeddings else p["unembed"]
+    logits = jnp.einsum("bsd,dv->bsv", x, w,
+                        preferred_element_type=jnp.float32)
+    return shard(logits, ("batch", None, "vocab"))
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+def softmax_xent(logits: jnp.ndarray, labels: jnp.ndarray,
+                 mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Token-mean cross entropy in f32."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def chunked_unembed_xent(cfg, embed_params, hidden, labels, *,
+                         chunk: int = 512) -> jnp.ndarray:
+    """Fused unembed + xent, scanned over sequence chunks.
+
+    Never materializes the full (B, S, V) f32 logits — the dominant temp
+    buffer for 150k–256k vocabs.  Each chunk's logits are recomputed in the
+    backward (``jax.checkpoint``).
+    """
+    w = embed_params["tok"].T if cfg.tie_embeddings else embed_params["unembed"]
+    b, s, d = hidden.shape
+    c = min(chunk, s)
+    if s % c:
+        return softmax_xent(
+            jnp.einsum("bsd,dv->bsv", hidden, w,
+                       preferred_element_type=jnp.float32), labels)
+    n = s // c
+    hs = hidden.reshape(b, n, c, d).transpose(1, 0, 2, 3)
+    ys = labels.reshape(b, n, c).transpose(1, 0, 2)
+
+    @partial(jax.checkpoint, prevent_cse=False)
+    def body(acc, xs):
+        h, y = xs
+        logits = jnp.einsum("bcd,dv->bcv", h, w,
+                            preferred_element_type=jnp.float32)
+        logits = shard(logits, ("batch", None, "vocab"))
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, y[..., None], axis=-1)[..., 0]
+        return acc + jnp.sum(logz - gold), None
+
+    total, _ = lax.scan(body, jnp.zeros((), jnp.float32), (hs, ys))
+    return total / (b * s)

@@ -1,0 +1,184 @@
+"""Mixture-of-Experts layer: top-k routing, sorted-scatter dispatch, EP shard.
+
+Dispatch is the sort-based ("megablocks-lite") formulation: flatten the
+token×slot assignments, sort by expert id, compute each assignment's rank
+within its expert by subtracting the expert's start offset, drop beyond
+capacity, and scatter into the (E, C, D) expert buffer.  Everything is plain
+``argsort``/``cumsum``/gather/scatter — linear memory in tokens (no
+(T, E, C) one-hot), shardable with experts on the ``model`` axis (EP).
+
+Supports shared experts (DeepSeek-MoE: 2 shared + 64 routed top-6;
+Llama-4-Scout: 1 shared + 16 routed top-1) and leading dense layers.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import truncated_normal
+from repro.parallel.sharding import shard
+
+
+def init_moe(cfg, key, dtype):
+    m = cfg.moe
+    d, fe = cfg.d_model, m.d_ff_expert
+    ks = jax.random.split(key, 5)
+    e = m.num_experts
+    p = {
+        "router": truncated_normal(ks[0], (d, e), jnp.float32, d ** -0.5),
+        "w_gate": truncated_normal(ks[1], (e, d, fe), dtype, d ** -0.5),
+        "w_up": truncated_normal(ks[2], (e, d, fe), dtype, d ** -0.5),
+        "w_down": truncated_normal(ks[3], (e, fe, d), dtype, fe ** -0.5),
+    }
+    ed = "embed" if cfg.moe_fsdp else None
+    ax = {
+        "router": ("embed", None),
+        "w_gate": ("experts", ed, "mlp"),
+        "w_up": ("experts", ed, "mlp"),
+        "w_down": ("experts", "mlp", ed),
+    }
+    if m.num_shared:
+        fs = fe * m.num_shared
+        kss = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "w_gate": truncated_normal(kss[0], (d, fs), dtype, d ** -0.5),
+            "w_up": truncated_normal(kss[1], (d, fs), dtype, d ** -0.5),
+            "w_down": truncated_normal(kss[2], (fs, d), dtype, fs ** -0.5),
+        }
+        ax["shared"] = {"w_gate": ("embed", "mlp"), "w_up": ("embed", "mlp"),
+                        "w_down": ("mlp", "embed")}
+    return p, ax
+
+
+def _expert_ffn(cfg, p, xs):
+    """xs: (E, C, D) → (E, C, D), batched over experts (EP-sharded einsum)."""
+    act = {"swiglu": jax.nn.silu, "geglu": jax.nn.gelu}[cfg.mlp_type]
+    g = jnp.einsum("ecd,edf->ecf", xs, p["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", xs, p["w_up"])
+    h = act(g) * u
+    h = shard(h, ("experts", None, "mlp"))
+    return jnp.einsum("ecf,efd->ecd", h, p["w_down"])
+
+
+def moe_block_local(cfg, p, x):
+    """Row-local dispatch: every sort/gather/scatter keeps the batch dim.
+
+    The plain (flat) dispatch sorts the *global* token list, which forces
+    GSPMD to all-gather the (T, D) token matrix on every MoE layer.  Here
+    dispatch runs per batch row — all ops are batched on the sharded batch
+    dim, so tokens never cross data shards; the only collectives left are
+    the expert-weight traffic of the (b,e,c,d)×(e,d,f) einsums (EP/FSDP).
+    Capacity is per-row (C = S·k/E·factor), a slightly stricter drop rule —
+    recorded in DESIGN.md; the no-drop small-batch path is unchanged.
+    """
+    m = cfg.moe
+    b, s, d = x.shape
+    e, k = m.num_experts, m.top_k
+    cap = int(s * k / e * m.capacity_factor + 0.5)
+    cap = max(cap, 1)
+    if s * k <= 8192:
+        cap = s * k
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, eid = jax.lax.top_k(probs, k)                    # (b, s, k)
+    if k > 1:
+        gate = gate / jnp.sum(gate, axis=-1, keepdims=True)
+
+    eid_flat = eid.reshape(b, s * k)
+    order = jnp.argsort(eid_flat, axis=-1, stable=True)    # per row
+    tok_of = order // k                                    # (b, s·k)
+    eid_sorted = jnp.take_along_axis(eid_flat, order, axis=-1)
+    counts = jax.vmap(lambda r: jnp.bincount(r, length=e))(eid_flat)
+    starts = jnp.concatenate(
+        [jnp.zeros((b, 1), counts.dtype), jnp.cumsum(counts, -1)[:, :-1]], -1)
+    rank = jnp.arange(s * k)[None] - jnp.take_along_axis(
+        starts, eid_sorted, axis=-1)
+    keep = rank < cap
+    dest = eid_sorted * cap + jnp.where(keep, rank, 0)
+
+    src = jnp.where(keep[..., None],
+                    jnp.take_along_axis(x.reshape(b, s, d),
+                                        tok_of[..., None], axis=1), 0)
+    buf = jnp.zeros((b, e * cap, d), x.dtype)
+    buf = jax.vmap(lambda bb, dd, ss: bb.at[dd].add(ss))(buf, dest, src)
+    buf = shard(buf.reshape(b, e, cap, d), ("batch", "experts", None, None))
+
+    act = {"swiglu": jax.nn.silu, "geglu": jax.nn.gelu}[cfg.mlp_type]
+    g = jnp.einsum("becd,edf->becf", buf, p["w_gate"])
+    u = jnp.einsum("becd,edf->becf", buf, p["w_up"])
+    h = shard(act(g) * u, ("batch", "experts", None, "mlp"))
+    out_buf = jnp.einsum("becf,efd->becd", h, p["w_down"]).reshape(
+        b, e * cap, d)
+
+    gathered = jnp.where(keep[..., None],
+                         jnp.take_along_axis(out_buf, dest[..., None], 1), 0)
+    gate_sorted = jnp.take_along_axis(gate.reshape(b, s * k), order, -1)
+    contrib = gathered * gate_sorted[..., None].astype(x.dtype)
+    out = jnp.zeros((b, s, d), x.dtype)
+    out = jax.vmap(lambda oo, tt, cc: oo.at[tt].add(cc))(out, tok_of, contrib)
+
+    if m.num_shared:
+        sp = p["shared"]
+        flat = x.reshape(b * s, d)
+        hsh = act(flat @ sp["w_gate"]) * (flat @ sp["w_up"])
+        out = out + (hsh @ sp["w_down"]).reshape(b, s, d)
+    return out
+
+
+def moe_block(cfg, p, x):
+    """x: (B, S, D) → (B, S, D)."""
+    if cfg.moe_dispatch == "local":
+        return moe_block_local(cfg, p, x)
+    m = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    e, k = m.num_experts, m.top_k
+    cap = int(t * k / e * m.capacity_factor + 0.5)
+    cap = max(cap, 1)
+    # small token counts (decode steps): no-drop capacity so the serving
+    # path is exactly consistent with teacher forcing
+    if t * k <= 8192:
+        cap = t * k
+
+    flat = x.reshape(t, d)
+    # ---- router (f32) ----------------------------------------------------
+    logits = jnp.einsum("td,de->te", flat.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, eid = jax.lax.top_k(probs, k)                    # (t, k)
+    if m.top_k > 1:
+        gate = gate / jnp.sum(gate, axis=-1, keepdims=True)
+
+    # ---- sorted-scatter dispatch ------------------------------------------
+    eid_flat = eid.reshape(t * k)
+    order = jnp.argsort(eid_flat, stable=True)             # assignments by expert
+    tok_of = order // k                                    # source token
+    eid_sorted = eid_flat[order]
+    counts = jnp.bincount(eid_flat, length=e)              # per-expert load
+    starts = jnp.concatenate([jnp.zeros((1,), counts.dtype),
+                              jnp.cumsum(counts)[:-1]])
+    rank = jnp.arange(t * k) - starts[eid_sorted]          # rank within expert
+    keep = rank < cap
+    dest = eid_sorted * cap + jnp.where(keep, rank, 0)
+
+    buf = jnp.zeros((e * cap, d), x.dtype)
+    src = jnp.where(keep[:, None], flat[tok_of], 0)
+    buf = buf.at[dest].add(src)                            # dropped slots -> 0
+    buf = shard(buf.reshape(e, cap, d), ("experts", None, None))
+
+    # ---- expert computation (EP) ------------------------------------------
+    out_buf = _expert_ffn(cfg, p, buf).reshape(e * cap, d)
+
+    # ---- combine -----------------------------------------------------------
+    gathered = jnp.where(keep[:, None], out_buf[dest], 0)  # (t·k, d)
+    gate_sorted = gate.reshape(t * k)[order]
+    contrib = gathered * gate_sorted[:, None].astype(x.dtype)
+    out = jnp.zeros((t, d), x.dtype).at[tok_of].add(contrib)
+
+    # ---- shared experts (dense path) --------------------------------------
+    if m.num_shared:
+        sp = p["shared"]
+        act = {"swiglu": jax.nn.silu, "geglu": jax.nn.gelu}[cfg.mlp_type]
+        h = act(flat @ sp["w_gate"]) * (flat @ sp["w_up"])
+        out = out + h @ sp["w_down"]
+    return out.reshape(b, s, d)

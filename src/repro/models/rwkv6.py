@@ -1,0 +1,221 @@
+"""RWKV6 "Finch" blocks — attention-free, data-dependent decay (arXiv:2404.05892).
+
+TimeMix implements the WKV6 recurrence with matrix-valued per-head state
+``S ∈ (dk, dv)``:
+
+    out_t = r_tᵀ·(S_t + diag(u)·k_t v_tᵀ)
+    S_{t+1} = diag(w_t)·S_t + k_t v_tᵀ          (w_t data-dependent, per-channel)
+
+Training/prefill uses the **chunked parallel form** (the paper's technique
+mapped to the TPU: the sequential state recurrence is the "panel", the
+intra-chunk matmuls are the "trailing update" — a chunk-level look-ahead
+pipeline; DESIGN.md §6): within a chunk of length c the decay products
+telescope, so inter-chunk contributions are one GEMM against the carried
+state and intra-chunk contributions are a masked (c × c) score GEMM.  Decode
+carries ``S`` exactly — O(1) state, which is why rwkv6 runs ``long_500k``.
+
+Faithfulness note: we keep Finch's hallmark (data-dependent decay ``w_t``
+via a low-rank MLP) and use static token-shift mixing coefficients
+(RWKV5-style) instead of the ddlerp LoRA stack — recorded in DESIGN.md.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import apply_norm, init_norm, truncated_normal
+
+_CLIP = 80.0   # exp-arg guard: safe horizon = CLIP/|log w| tokens per chunk
+#                (init-scale |log w|≈0.55 → horizon ≈145 > chunk=128; pairs
+#                beyond the horizon would otherwise clip both factors and
+#                contribute O(1) garbage instead of ~e^-80)
+
+
+def init_rwkv_block(cfg, key, dtype):
+    d = cfg.d_model
+    h = cfg.num_heads
+    dk = d // h
+    f = cfg.d_ff
+    lora = 64
+    ks = jax.random.split(key, 12)
+    ln1, ln1_ax = init_norm(cfg, dtype)
+    ln2, ln2_ax = init_norm(cfg, dtype)
+    p = {
+        "ln1": ln1, "ln2": ln2,
+        "mu": 0.5 * jnp.ones((5, d), dtype),            # r,k,v,w,g shifts
+        "wr": truncated_normal(ks[0], (d, d), dtype, d ** -0.5),
+        "wk": truncated_normal(ks[1], (d, d), dtype, d ** -0.5),
+        "wv": truncated_normal(ks[2], (d, d), dtype, d ** -0.5),
+        "wg": truncated_normal(ks[3], (d, d), dtype, d ** -0.5),
+        "wo": truncated_normal(ks[4], (d, d), dtype, d ** -0.5),
+        "w0": jnp.full((d,), -0.6, jnp.float32),        # base decay ≈ exp(-e^-0.6)
+        "wa": truncated_normal(ks[5], (d, lora), jnp.float32, d ** -0.5),
+        "wb": truncated_normal(ks[6], (lora, d), jnp.float32, lora ** -0.5),
+        "u": truncated_normal(ks[7], (h, dk), jnp.float32, 0.5),
+        "ln_x": jnp.ones((d,), dtype),                  # per-head group norm
+        # channel-mix
+        "mu_c": 0.5 * jnp.ones((2, d), dtype),
+        "ck": truncated_normal(ks[8], (d, f), dtype, d ** -0.5),
+        "cv": truncated_normal(ks[9], (f, d), dtype, f ** -0.5),
+        "cr": truncated_normal(ks[10], (d, d), dtype, d ** -0.5),
+    }
+    ax = {
+        "ln1": ln1_ax, "ln2": ln2_ax,
+        "mu": (None, "embed"), "wr": ("embed", "heads"), "wk": ("embed", "heads"),
+        "wv": ("embed", "heads"), "wg": ("embed", "heads"), "wo": ("heads", "embed"),
+        "w0": ("heads",), "wa": ("embed", None), "wb": (None, "heads"),
+        "u": ("heads", None), "ln_x": ("embed",),
+        "mu_c": (None, "embed"), "ck": ("embed", "mlp"), "cv": ("mlp", "embed"),
+        "cr": ("embed", "heads"),
+    }
+    return p, ax
+
+
+def _token_shift(x, prev):
+    """x_{t-1} along seq; ``prev`` (B, 1, D) supplies the t=0 value."""
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def _heads(x, h):
+    b, s, d = x.shape
+    return x.reshape(b, s, h, d // h).transpose(0, 2, 1, 3)   # (B,H,S,dk)
+
+
+def _decay(p, xw):
+    """Data-dependent per-channel decay w_t ∈ (0,1); returns log(w) (f32)."""
+    dd = jnp.tanh(xw.astype(jnp.float32) @ p["wa"]) @ p["wb"]
+    return -jnp.exp(p["w0"] + dd)                              # log w
+
+
+def _wkv_chunk(carry, inp, *, u):
+    """One chunk of the parallel WKV6 form.  Shapes: (B,H,c,dk/dv)."""
+    with jax.named_scope("wkv_tile"):
+        return _wkv_chunk_inner(carry, inp, u=u)
+
+
+def _wkv_chunk_inner(carry, inp, *, u):
+    s = carry                                                  # (B,H,dk,dv)
+    r, k, v, logw = inp
+    cum = jnp.cumsum(logw, axis=2)                             # inclusive
+    cum_excl = cum - logw
+    r_in = r * jnp.exp(jnp.clip(cum_excl, -_CLIP, _CLIP))
+    k_out = k * jnp.exp(jnp.clip(-cum, -_CLIP, _CLIP))
+    # inter-chunk: contributions of the carried state
+    inter = jnp.einsum("bhtd,bhdv->bhtv", r_in, s,
+                       preferred_element_type=jnp.float32)
+    # intra-chunk: causal masked scores (strictly lower) + bonus diagonal
+    scores = jnp.einsum("bhtd,bhsd->bhts", r_in, k_out,
+                        preferred_element_type=jnp.float32)
+    c = r.shape[2]
+    tri = jnp.tril(jnp.ones((c, c), bool), -1)
+    scores = jnp.where(tri[None, None], scores, 0.0)
+    bonus = jnp.einsum("bhtd,bhtd->bht", r, u[None, :, None, :] * k,
+                       preferred_element_type=jnp.float32)
+    intra = jnp.einsum("bhts,bhsv->bhtv", scores, v,
+                       preferred_element_type=jnp.float32)
+    intra = intra + bonus[..., None] * v
+    # state propagation to the chunk end
+    wtot = cum[:, :, -1:, :]                                   # (B,H,1,dk)
+    k_fwd = k * jnp.exp(jnp.clip(wtot - cum, -_CLIP, _CLIP))
+    s_new = (jnp.exp(jnp.clip(wtot, -_CLIP, _CLIP)).squeeze(2)[..., None] * s
+             + jnp.einsum("bhtd,bhtv->bhdv", k_fwd, v,
+                          preferred_element_type=jnp.float32))
+    return s_new, inter + intra
+
+
+def wkv6_chunked(r, k, v, logw, u, s0, chunk: int):
+    """Full-sequence WKV6.  r,k,v,logw: (B,H,S,dk); returns (out, s_final)."""
+    b, h, s, dk = r.shape
+    dv = v.shape[-1]
+    c = min(chunk, s)
+    s_orig = s
+    if s % c:  # pad tail: r,k,v = 0 (no output/kv), logw = 0 (decay 1)
+        pad = c - s % c
+        zpad = lambda x: jnp.pad(x, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        r, k, v, logw = zpad(r), zpad(k), zpad(v), zpad(logw)
+        s = s + pad
+    n = s // c
+
+    def split(x):
+        return x.reshape(b, h, n, c, x.shape[-1]).transpose(2, 0, 1, 3, 4)
+
+    xs = (split(r.astype(jnp.float32)), split(k.astype(jnp.float32)),
+          split(v.astype(jnp.float32)), split(logw))
+    s_fin, outs = lax.scan(lambda cr, i: _wkv_chunk(cr, i, u=u), s0, xs)
+    out = outs.transpose(1, 2, 0, 3, 4).reshape(b, h, s, dv)
+    return out[:, :, :s_orig], s_fin
+
+
+def wkv6_step(r, k, v, logw, u, s):
+    """Exact single-token recurrence.  r,k,v,logw: (B,H,dk)."""
+    kv = k[..., :, None] * v[..., None, :]                     # (B,H,dk,dv)
+    out = jnp.einsum("bhd,bhdv->bhv", r, s + u[None, :, :, None] * kv,
+                     preferred_element_type=jnp.float32)
+    s_new = jnp.exp(logw)[..., None] * s + kv
+    return out, s_new
+
+
+def _group_norm_heads(x, scale, h, eps=1e-5):
+    """Per-head LayerNorm of the WKV output (RWKV convention)."""
+    b, hh, s, dv = x.shape
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(axis=-1, keepdims=True)
+    var = xf.var(axis=-1, keepdims=True)
+    xf = (xf - mu) * lax.rsqrt(var + eps)
+    xf = xf.transpose(0, 2, 1, 3).reshape(b, s, hh * dv)
+    return xf * scale.astype(jnp.float32)
+
+
+def rwkv_block(cfg, p, x, state=None):
+    """Full RWKV6 block (TimeMix + ChannelMix).  x: (B, S, D).
+
+    ``state`` (decode): dict(s, x_tm, x_cm); None for training (zero init).
+    Returns (y, new_state).
+    """
+    b, s, d = x.shape
+    h = cfg.num_heads
+    dk = d // h
+    if state is None:
+        prev_tm = jnp.zeros((b, 1, d), x.dtype)
+        prev_cm = jnp.zeros((b, 1, d), x.dtype)
+        s0 = jnp.zeros((b, h, dk, dk), jnp.float32)
+    else:
+        prev_tm, prev_cm, s0 = state["x_tm"], state["x_cm"], state["s"]
+
+    # ---- TimeMix ----------------------------------------------------------
+    x_res = x
+    x_in = apply_norm(cfg, x, p["ln1"])
+    xprev = _token_shift(x_in, prev_tm)
+    mix = lambda i: x_in + (xprev - x_in) * p["mu"][i]
+    xr, xk, xv, xw, xg = (mix(i) for i in range(5))
+    r = _heads(xr @ p["wr"], h)
+    k = _heads(xk @ p["wk"], h)
+    v = _heads(xv @ p["wv"], h)
+    g = jax.nn.silu(xg @ p["wg"])
+    logw = _heads(_decay(p, xw), h)
+
+    if s == 1 and state is not None:
+        out, s_new = wkv6_step(r[:, :, 0].astype(jnp.float32),
+                               k[:, :, 0].astype(jnp.float32),
+                               v[:, :, 0].astype(jnp.float32),
+                               logw[:, :, 0], p["u"], s0)
+        out = out[:, :, None, :]
+    else:
+        out, s_new = wkv6_chunked(r, k, v, logw, p["u"], s0, cfg.rwkv_chunk)
+
+    y = _group_norm_heads(out, p["ln_x"], h)
+    x_mid = x_res + (y * g.astype(jnp.float32)).astype(x.dtype) @ p["wo"]
+
+    # ---- ChannelMix --------------------------------------------------------
+    cm_in = apply_norm(cfg, x_mid, p["ln2"])
+    xprev = _token_shift(cm_in, prev_cm)
+    xk_c = cm_in + (xprev - cm_in) * p["mu_c"][0]
+    xr_c = cm_in + (xprev - cm_in) * p["mu_c"][1]
+    kk = jnp.square(jax.nn.relu(xk_c @ p["ck"]))
+    out_x = x_mid + jax.nn.sigmoid(xr_c @ p["cr"]) * (kk @ p["cv"])
+
+    new_state = {"x_tm": x_in[:, -1:],         # TimeMix shift: normed input
+                 "x_cm": cm_in[:, -1:],        # ChannelMix shift: normed mid
+                 "s": s_new}
+    return out_x, new_state

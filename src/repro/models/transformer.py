@@ -1,0 +1,299 @@
+"""Decoder backbone: block dispatch, scan-over-segments, KV/recurrent caches.
+
+One code path serves all decoder-only families (dense / vlm / moe / ssm /
+hybrid).  Layers are grouped into :class:`repro.configs.base.Segment` runs of
+identical structure; each segment's params are stacked on a leading axis and
+executed with ``lax.scan`` (+ ``jax.remat`` when ``cfg.remat``) — an 80-layer
+model lowers to a compact HLO while activation memory stays ≈ one layer.
+
+Cache model (decode):
+* ``attn``  — dense KV cache (B, G, W, hd) ×2 + per-slot positions (B, W).
+* ``local`` — same, W = window, ring-buffer indexed by ``pos % W``.
+* ``rg``    — RG-LRU hidden state + conv tail.
+* ``rwkv``  — WKV matrix state + token-shift tails.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.ad_checkpoint import checkpoint_name
+
+from repro.configs.base import LayerSpec, ModelConfig, Segment, layer_plan
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import rglru as RG
+from repro.models import rwkv6 as RWKV
+from repro.parallel.sharding import shard
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Per-layer init
+# ---------------------------------------------------------------------------
+def init_layer(cfg: ModelConfig, spec: LayerSpec, key):
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 2)
+    p, ax = {}, {}
+    if spec.block in ("attn", "local"):
+        p["norm1"], ax["norm1"] = L.init_norm(cfg, dt)
+        p["attn"], ax["attn"] = L.init_attention(cfg, ks[0], dt)
+    elif spec.block == "rg":
+        p["norm1"], ax["norm1"] = L.init_norm(cfg, dt)
+        p["rg"], ax["rg"] = RG.init_rg_block(cfg, ks[0], dt)
+    elif spec.block == "rwkv":
+        p["rwkv"], ax["rwkv"] = RWKV.init_rwkv_block(cfg, ks[0], dt)
+    else:
+        raise ValueError(spec.block)
+    if spec.mlp == "dense":
+        p["norm2"], ax["norm2"] = L.init_norm(cfg, dt)
+        p["mlp"], ax["mlp"] = L.init_mlp(cfg, ks[1], dt)
+    elif spec.mlp == "moe":
+        p["norm2"], ax["norm2"] = L.init_norm(cfg, dt)
+        p["mlp"], ax["mlp"] = MOE.init_moe(cfg, ks[1], dt)
+    return p, ax
+
+
+def _stack_axes(ax):
+    """Prepend the scan ('layers') axis to every logical-axis tuple."""
+    return jax.tree.map(
+        lambda t: (None,) + t,
+        ax,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+
+
+# ---------------------------------------------------------------------------
+# Caches
+# ---------------------------------------------------------------------------
+def init_layer_cache(cfg: ModelConfig, spec: LayerSpec, batch: int,
+                     max_len: int):
+    dt = _dtype(cfg)
+    g, hd = cfg.num_kv_heads, cfg.head_dim
+    if spec.block in ("attn", "local"):
+        w = max_len if spec.block == "attn" else min(cfg.local_window, max_len)
+        return {
+            "k": jnp.zeros((batch, g, w, hd), dt),
+            "v": jnp.zeros((batch, g, w, hd), dt),
+            "pos": jnp.full((batch, w), -1, jnp.int32),
+        }
+    if spec.block == "rg":
+        dr = cfg.d_rnn or cfg.d_model
+        return {"h": jnp.zeros((batch, dr), jnp.float32),
+                "conv": jnp.zeros((batch, cfg.conv_width - 1, dr), dt)}
+    if spec.block == "rwkv":
+        h = cfg.num_heads
+        dk = cfg.d_model // h
+        return {"s": jnp.zeros((batch, h, dk, dk), jnp.float32),
+                "x_tm": jnp.zeros((batch, 1, cfg.d_model), dt),
+                "x_cm": jnp.zeros((batch, 1, cfg.d_model), dt)}
+    raise ValueError(spec.block)
+
+
+# ---------------------------------------------------------------------------
+# Per-layer forward (train / prefill / decode)
+# ---------------------------------------------------------------------------
+def _attn_train(cfg, spec, p, x, positions):
+    window = cfg.local_window if spec.block == "local" else None
+    h = L.apply_norm(cfg, x, p["norm1"])
+    q, k, v = L.attention_qkv(cfg, p["attn"], h, positions)
+    q = checkpoint_name(q, "attn_q")
+    k = checkpoint_name(k, "attn_k")
+    v = checkpoint_name(v, "attn_v")
+    if cfg.attn_gather_kv:
+        # hoist the seq all-gather of K/V out of the chunk loops: one gather
+        # per layer instead of one per (q-chunk × kv-chunk) — queries stay
+        # seq-sharded (FlashDecoding-style sequence parallelism).
+        k = shard(k, ("batch", "kv_heads", None, None))
+        v = shard(v, ("batch", "kv_heads", None, None))
+        q = shard(q, ("batch", "kv_heads", None, "seq", None))
+    ctx = L.chunked_attention(q, k, v, positions[0], positions[0],
+                              causal=True, window=window,
+                              chunk_q=cfg.attn_chunk_q,
+                              chunk_k=cfg.attn_chunk_k)
+    ctx = checkpoint_name(ctx, "attn_out")
+    return x + L.attention_out(cfg, p["attn"], ctx)
+
+
+def _cache_store(cache, k_new, v_new, positions, *, ring: bool):
+    """Write S new kv pairs at their slots.  k_new: (B,G,S,hd)."""
+    w = cache["k"].shape[2]
+    s = k_new.shape[2]
+    if not ring:
+        start = positions[0, 0]
+        k = lax.dynamic_update_slice_in_dim(cache["k"], k_new, start, axis=2)
+        v = lax.dynamic_update_slice_in_dim(cache["v"], v_new, start, axis=2)
+        pos = lax.dynamic_update_slice_in_dim(
+            cache["pos"], positions.astype(jnp.int32), start, axis=1)
+        return {"k": k, "v": v, "pos": pos}
+    # ring buffer: keep the last `w` positions at slot pos % w
+    if s >= w:
+        k_last, v_last = k_new[:, :, -w:], v_new[:, :, -w:]
+        p_last = positions[:, -w:]
+        slots = p_last[0] % w                            # (w,)
+        k = cache["k"].at[:, :, slots].set(k_last)
+        v = cache["v"].at[:, :, slots].set(v_last)
+        pos = cache["pos"].at[:, slots].set(p_last.astype(jnp.int32))
+        return {"k": k, "v": v, "pos": pos}
+    slots = positions[0] % w
+    k = cache["k"].at[:, :, slots].set(k_new)
+    v = cache["v"].at[:, :, slots].set(v_new)
+    pos = cache["pos"].at[:, slots].set(positions.astype(jnp.int32))
+    return {"k": k, "v": v, "pos": pos}
+
+
+def _attn_prefill(cfg, spec, p, x, positions, cache):
+    window = cfg.local_window if spec.block == "local" else None
+    h = L.apply_norm(cfg, x, p["norm1"])
+    q, k, v = L.attention_qkv(cfg, p["attn"], h, positions)
+    ctx = L.chunked_attention(q, k, v, positions[0], positions[0],
+                              causal=True, window=window,
+                              chunk_q=cfg.attn_chunk_q,
+                              chunk_k=cfg.attn_chunk_k)
+    cache = _cache_store(cache, k, v, positions, ring=spec.block == "local")
+    return x + L.attention_out(cfg, p["attn"], ctx), cache
+
+
+def _attn_decode(cfg, spec, p, x, positions, cache):
+    window = cfg.local_window if spec.block == "local" else None
+    h = L.apply_norm(cfg, x, p["norm1"])
+    q, k_new, v_new = L.attention_qkv(cfg, p["attn"], h, positions)
+    cache = _cache_store(cache, k_new, v_new, positions,
+                         ring=spec.block == "local")
+    ctx = L.decode_attention(q, cache["k"], cache["v"], cache["pos"],
+                             positions[:, 0], window=window)
+    return x + L.attention_out(cfg, p["attn"], ctx), cache
+
+
+def layer_forward(cfg, spec, p, x, positions, cache=None, mode="train"):
+    """Returns (x, new_cache)."""
+    if spec.block in ("attn", "local"):
+        if mode == "train":
+            x = _attn_train(cfg, spec, p, x, positions)
+        elif mode == "prefill":
+            x, cache = _attn_prefill(cfg, spec, p, x, positions, cache)
+        else:
+            x, cache = _attn_decode(cfg, spec, p, x, positions, cache)
+    elif spec.block == "rg":
+        h = L.apply_norm(cfg, x, p["norm1"])
+        out, st = RG.rg_block(cfg, p["rg"], h, cache if mode == "decode" else None)
+        x = x + out
+        cache = st if mode != "train" else cache
+    elif spec.block == "rwkv":
+        x, st = RWKV.rwkv_block(cfg, p["rwkv"], x,
+                                cache if mode == "decode" else None)
+        cache = st if mode != "train" else cache
+
+    if spec.mlp == "dense":
+        x = x + L.mlp_block(cfg, p["mlp"], L.apply_norm(cfg, x, p["norm2"]))
+    elif spec.mlp == "moe":
+        x = x + MOE.moe_block(cfg, p["mlp"], L.apply_norm(cfg, x, p["norm2"]))
+    x = shard(x, ("batch", "seq", "act_embed"))
+    return x, cache
+
+
+# ---------------------------------------------------------------------------
+# Whole-model init / forward
+# ---------------------------------------------------------------------------
+def init_params(cfg: ModelConfig, key):
+    """Returns (params, logical_axes): segment-stacked block params + embeds."""
+    dt = _dtype(cfg)
+    segs = layer_plan(cfg)
+    keys = jax.random.split(key, len(segs) + 2)
+    params, axes = {}, {}
+    params["embed"], axes["embed"] = L.init_embed(cfg, keys[-1], dt)
+    params["final_norm"], axes["final_norm"] = L.init_norm(cfg, dt)
+    for si, seg in enumerate(segs):
+        seg_p, seg_ax = {}, {}
+        pos_keys = jax.random.split(keys[si], len(seg.pattern))
+        for pi, spec in enumerate(seg.pattern):
+            if seg.repeats == 1:
+                pp, aa = init_layer(cfg, spec, pos_keys[pi])
+            else:
+                layer_keys = jax.random.split(pos_keys[pi], seg.repeats)
+                pp = jax.vmap(lambda k, s=spec: init_layer(cfg, s, k)[0]
+                              )(layer_keys)
+                aa = _stack_axes(init_layer(cfg, spec, pos_keys[pi])[1])
+            seg_p[f"p{pi}"] = pp
+            seg_ax[f"p{pi}"] = aa
+        params[f"seg{si}"] = seg_p
+        axes[f"seg{si}"] = seg_ax
+    return params, axes
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    segs = layer_plan(cfg)
+    cache = {}
+    for si, seg in enumerate(segs):
+        seg_c = {}
+        for pi, spec in enumerate(seg.pattern):
+            one = init_layer_cache(cfg, spec, batch, max_len)
+            if seg.repeats == 1:
+                seg_c[f"c{pi}"] = one
+            else:
+                seg_c[f"c{pi}"] = jax.tree.map(
+                    lambda x: jnp.broadcast_to(x, (seg.repeats,) + x.shape),
+                    one)
+        cache[f"seg{si}"] = seg_c
+    return cache
+
+
+def _segment_apply(cfg, seg: Segment, seg_p, x, positions, seg_c, mode):
+    """Run one segment; scan when repeats > 1."""
+    if seg.repeats == 1:
+        new_c = {}
+        for pi, spec in enumerate(seg.pattern):
+            x, c = layer_forward(cfg, spec, seg_p[f"p{pi}"], x, positions,
+                                 None if seg_c is None else seg_c[f"c{pi}"],
+                                 mode)
+            new_c[f"c{pi}"] = c
+        return x, (new_c if seg_c is not None else None)
+
+    def body(carry, xs):
+        x = carry
+        lp, lc = xs
+        new_lc = {}
+        for pi, spec in enumerate(seg.pattern):
+            x, c = layer_forward(cfg, spec, lp[f"p{pi}"], x, positions,
+                                 None if lc is None else lc[f"c{pi}"], mode)
+            new_lc[f"c{pi}"] = c
+        return x, (new_lc if lc is not None else None)
+
+    if cfg.remat:
+        if cfg.remat_policy == "dots":
+            policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        elif cfg.remat_policy == "names":
+            policy = jax.checkpoint_policies.save_only_these_names(
+                "attn_q", "attn_k", "attn_v", "attn_out")
+        else:
+            policy = None
+        body = jax.checkpoint(body, prevent_cse=False, policy=policy)
+    x, new_c = lax.scan(body, x, (seg_p, seg_c))
+    return x, new_c
+
+
+def forward(cfg: ModelConfig, params, tokens, *, positions=None,
+            cache=None, mode="train", return_hidden=False):
+    """tokens: (B, S) → logits (B, S, V).  Returns (logits, new_cache)."""
+    b, s = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    x = L.embed(cfg, params["embed"], tokens)
+    x = shard(x, ("batch", "seq", "act_embed"))
+    new_cache = {}
+    for si, seg in enumerate(layer_plan(cfg)):
+        seg_c = None if cache is None else cache[f"seg{si}"]
+        x, nc = _segment_apply(cfg, seg, params[f"seg{si}"], x, positions,
+                               seg_c, mode)
+        new_cache[f"seg{si}"] = nc
+    x = L.apply_norm(cfg, x, params["final_norm"])
+    if return_hidden:
+        return x, (new_cache if cache is not None else None)
+    logits = L.unembed(cfg, params["embed"], x)
+    return logits, (new_cache if cache is not None else None)

@@ -1,0 +1,2 @@
+"""Optimizers: AdamW, DMF-Shampoo (the paper's factorizations as a first-class
+training feature), gradient compression, LR schedules."""

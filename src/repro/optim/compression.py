@@ -1,0 +1,65 @@
+"""Gradient compression for the collective term (DESIGN.md §7).
+
+At pod scale the gradient reduce-scatter is a fixed per-step collective cost
+that stragglers amplify.  Two standard compressors, both with error feedback
+so compression noise does not bias the trajectory:
+
+* ``bf16``  — 2× volume; error feedback captures the rounding residual.
+* ``int8``  — 4× volume; per-tensor absmax scaling + stochastic rounding.
+
+Usage: wrap grads *before* the optimizer; the residual buffer rides in the
+train state.  Compression applies to the cross-replica reduction only — the
+math below simulates the quantize→reduce→dequantize path so the single-host
+tests exercise the same numerics the pod would see.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class GradCompression:
+    mode: str = "none"             # none | bf16 | int8
+    error_feedback: bool = True
+
+    def init(self, params):
+        if self.mode == "none" or not self.error_feedback:
+            return None
+        return jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+    def compress(self, grads, residual, key=None):
+        """Returns (compressed-dequantized grads, new residual)."""
+        if self.mode == "none":
+            return grads, residual
+
+        def one(g, r, k):
+            gf = g.astype(jnp.float32)
+            if r is not None:
+                gf = gf + r
+            if self.mode == "bf16":
+                q = gf.astype(jnp.bfloat16).astype(jnp.float32)
+            elif self.mode == "int8":
+                scale = jnp.max(jnp.abs(gf)) / 127.0 + 1e-30
+                x = gf / scale
+                if k is not None:  # stochastic rounding
+                    noise = jax.random.uniform(k, x.shape) - 0.5
+                    q = jnp.clip(jnp.round(x + noise), -127, 127) * scale
+                else:
+                    q = jnp.clip(jnp.round(x), -127, 127) * scale
+            else:
+                raise ValueError(self.mode)
+            new_r = (gf - q) if (r is not None) else None
+            return q.astype(g.dtype), new_r
+
+        leaves, treedef = jax.tree.flatten(grads)
+        res = (treedef.flatten_up_to(residual) if residual is not None
+               else [None] * len(leaves))
+        keys = (list(jax.random.split(key, len(leaves)))
+                if key is not None else [None] * len(leaves))
+        out, new_res = zip(*[one(g, r, k) for g, r, k in zip(leaves, res, keys)])
+        new_residual = (treedef.unflatten(list(new_res))
+                        if residual is not None else None)
+        return treedef.unflatten(list(out)), new_residual

@@ -1,0 +1,1 @@
+"""Distribution substrate: mesh axes, sharding rules, collective helpers."""

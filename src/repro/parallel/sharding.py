@@ -1,0 +1,143 @@
+"""Sharding rules: logical axis names → mesh axes (MaxText-style, trimmed).
+
+Model code annotates activations/params with *logical* axis tuples, e.g.
+``shard(x, ("batch", "seq", "embed"))``.  The active :class:`Rules` maps each
+logical axis to a mesh axis (or None = replicated).  Without an active rules
+context every annotation is a no-op, so the same model code runs single-device
+tests, the multi-pod dry-run, and real training unchanged.
+
+Default layout (DESIGN.md §5):
+
+* ``batch``      → ("pod", "data")  — DP/FSDP axes
+* ``embed``      → "data"           — FSDP weight shard (all-gathered per layer)
+* ``heads``/``mlp``/``vocab``/``experts`` → "model" — TP/EP shard
+* ``seq``        → "model"          — SP at layer boundaries for long contexts
+* ``kv_heads``   → "model"
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Mapping, Optional, Sequence, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[str, Sequence[str], None]
+
+
+@dataclasses.dataclass(frozen=True)
+class Rules:
+    mesh: Mesh
+    table: Mapping[str, MeshAxes]
+
+    def _resolve(self, name: Optional[str], dim: Optional[int]):
+        """Mesh axes for one logical dim, with divisibility fallback.
+
+        If the dim size is not divisible by the full axis product, axes are
+        dropped from the right (("pod","data") → ("pod",) → None) — small
+        dims (kv_heads=8 on model=16, odd vocabs) degrade to replication
+        instead of failing the lowering.
+        """
+        ax = self.table.get(name) if name else None
+        if ax is None:
+            return None
+        axes = tuple(ax) if isinstance(ax, (list, tuple)) else (ax,)
+        axes = tuple(a for a in axes if a in self.mesh.axis_names)
+        if dim is None:
+            return axes if len(axes) > 1 else (axes[0] if axes else None)
+        while axes:
+            prod = 1
+            for a in axes:
+                prod *= self.mesh.shape[a]
+            if dim % prod == 0:
+                return axes if len(axes) > 1 else axes[0]
+            axes = axes[:-1]
+        return None
+
+    def spec(self, logical: Sequence[Optional[str]],
+             shape: Optional[Sequence[int]] = None) -> P:
+        dims = shape if shape is not None else [None] * len(logical)
+        parts = []
+        used: set = set()
+        for n, d in zip(logical, dims):
+            r = self._resolve(n, d)
+            axes = (r,) if isinstance(r, str) else (r or ())
+            axes = tuple(a for a in axes if a not in used)   # no dup axes
+            used.update(axes)
+            if not axes:
+                parts.append(None)
+            elif len(axes) == 1:
+                parts.append(axes[0])
+            else:
+                parts.append(axes)
+        return P(*parts)
+
+    def sharding(self, logical: Sequence[Optional[str]],
+                 shape: Optional[Sequence[int]] = None) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(logical, shape))
+
+
+def default_rules(mesh: Mesh, *, seq_shard: bool = True) -> Rules:
+    """The standard FSDP(data[,pod]) × TP(model) layout."""
+    dp = tuple(ax for ax in ("pod", "data") if ax in mesh.axis_names)
+    table = {
+        "batch": dp,
+        "embed": "data" if "data" in mesh.axis_names else None,
+        "act_embed": None,
+        "heads": "model",
+        "kv_heads": "model",
+        "mlp": "model",
+        "vocab": "model",
+        "experts": "model",
+        "seq": "model" if seq_shard else None,
+        "qkv": None,
+        "layers": None,
+        "conv": None,
+        "state": "model",
+    }
+    return Rules(mesh=mesh, table=table)
+
+
+_ACTIVE = threading.local()
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[Rules]):
+    prev = getattr(_ACTIVE, "rules", None)
+    _ACTIVE.rules = rules
+    try:
+        yield rules
+    finally:
+        _ACTIVE.rules = prev
+
+
+def active_rules() -> Optional[Rules]:
+    return getattr(_ACTIVE, "rules", None)
+
+
+def shard(x: jax.Array, logical: Sequence[Optional[str]]) -> jax.Array:
+    """Annotate ``x`` with the sharding for ``logical`` (no-op w/o rules)."""
+    rules = active_rules()
+    if rules is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, rules.sharding(logical, x.shape))
+
+
+def _is_axes(x):
+    return isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x)
+
+
+def param_sharding(rules: Rules, logical_tree, shapes_tree=None) -> object:
+    """Map a pytree of logical-axis tuples (+ shapes) to NamedShardings."""
+    if shapes_tree is None:
+        return jax.tree.map(lambda ax: rules.sharding(ax), logical_tree,
+                            is_leaf=_is_axes)
+    ax_leaves = jax.tree.leaves(logical_tree, is_leaf=_is_axes)
+    sh_leaves, treedef = jax.tree.flatten(shapes_tree)
+    assert len(ax_leaves) == len(sh_leaves), (len(ax_leaves), len(sh_leaves))
+    out = [rules.sharding(a, s.shape) for a, s in zip(ax_leaves, sh_leaves)]
+    return jax.tree_util.tree_unflatten(treedef, out)

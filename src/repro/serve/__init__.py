@@ -1,0 +1,1 @@
+"""Serving runtime: batched prefill + decode engine."""

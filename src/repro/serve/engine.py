@@ -1,0 +1,89 @@
+"""Batched serving engine: prefill + aligned-batch decode with KV cache.
+
+``serve_step`` (the thing the decode dry-run shapes lower) is one jit'd
+decode call: one new token per sequence against the standing cache.  The
+engine wraps it with a request queue and greedy/temperature sampling.
+Aligned batching (all slots share a position counter) keeps the cache
+updates dense; slot refill happens at batch boundaries — per-slot continuous
+batching is a queueing-layer extension, not a kernel change (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import api
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    batch_size: int = 8
+    max_len: int = 512
+    temperature: float = 0.0       # 0 = greedy
+    eos_id: int = -1               # -1 = never stop early
+    seed: int = 0
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, sc: ServeConfig):
+        self.cfg, self.params, self.sc = cfg, params, sc
+        self._prefill = jax.jit(
+            lambda p, batch: api.prefill(cfg, p, batch, max_len=sc.max_len))
+        self._decode = jax.jit(
+            lambda p, cache, tok, pos: api.decode_step(cfg, p, cache, tok, pos))
+        self.key = jax.random.PRNGKey(sc.seed)
+
+    def _sample(self, logits):
+        if self.sc.temperature <= 0:
+            return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        self.key, sub = jax.random.split(self.key)
+        return jax.random.categorical(
+            sub, logits[:, -1].astype(jnp.float32) / self.sc.temperature,
+        ).astype(jnp.int32)
+
+    def generate(self, prompts: np.ndarray, max_new_tokens: int,
+                 enc_embed: Optional[np.ndarray] = None):
+        """prompts: (B, S) int32 (aligned).  Returns (tokens, stats)."""
+        b, s = prompts.shape
+        assert b == self.sc.batch_size, (b, self.sc.batch_size)
+        batch = {"tokens": jnp.asarray(prompts)}
+        if self.cfg.is_enc_dec:
+            batch["enc_embed"] = jnp.asarray(enc_embed)
+
+        t0 = time.perf_counter()
+        logits, cache = self._prefill(self.params, batch)
+        tok = self._sample(logits)
+        jax.block_until_ready(tok)
+        t_prefill = time.perf_counter() - t0
+
+        out = [np.asarray(tok)]
+        done = np.zeros((b,), bool)
+        t1 = time.perf_counter()
+        steps = 0
+        for i in range(max_new_tokens - 1):
+            pos = jnp.int32(s + i)
+            logits, cache = self._decode(self.params, cache, tok[:, None], pos)
+            tok = self._sample(logits)
+            steps += 1
+            cur = np.asarray(tok)
+            out.append(cur)
+            if self.sc.eos_id >= 0:
+                done |= cur == self.sc.eos_id
+                if done.all():
+                    break
+        jax.block_until_ready(tok)
+        t_decode = time.perf_counter() - t1
+        tokens = np.stack(out, axis=1)
+        stats = {
+            "prefill_s": t_prefill,
+            "decode_s": t_decode,
+            "decode_tok_per_s": b * max(steps, 1) / max(t_decode, 1e-9),
+        }
+        return tokens, stats

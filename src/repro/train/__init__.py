@@ -1,0 +1,1 @@
+"""Training runtime: trainer loop, checkpointing, fault tolerance."""

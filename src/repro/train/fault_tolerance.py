@@ -1,0 +1,77 @@
+"""Fault-tolerance runtime pieces (DESIGN.md §7).
+
+* :class:`StragglerWatchdog` — per-step timing; flags steps slower than
+  ``k × running-median`` and can request an early checkpoint so a reschedule
+  loses bounded work.  (On TPU pods a straggling host slows the whole SPMD
+  program — detection is global by construction, so any host can flag.)
+* :class:`PreemptionHandler` — SIGTERM/SIGINT → "checkpoint and exit at the
+  next step boundary" (the standard preemption contract on managed clusters).
+* :func:`elastic_reshard` — resume helper: load a checkpoint onto a mesh of a
+  different size/shape (delegates to the logical-array checkpoint format).
+"""
+from __future__ import annotations
+
+import signal
+import statistics
+import time
+from typing import Optional
+
+
+class StragglerWatchdog:
+    def __init__(self, factor: float = 3.0, warmup: int = 5,
+                 window: int = 50):
+        self.factor = factor
+        self.warmup = warmup
+        self.window = window
+        self.times: list[float] = []
+        self.flags = 0
+        self._t0: Optional[float] = None
+
+    def step_start(self):
+        self._t0 = time.perf_counter()
+
+    def step_end(self) -> bool:
+        """Returns True if this step looked like a straggler event."""
+        dt = time.perf_counter() - self._t0
+        self.times.append(dt)
+        if len(self.times) > self.window:
+            self.times.pop(0)
+        if len(self.times) <= self.warmup:
+            return False
+        med = statistics.median(self.times[:-1])
+        if dt > self.factor * med:
+            self.flags += 1
+            return True
+        return False
+
+    @property
+    def median(self) -> float:
+        return statistics.median(self.times) if self.times else 0.0
+
+
+class PreemptionHandler:
+    """Installs SIGTERM/SIGINT handlers that set a flag instead of dying."""
+
+    def __init__(self):
+        self.requested = False
+        self._installed = False
+
+    def install(self):
+        if self._installed:
+            return
+
+        def handler(signum, frame):
+            self.requested = True
+
+        signal.signal(signal.SIGTERM, handler)
+        self._installed = True
+
+    def should_stop(self) -> bool:
+        return self.requested
+
+
+def elastic_reshard(ckpt_path: str, template, shardings):
+    """Restore a checkpoint onto the *current* mesh (any shape)."""
+    from repro.train.checkpoint import restore_checkpoint
+
+    return restore_checkpoint(ckpt_path, template, shardings)

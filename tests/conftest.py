@@ -1,0 +1,8 @@
+import os
+import sys
+
+# Make `import repro` work regardless of how pytest is invoked.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# NOTE: no XLA_FLAGS here on purpose — smoke tests and benches must see the
+# real single CPU device; only launch/dryrun.py forces 512 host devices.

@@ -1,0 +1,85 @@
+"""Cholesky + QR + LDLT + GJ + band reduction: variant invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import band_reduction as B
+from repro.core import cholesky as C
+from repro.core import gauss_jordan as G
+from repro.core import ldlt as D
+from repro.core import qr as Q
+from repro.core.lookahead import get_variant
+
+jax.config.update("jax_enable_x64", True)
+
+
+def _rand(n, seed=0):
+    return jnp.asarray(np.random.default_rng(seed).standard_normal((n, n)))
+
+
+def _spd(n, seed=0):
+    a = _rand(n, seed)
+    return a @ a.T + n * jnp.eye(n)
+
+
+@pytest.mark.parametrize("variant", ["mtb", "rtm", "la", "la_mb"])
+@pytest.mark.parametrize("n,b", [(64, 16), (96, 32), (100, 32)])
+def test_cholesky_variants(variant, n, b):
+    if variant == "la_mb" and n % b:
+        pytest.skip("fused kernel path assumes uniform panels")
+    s = _spd(n, seed=n)
+    tol = 1e-10 if variant != "la_mb" else 1e-4
+    l = get_variant("cholesky", variant)(s, b)
+    err = jnp.linalg.norm(s - l @ l.T) / jnp.linalg.norm(s)
+    assert err < tol, float(err)
+
+
+@pytest.mark.parametrize("variant", ["mtb", "rtm", "la"])
+@pytest.mark.parametrize("n,b", [(64, 16), (96, 32), (100, 32)])
+def test_qr_variants(variant, n, b):
+    a = _rand(n, seed=n + 1)
+    packed, taus = get_variant("qr", variant)(a, b)
+    q = Q.form_q(packed, taus, b)
+    r = jnp.triu(packed)
+    assert jnp.linalg.norm(a - q @ r) / jnp.linalg.norm(a) < 1e-10
+    assert jnp.linalg.norm(q.T @ q - jnp.eye(n)) < 1e-9
+
+
+def test_qr_rectangular_tall():
+    m, n, b = 128, 64, 32
+    a = jnp.asarray(np.random.default_rng(5).standard_normal((m, n)))
+    packed, taus = Q.qr_blocked(a, b)
+    q = Q.form_q(packed, taus, b)
+    r = jnp.triu(packed)[:n]
+    assert jnp.linalg.norm(a - q[:, :n] @ r) / jnp.linalg.norm(a) < 1e-10
+
+
+@pytest.mark.parametrize("variant", ["mtb", "la"])
+def test_ldlt_variants(variant):
+    s = _spd(96, seed=11)
+    packed = get_variant("ldlt", variant)(s, 32)
+    l, d = D.unpack_ldlt(packed)
+    err = jnp.linalg.norm(s - l @ jnp.diag(d) @ l.T) / jnp.linalg.norm(s)
+    assert err < 1e-10
+
+
+@pytest.mark.parametrize("variant", ["mtb", "la"])
+def test_gauss_jordan_variants(variant):
+    s = _spd(96, seed=13)
+    inv = get_variant("gauss_jordan", variant)(s, 32)
+    err = jnp.linalg.norm(s @ inv - jnp.eye(96)) / jnp.linalg.norm(s)
+    assert err < 1e-10
+
+
+@pytest.mark.parametrize("variant", ["mtb", "la"])
+def test_band_reduction_variants(variant):
+    n, w = 96, 32
+    a = _rand(n, seed=17)
+    band = get_variant("band_reduction", variant)(a, w)
+    i, j = np.indices((n, n))
+    outside = (j < i) | (j > i + w)
+    assert float(jnp.abs(band * outside).max()) < 1e-10
+    sv_ref = jnp.linalg.svd(a, compute_uv=False)
+    sv = jnp.linalg.svd(band, compute_uv=False)
+    assert float(jnp.abs(sv - sv_ref).max() / sv_ref.max()) < 1e-10

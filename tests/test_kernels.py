@@ -1,0 +1,160 @@
+"""Pallas kernel sweeps vs the pure-jnp oracles (interpret=True on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.attention import flash_attention
+from repro.kernels.blis_gemm import blis_gemm, blis_gemm_accum, pick_blocks
+from repro.kernels.trsm import trsm_left_lower
+
+F32, BF16 = jnp.float32, jnp.bfloat16
+
+
+def _rand(shape, seed=0, dtype=F32):
+    x = np.random.default_rng(seed).standard_normal(shape).astype(np.float32)
+    return jnp.asarray(x, dtype)
+
+
+def _wc_lower(n, seed=0, unit=True, dtype=F32):
+    rng = np.random.default_rng(seed)
+    m = np.tril(rng.standard_normal((n, n))) * 0.1
+    np.fill_diagonal(m, 1.0 if unit else np.abs(rng.standard_normal(n)) + 1.0)
+    return jnp.asarray(m, dtype)
+
+
+# ---------------------------------------------------------------------------
+# BLIS GEMM: shape × dtype × block sweep
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype,tol", [(F32, 2e-4), (BF16, 2e-1)])
+@pytest.mark.parametrize("mnk", [(128, 128, 128), (256, 192, 320),
+                                 (100, 70, 130), (64, 512, 64)])
+def test_blis_gemm_sweep(mnk, dtype, tol):
+    m, n, k = mnk
+    a, b = _rand((m, k), 1, dtype), _rand((k, n), 2, dtype)
+    out = blis_gemm(a, b, blocks=(64, 128, 128), interpret=True)
+    expect = ref.gemm(a, b)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               atol=tol * k ** 0.5, rtol=tol)
+
+
+def test_blis_gemm_accum():
+    c, a, b = _rand((96, 80), 3), _rand((96, 64), 4), _rand((64, 80), 5)
+    out = blis_gemm_accum(c, a, b, alpha=-1.0, blocks=(32, 64, 64),
+                          interpret=True)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(ref.gemm_accum(c, a, b)),
+                               atol=1e-3)
+
+
+def test_pick_blocks_fits_vmem():
+    from repro.kernels.blis_gemm import VMEM_BUDGET_BYTES
+    for m, n, k in [(8192, 8192, 8192), (128, 65536, 128), (4096, 128, 4096)]:
+        bm, bn, bk = pick_blocks(m, n, k, jnp.float32)
+        fp = 2 * (bm * bk + bk * bn) * 4 + bm * bn * 4
+        assert fp <= VMEM_BUDGET_BYTES
+        assert bn % 128 == 0 and bk % 128 == 0 and bm % 8 == 0
+
+
+# ---------------------------------------------------------------------------
+# TRSM
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("unit", [True, False])
+@pytest.mark.parametrize("nb,n", [(32, 64), (64, 200), (128, 128)])
+def test_trsm_left(nb, n, unit):
+    l = _wc_lower(nb, seed=nb, unit=unit)
+    b = _rand((nb, n), 6)
+    x = trsm_left_lower(l, b, unit_diagonal=unit, interpret=True)
+    xr = ref.trsm_left_lower(l, b, unit_diagonal=unit)
+    rel = jnp.abs(x - xr).max() / (jnp.abs(xr).max() + 1e-30)
+    assert rel < 1e-5, float(rel)
+
+
+def test_trsm_right_lower_t():
+    l = _wc_lower(48, seed=9, unit=False)
+    b = _rand((100, 48), 7)
+    x = ops.trsm(l, b, side="right", lower=True, trans=True,
+                 unit_diagonal=False)
+    xr = ref.trsm_right_lower_t(l, b)
+    rel = jnp.abs(x - xr).max() / (jnp.abs(xr).max() + 1e-30)
+    assert rel < 1e-5
+
+
+# ---------------------------------------------------------------------------
+# Panel factorizations
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("m,nb", [(64, 16), (256, 64), (128, 128)])
+def test_lu_panel_kernel(m, nb):
+    p = _rand((m, nb), m + nb)
+    packed, piv = ops.lu_panel(p)
+    packed_r, piv_r = ref.lu_panel(p)
+    assert (piv == piv_r).all()
+    np.testing.assert_allclose(np.asarray(packed), np.asarray(packed_r),
+                               atol=1e-4)
+
+
+@pytest.mark.parametrize("m,nb", [(64, 16), (256, 64)])
+def test_qr_panel_kernel(m, nb):
+    p = _rand((m, nb), m * nb)
+    packed, tau, t = ops.qr_panel(p)
+    packed_r, tau_r, t_r = ref.qr_panel(p)
+    np.testing.assert_allclose(np.asarray(packed), np.asarray(packed_r),
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(tau), np.asarray(tau_r), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(t), np.asarray(t_r), atol=1e-4)
+
+
+def test_fused_lu_panel_update():
+    b, m, bn = 32, 128, 32
+    l11 = _wc_lower(b, seed=20)
+    l21 = _rand((m, b), 21)
+    a1l = _rand((b, bn), 22)
+    a2l = _rand((m, bn), 23)
+    u12, packed, piv = ops.fused_lu_panel_update(l11, l21, a1l, a2l)
+    u12r, packedr, pivr = ref.fused_lu_panel_update(l11, l21, a1l, a2l)
+    assert (piv == pivr).all()
+    np.testing.assert_allclose(np.asarray(u12), np.asarray(u12r), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(packed), np.asarray(packedr),
+                               atol=1e-3)
+
+
+def test_fused_cholesky_panel_update():
+    # build a REAL intermediate state from a blocked Cholesky so the updated
+    # panel is genuinely SPD-consistent
+    from repro.core.cholesky import cholesky_blocked
+    n, b = 96, 32
+    s = np.asarray(_rand((n, n), 30))
+    s = jnp.asarray(s @ s.T + n * np.eye(n, dtype=np.float32))
+    lfull = cholesky_blocked(s, b)
+    # state after panel 0: PU(1) operands
+    l21 = lfull[b:, :b]                       # factored panel 0 below diag
+    lrow = lfull[b : 2 * b, :b]               # its rows for block col 1
+    panel = s[b:, b : 2 * b]                  # unupdated block col 1
+    out = ops.fused_cholesky_panel_update(lrow, l21, panel)
+    outr = ref.fused_cholesky_panel_update(lrow, l21, panel)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(outr), atol=1e-3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(lfull[b:, b:2*b]),
+                               atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Flash attention
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("bhs", [(1, 2, 1, 128, 64), (2, 4, 2, 256, 64)])
+def test_flash_attention(bhs, causal):
+    b, h, hkv, s, d = bhs
+    q = _rand((b, h, s, d), 40)
+    k = _rand((b, hkv, s, d), 41)
+    v = _rand((b, hkv, s, d), 42)
+    out = flash_attention(q, k, v, causal=causal, block_q=128, block_k=128,
+                          interpret=True)
+    g = h // hkv
+    for bi in range(b):
+        for hi in range(h):
+            o_ref = ref.attention(q[bi, hi], k[bi, hi // g], v[bi, hi // g],
+                                  causal=causal)
+            np.testing.assert_allclose(np.asarray(out[bi, hi]),
+                                       np.asarray(o_ref), atol=2e-5)

@@ -1,0 +1,103 @@
+"""Per-arch smoke tests: reduced config, one forward/train step, shapes+finite.
+
+The FULL configs are exercised only via the dry-run (ShapeDtypeStruct, no
+allocation) — see launch/dryrun.py.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, reduced_config
+from repro.models import api
+
+RNG = np.random.default_rng(123)
+
+
+def _batch(cfg, b=2, s=32):
+    batch = {
+        "tokens": jnp.asarray(RNG.integers(0, cfg.vocab_size, (b, s)),
+                              jnp.int32),
+        "labels": jnp.asarray(RNG.integers(0, cfg.vocab_size, (b, s)),
+                              jnp.int32),
+    }
+    if cfg.is_enc_dec:
+        batch["enc_embed"] = jnp.asarray(
+            RNG.standard_normal((b, s, cfg.d_model)), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = reduced_config(get_config(arch))
+    params, axes = api.init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    logits = api.apply_train(cfg, params, batch)
+    b, s = batch["tokens"].shape
+    assert logits.shape == (b, s, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all()), arch
+
+    # one SGD-ish step: grads exist, are finite, loss is finite
+    loss, grads = jax.value_and_grad(
+        lambda p: api.loss_fn(cfg, p, batch))(params)
+    assert bool(jnp.isfinite(loss)), arch
+    gnorm = sum(float(jnp.abs(g).sum()) for g in jax.tree.leaves(grads))
+    assert np.isfinite(gnorm) and gnorm > 0, arch
+
+
+@pytest.mark.parametrize("arch", ["qwen2-72b", "deepseek-moe-16b",
+                                  "recurrentgemma-9b", "rwkv6-7b",
+                                  "whisper-small"])
+def test_decode_matches_teacher_forcing(arch):
+    cfg = reduced_config(get_config(arch))
+    params, _ = api.init_params(cfg, jax.random.PRNGKey(1))
+    b, s = 2, 48
+    tokens = jnp.asarray(RNG.integers(0, cfg.vocab_size, (b, s)), jnp.int32)
+    batch = {"tokens": tokens, "labels": tokens}
+    if cfg.is_enc_dec:
+        batch["enc_embed"] = jnp.asarray(
+            RNG.standard_normal((b, 32, cfg.d_model)), jnp.float32)
+    full = api.apply_train(cfg, params, batch)
+    t0 = s - 3
+    pf = {k: (v[:, :t0] if k == "tokens" else v) for k, v in batch.items()
+          if k != "labels"}
+    lg, cache = api.prefill(cfg, params, pf, max_len=s)
+    errs = [float(jnp.abs(lg[:, -1] - full[:, t0 - 1]).max())]
+    for t in range(t0, s):
+        lg, cache = api.decode_step(cfg, params, cache, tokens[:, t:t+1],
+                                    jnp.int32(t))
+        errs.append(float(jnp.abs(lg[:, 0] - full[:, t]).max()))
+    assert max(errs) < 1e-3, (arch, errs)
+
+
+def test_param_counts_match_scale():
+    """Full configs land near their nameplate parameter counts."""
+    expect = {
+        "qwen2-72b": (66e9, 80e9),
+        "qwen1.5-32b": (29e9, 36e9),
+        "gemma-7b": (7.5e9, 10e9),
+        "phi3-medium-14b": (12e9, 16e9),
+        "chameleon-34b": (30e9, 38e9),
+        "deepseek-moe-16b": (14e9, 20e9),
+        "llama4-scout-17b-a16e": (90e9, 120e9),   # total (17B active)
+        "whisper-small": (0.2e9, 0.35e9),
+        "recurrentgemma-9b": (8e9, 12e9),
+        "rwkv6-7b": (6e9, 9e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = get_config(arch).param_count()
+        assert lo < n < hi, (arch, n)
+    # MoE active < total
+    for arch in ("llama4-scout-17b-a16e", "deepseek-moe-16b"):
+        cfg = get_config(arch)
+        assert cfg.active_param_count() < cfg.param_count()
+
+
+def test_long_context_flags():
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        names = [s.name for s in cfg.runnable_shapes()]
+        if arch in ("recurrentgemma-9b", "rwkv6-7b"):
+            assert "long_500k" in names, arch
+        else:
+            assert "long_500k" not in names, arch

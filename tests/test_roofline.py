@@ -1,0 +1,66 @@
+"""Roofline instrumentation tests: trip-count correction + collective parse."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.hlo_accounting import analyze_hlo
+
+
+def test_scan_trip_count_correction():
+    """cost_analysis counts while bodies once; analyze_hlo must not."""
+    a = jnp.ones((128, 128))
+
+    def scanned(x):
+        def body(c, _):
+            return c @ c, None
+        return jax.lax.scan(body, x, None, length=10)[0]
+
+    compiled = jax.jit(scanned).lower(a).compile()
+    raw = compiled.cost_analysis()
+    raw_flops = float((raw[0] if isinstance(raw, list) else raw)["flops"])
+    acc = analyze_hlo(compiled.as_text())
+    expect = 10 * 2 * 128 ** 3
+    assert abs(acc["flops"] - expect) / expect < 0.01
+    # and the raw number really is ~10x off (the bug we correct)
+    assert raw_flops < expect / 5
+
+
+def test_nested_scan_correction():
+    a = jnp.ones((64, 64))
+
+    def nested(x):
+        def outer(c, _):
+            def inner(d, _):
+                return d @ d, None
+            return jax.lax.scan(inner, c, None, length=5)[0], None
+        return jax.lax.scan(outer, x, None, length=3)[0]
+
+    compiled = jax.jit(nested).lower(a).compile()
+    acc = analyze_hlo(compiled.as_text())
+    expect = 15 * 2 * 64 ** 3
+    assert abs(acc["flops"] - expect) / expect < 0.01
+
+
+def test_traffic_model_scales_with_scan():
+    """Bytes proxy must also multiply by trip count."""
+    a = jnp.ones((128, 128))
+
+    def mk(length):
+        def f(x):
+            def body(c, _):
+                return c @ c, None
+            return jax.lax.scan(body, x, None, length=length)[0]
+        return jax.jit(f).lower(a).compile()
+
+    b5 = analyze_hlo(mk(5).as_text())["bytes"]
+    b10 = analyze_hlo(mk(10).as_text())["bytes"]
+    assert 1.6 < b10 / b5 < 2.4, (b5, b10)
+
+
+def test_dot_flops_from_shapes():
+    """Rectangular dot: 2·M·N·K from operand shapes + contracting dims."""
+    x = jnp.ones((32, 48))
+    y = jnp.ones((48, 96))
+    compiled = jax.jit(lambda a, b: a @ b).lower(x, y).compile()
+    acc = analyze_hlo(compiled.as_text())
+    assert acc["flops"] == 2 * 32 * 48 * 96

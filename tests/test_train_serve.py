@@ -1,0 +1,108 @@
+"""Integration: trainer convergence, checkpoint/resume, compression, serving."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced_config
+from repro.data.pipeline import SyntheticTask
+from repro.models import api
+from repro.optim.compression import GradCompression
+from repro.serve.engine import ServeConfig, ServeEngine
+from repro.train import checkpoint as ckpt
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def _cfg():
+    return reduced_config(get_config("qwen2-72b"))
+
+
+def test_trainer_converges_and_resumes():
+    cfg = _cfg()
+    src = SyntheticTask(vocab_size=cfg.vocab_size, seq_len=32, noise=0.0)
+    with tempfile.TemporaryDirectory() as d:
+        tc = TrainerConfig(steps=24, per_device_batch=8, optimizer="adamw",
+                           peak_lr=2e-3, warmup_steps=4, ckpt_dir=d,
+                           ckpt_every=8, log_every=100)
+        tr = Trainer(cfg, tc, src)
+        hist = tr.run()
+        assert hist[-1] < hist[0] * 0.7, hist[:2] + hist[-2:]
+        # resume from the persisted step
+        tr2 = Trainer(cfg, tc, src)
+        h2 = tr2.run(steps=26)
+        assert len(h2) == 2  # resumed at step 24
+
+
+def test_checkpoint_atomic_and_cleanup():
+    state = {"a": jnp.arange(8.0), "nested": {"b": jnp.ones((3, 3))}}
+    with tempfile.TemporaryDirectory() as d:
+        for step in (1, 2, 3, 4, 5):
+            ckpt.save_checkpoint(d, step, state, keep=2)
+        steps = ckpt.list_checkpoints(d)
+        assert steps == [4, 5]
+        restored, manifest = ckpt.restore_checkpoint(
+            ckpt.latest_checkpoint(d), state)
+        assert manifest["step"] == 5
+        np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                      np.asarray(state["a"]))
+        assert not [f for f in os.listdir(d) if f.startswith(".tmp")]
+
+
+def test_grad_compression_error_feedback():
+    grads = {"w": jnp.asarray(np.random.default_rng(0)
+                              .standard_normal((64, 64)), jnp.float32)}
+    for mode in ("bf16", "int8"):
+        comp = GradCompression(mode=mode)
+        residual = comp.init(grads)
+        # accumulated compressed grads + residual must reconstruct the sum
+        total_q = jnp.zeros_like(grads["w"])
+        for _ in range(8):
+            q, residual = comp.compress(grads, residual)
+            total_q = total_q + q["w"]
+        # error feedback: total quantized ≈ total true (residual bounded)
+        err = jnp.abs(total_q - 8 * grads["w"]).max()
+        assert float(err) < (0.02 if mode == "bf16" else 0.2), (mode, err)
+
+
+def test_shampoo_inverse_fourth_root():
+    from repro.optim.shampoo import cholesky_norm_seed, inv_fourth_root
+    rng = np.random.default_rng(4)
+    g = rng.standard_normal((32, 32)).astype(np.float32)
+    a = jnp.asarray(g @ g.T + 32 * np.eye(32, dtype=np.float32))
+    x = inv_fourth_root(a, iters=16)
+    x4 = x @ x @ x @ x
+    err = jnp.linalg.norm(x4 @ a - jnp.eye(32)) / 32
+    assert float(err) < 5e-2, float(err)
+    # Cholesky-based norm seed brackets the 2-norm
+    seed = float(cholesky_norm_seed(a))
+    true = float(jnp.linalg.norm(a, 2))
+    assert seed <= true * 1.001 and true <= 32 * seed
+
+
+def test_serve_engine_batched():
+    cfg = _cfg()
+    params, _ = api.init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, ServeConfig(batch_size=2, max_len=64))
+    prompts = np.random.default_rng(1).integers(
+        0, cfg.vocab_size, (2, 16)).astype(np.int32)
+    toks, stats = eng.generate(prompts, 6)
+    assert toks.shape == (2, 6)
+    assert stats["decode_tok_per_s"] > 0
+
+
+def test_watchdog_and_preemption():
+    from repro.train.fault_tolerance import PreemptionHandler, StragglerWatchdog
+    import time
+    wd = StragglerWatchdog(factor=5.0, warmup=2)
+    flagged = []
+    for i in range(8):
+        wd.step_start()
+        time.sleep(0.001 if i != 6 else 0.05)
+        flagged.append(wd.step_end())
+    assert flagged[6] and not any(flagged[:6])
+    ph = PreemptionHandler()
+    ph.install()
+    assert not ph.should_stop()
