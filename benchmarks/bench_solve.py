@@ -1,0 +1,78 @@
+"""Solve-layer throughput — the paper's §8 claim made measurable.
+
+Three scenarios (DESIGN.md §8):
+
+* one-shot drivers (``gesv``/``posv``/``gels``) under MTB vs LA scheduling —
+  does the look-ahead advantage survive the solve phase;
+* factor-once/solve-many: amortized per-solve cost of reusing ``LUFactors``
+  against re-factoring per solve;
+* batched small systems (``gesv_batched``) — the serving scenario, GFLOPS
+  counted over the whole batch.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, gflops, random_matrix, random_spd, time_fn
+from repro.solve import drivers
+from repro.solve.batched import gesv_batched
+
+
+def _rhs(n, nrhs, seed=5, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal((n, nrhs)).astype(dtype))
+
+
+def run(sizes=(512, 1024), b: int = 192, nrhs: int = 32,
+        variants=("mtb", "la")):
+    rows = []
+    for n in sizes:
+        a = random_matrix(n, 2)
+        spd = random_spd(n, 3)
+        rhs = _rhs(n, nrhs)
+        lu_flops = 2.0 * n ** 3 / 3.0 + 2.0 * n ** 2 * nrhs
+        chol_flops = n ** 3 / 3.0 + 2.0 * n ** 2 * nrhs
+        ls_flops = 4.0 * n ** 3 / 3.0
+
+        for var in variants:
+            fn = jax.jit(lambda m, r, v=var: drivers.gesv(m, r, b, variant=v))
+            t = time_fn(fn, a, rhs)
+            rows.append(emit(f"gesv_{var}_n{n}_b{b}", t,
+                             f"{gflops(lu_flops, t):.2f}GFLOPS"))
+            fnp = jax.jit(lambda m, r, v=var: drivers.posv(m, r, b, variant=v))
+            t = time_fn(fnp, spd, rhs)
+            rows.append(emit(f"posv_{var}_n{n}_b{b}", t,
+                             f"{gflops(chol_flops, t):.2f}GFLOPS"))
+
+        fng = jax.jit(lambda m, r: drivers.gels(m, r, b))
+        t = time_fn(fng, a, rhs)
+        rows.append(emit(f"gels_la_n{n}_b{b}", t,
+                         f"{gflops(ls_flops, t):.2f}GFLOPS"))
+
+        # factor once, solve many: amortized per-solve vs full re-solve
+        facs = jax.jit(lambda m: drivers.lu_factor(m, b))(a)
+        solve = jax.jit(lambda f, r: f.solve(r))
+        t_solve = time_fn(solve, facs, rhs)
+        t_full = time_fn(jax.jit(lambda m, r: drivers.gesv(m, r, b)), a, rhs)
+        speedup = t_full / t_solve
+        rows.append(emit(f"lu_resolve_n{n}_rhs{nrhs}", t_solve,
+                         f"{speedup:.1f}x_vs_refactor"))
+
+    # batched small systems (serving scenario)
+    for batch, n in ((64, 64), (256, 32)):
+        rng = np.random.default_rng(7)
+        ab = jnp.asarray(rng.standard_normal((batch, n, n)).astype(np.float32))
+        bb = jnp.asarray(rng.standard_normal((batch, n, 4)).astype(np.float32))
+        blk = min(32, n)
+        fn = jax.jit(lambda m, r: gesv_batched(m, r, blk))
+        t = time_fn(fn, ab, bb)
+        flops = batch * 2.0 * n ** 3 / 3.0
+        rows.append(emit(f"gesv_batched_{batch}x{n}", t,
+                         f"{gflops(flops, t):.2f}GFLOPS"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

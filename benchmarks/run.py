@@ -6,7 +6,8 @@ Emits ``name,us_per_call,derived`` CSV rows (also aggregated at the end).
 Mapping to the paper: bench_gemm → Fig 2 (top); bench_lu → Figs 2/4/6;
 bench_qr → Fig 7; bench_svd → Fig 8; bench_cholesky → §3.1 generality;
 bench_blocksizes → §6.1 block-size choice; bench_distributed → §4 at pod
-scale (schedule evidence from the optimized HLO).
+scale (schedule evidence from the optimized HLO); bench_solve → §8 ("a
+considerable fraction of LAPACK"): driver + batched solve throughput.
 """
 from __future__ import annotations
 
@@ -22,7 +23,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (bench_blocksizes, bench_cholesky, bench_distributed,
-                            bench_gemm, bench_lu, bench_qr, bench_svd)
+                            bench_gemm, bench_lu, bench_qr, bench_solve,
+                            bench_svd)
 
     sizes = (512, 1024, 2048) if args.large else (512, 1024)
     svd_sizes = (384, 768, 1152) if args.large else (384, 768)
@@ -33,6 +35,7 @@ def main() -> None:
     rows += bench_qr.run(sizes=sizes)
     rows += bench_cholesky.run(sizes=sizes)
     rows += bench_svd.run(sizes=svd_sizes)
+    rows += bench_solve.run(sizes=sizes)
     rows += bench_blocksizes.run(n=sizes[-1])
     if not args.skip_distributed:
         try:

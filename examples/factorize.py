@@ -5,6 +5,10 @@
 Times MTB (fork–join) vs RTM (fragmented) vs LA (static look-ahead) for
 LU / QR / Cholesky on this machine's CPU backend and validates that all
 variants produce identical results (the paper's key numerics claim).
+
+Then drives the solve layer (DESIGN.md §8): gesv/posv round trips, QR least
+squares, and the factor-once/solve-many amortization that motivates the
+``repro.solve`` factor objects.
 """
 import argparse
 import time
@@ -14,6 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.lookahead import get_variant
+from repro.solve import gels, gesv, lu_factor, posv
 
 FLOPS = {"lu": lambda n: 2 * n**3 / 3, "qr": lambda n: 4 * n**3 / 3,
          "cholesky": lambda n: n**3 / 3}
@@ -44,6 +49,38 @@ def main():
         for v in ("rtm", "la"):
             d = float(jnp.abs(outs[v] - outs["mtb"]).max())
             print(f"  max|{v} − mtb| = {d:.2e}")
+
+    # ---- solve layer: the factorizations put to work ----------------------
+    nrhs = 16
+    rhs = jnp.asarray(rng.standard_normal((args.n, nrhs)).astype(np.float32))
+    print(f"--- solve layer (n={args.n}, nrhs={nrhs}, b={args.b}) ---")
+
+    for name, fn, mat in (("gesv", gesv, a), ("posv", posv, spd)):
+        drv = jax.jit(lambda m, r, f=fn: f(m, r, args.b, variant="la"))
+        jax.block_until_ready(drv(mat, rhs))
+        t0 = time.perf_counter()
+        x = drv(mat, rhs)
+        jax.block_until_ready(x)
+        dt = time.perf_counter() - t0
+        res = float(jnp.linalg.norm(mat @ x - rhs) / jnp.linalg.norm(rhs))
+        print(f"  {name}: {dt*1e3:8.1f} ms   rel-residual {res:.2e}")
+
+    tall = jnp.asarray(rng.standard_normal((args.n, args.n // 2))
+                       .astype(np.float32))
+    xl = jax.jit(lambda m, r: gels(m, r, args.b))(tall, rhs)
+    nr = float(jnp.linalg.norm(tall.T @ (tall @ xl - rhs)))
+    print(f"  gels ({args.n}×{args.n // 2}): normal-eq residual {nr:.2e}")
+
+    # factor once, solve many — the point of the factors objects
+    facs = jax.jit(lambda m: lu_factor(m, args.b))(a)
+    solve = jax.jit(lambda f, r: f.solve(r))
+    jax.block_until_ready(solve(facs, rhs))
+    t0 = time.perf_counter()
+    for _ in range(5):
+        jax.block_until_ready(solve(facs, rhs))
+    per_solve = (time.perf_counter() - t0) / 5
+    print(f"  factor-once/solve-many: {per_solve*1e3:8.1f} ms per re-solve "
+          f"(factorization amortized away)")
 
 
 if __name__ == "__main__":

@@ -11,6 +11,7 @@ See DESIGN.md §1–4.  Public surface:
 from repro.core.backend import Backend, JNP_BACKEND, get_backend
 from repro.core.blocking import PanelStep, num_panels, panel_steps, split_trailing
 from repro.core.lookahead import FACTORIZATIONS, VARIANTS, get_variant
+from repro.core.pytree import register_factors_pytree
 
 __all__ = [
     "Backend",
@@ -23,4 +24,5 @@ __all__ = [
     "FACTORIZATIONS",
     "VARIANTS",
     "get_variant",
+    "register_factors_pytree",
 ]

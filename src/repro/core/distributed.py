@@ -43,6 +43,27 @@ import numpy as np
 from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 
+# The replication/VMA checker mis-handles the masked-psum broadcast carried
+# through fori_loop in the block-cyclic drivers below, so it must stay
+# disabled on every jax version (numerics are unaffected).  The kwarg was
+# renamed check_rep -> check_vma when shard_map moved to the top level.
+try:
+    _shard_map_impl = jax.shard_map          # jax >= 0.5
+    _CHECK_KWARGS = ({"check_vma": False}, {"check_rep": False}, {})
+except AttributeError:
+    from jax.experimental.shard_map import shard_map as _shard_map_impl
+
+    _CHECK_KWARGS = ({"check_rep": False},)
+
+
+def _shard_map(*args, **kwargs):
+    for extra in _CHECK_KWARGS:
+        try:
+            return _shard_map_impl(*args, **extra, **kwargs)
+        except TypeError:
+            continue
+    return _shard_map_impl(*args, **kwargs)
+
 from repro.core.cholesky import cholesky_panel
 from repro.core.lu import laswp, lu_unblocked
 from repro.core.qr import _Panel, build_t_matrix, qr_unblocked, unpack_v
@@ -190,7 +211,7 @@ def lu_block_cyclic(a: jnp.ndarray, b: int, mesh: Mesh, *,
 
         return al[None], ipiv
 
-    run = jax.shard_map(
+    run = _shard_map(
         local_fn, mesh=mesh,
         in_specs=(P(axis, None, None),),
         out_specs=(P(axis, None, None), P()))
@@ -265,7 +286,7 @@ def cholesky_block_cyclic(a: jnp.ndarray, b: int, mesh: Mesh, *,
                                     me, (k + 1) % nd, axis)
         return al[None]
 
-    run = jax.shard_map(local_fn, mesh=mesh,
+    run = _shard_map(local_fn, mesh=mesh,
                         in_specs=(P(axis, None, None),),
                         out_specs=P(axis, None, None))
     out = from_block_cyclic(run(a_cyc), b)
@@ -339,7 +360,7 @@ def qr_block_cyclic(a: jnp.ndarray, b: int, mesh: Mesh, *,
                                     me, (k + 1) % nd, axis)
         return al[None], taus
 
-    run = jax.shard_map(local_fn, mesh=mesh,
+    run = _shard_map(local_fn, mesh=mesh,
                         in_specs=(P(axis, None, None),),
                         out_specs=(P(axis, None, None), P()))
     out_cyc, taus = run(a_cyc)

@@ -1,0 +1,53 @@
+"""Pytree registration hook for factorization-result containers.
+
+The solve layer (DESIGN.md §8) returns immutable dataclasses wrapping the
+packed arrays produced by :mod:`repro.core` — those objects must be able to
+cross ``jit`` boundaries and ride under ``vmap`` so that factored forms can
+be computed once and reused inside traced code (the factor-once/solve-many
+contract).  This module provides the single registration helper they use:
+array fields become pytree leaves, everything else (block sizes, backend
+vtables) is static aux data that participates in the compilation cache key.
+"""
+from __future__ import annotations
+
+from typing import Sequence, Type, TypeVar
+
+import jax
+
+_T = TypeVar("_T")
+
+
+def register_factors_pytree(cls: Type[_T], data_fields: Sequence[str],
+                            meta_fields: Sequence[str] = ()) -> Type[_T]:
+    """Register a frozen dataclass as a pytree node.
+
+    ``data_fields`` flatten to leaves (arrays — traced/batched); ``meta_fields``
+    are static aux data and must be hashable (ints, strings, the frozen
+    :class:`repro.core.backend.Backend` vtable).  Returns ``cls`` so it can be
+    used as a class decorator:
+
+        @functools.partial(register_factors_pytree,
+                           data_fields=("lu", "ipiv"),
+                           meta_fields=("block", "backend"))
+        @dataclasses.dataclass(frozen=True)
+        class LUFactors: ...
+    """
+    data_fields = tuple(data_fields)
+    meta_fields = tuple(meta_fields)
+
+    if hasattr(jax.tree_util, "register_dataclass"):
+        return jax.tree_util.register_dataclass(
+            cls, data_fields=list(data_fields), meta_fields=list(meta_fields))
+
+    def flatten(obj):
+        children = tuple(getattr(obj, f) for f in data_fields)
+        aux = tuple(getattr(obj, f) for f in meta_fields)
+        return children, aux
+
+    def unflatten(aux, children):
+        kwargs = dict(zip(data_fields, children))
+        kwargs.update(zip(meta_fields, aux))
+        return cls(**kwargs)
+
+    jax.tree_util.register_pytree_node(cls, flatten, unflatten)
+    return cls

@@ -76,6 +76,20 @@ def trsm(t, b, *, side="left", lower=True, trans=False, unit_diagonal=False):
                     unit_diagonal=unit_diagonal)
 
 
+def lu_solve_small(lu, b):
+    """Fused small-RHS LU solve (forward+back substitution in one kernel).
+
+    The solve-layer analogue of the fused panel-update: for small
+    factor-once/solve-many systems both substitution sweeps run in a single
+    VMEM residency of the packed factor.  Falls back to the two XLA
+    triangular solves when the factor exceeds the VMEM budget.
+    """
+    if _f32_bytes(lu.shape, b.shape, b.shape) > VMEM_PANEL_BUDGET:
+        y = trsm_jnp(lu, b, side="left", lower=True, unit_diagonal=True)
+        return trsm_jnp(lu, y, side="left", lower=False)
+    return _tr.lu_solve_small(lu, b, interpret=_INTERPRET)
+
+
 # ---------------------------------------------------------------------------
 # Panel factorizations (the sequential bottleneck, VMEM-resident)
 # ---------------------------------------------------------------------------

@@ -73,3 +73,66 @@ def trsm_right_lower_t(l: jnp.ndarray, b: jnp.ndarray, *,
     xt = trsm_left_lower(l, b.T, unit_diagonal=unit_diagonal,
                          interpret=interpret)
     return xt.T
+
+
+# ---------------------------------------------------------------------------
+# Fused small-RHS LU solve — the solve layer's LA_MB analogue.
+# ---------------------------------------------------------------------------
+def _lu_solve_kernel(lu_ref, b_ref, x_ref, *, n: int):
+    """Forward (unit-lower) + backward (upper) substitution in one kernel.
+
+    The packed LU stays VMEM-resident for both sweeps — for the small
+    factor-once/solve-many systems of the serving scenario the two
+    substitutions are latency-bound, so fusing them removes one full
+    HBM round-trip of the factor (DESIGN.md §8).
+    """
+    a = lu_ref[...].astype(jnp.float32)
+    x = b_ref[...].astype(jnp.float32)
+    rows = lax.broadcasted_iota(jnp.int32, (n, 1), 0)
+
+    def fwd(i, x):
+        ai = lax.dynamic_slice_in_dim(a, i, 1, axis=0)       # (1, n)
+        solved = jnp.where(rows < i, x, 0.0)
+        contrib = jnp.dot(ai, solved, preferred_element_type=jnp.float32)
+        bi = lax.dynamic_slice_in_dim(x, i, 1, axis=0)
+        return lax.dynamic_update_slice_in_dim(x, bi - contrib, i, axis=0)
+
+    x = lax.fori_loop(0, n, fwd, x)                          # L·y = b (unit)
+
+    def bwd(t, x):
+        i = n - 1 - t
+        ai = lax.dynamic_slice_in_dim(a, i, 1, axis=0)
+        solved = jnp.where(rows > i, x, 0.0)
+        contrib = jnp.dot(ai, solved, preferred_element_type=jnp.float32)
+        bi = lax.dynamic_slice_in_dim(x, i, 1, axis=0)
+        xi = (bi - contrib) / a[i, i]
+        return lax.dynamic_update_slice_in_dim(x, xi, i, axis=0)
+
+    x = lax.fori_loop(0, n, bwd, x)                          # U·x = y
+    x_ref[...] = x.astype(x_ref.dtype)
+
+
+def lu_solve_small(lu: jnp.ndarray, b: jnp.ndarray, *,
+                   block_n: int = 512,
+                   interpret: bool = False) -> jnp.ndarray:
+    """Solve L·U·X = B from packed LU via the fused substitution kernel."""
+    n = lu.shape[0]
+    assert lu.shape == (n, n) and b.shape[0] == n, (lu.shape, b.shape)
+    nrhs = b.shape[1]
+    bn = min(block_n, max(128, nrhs))
+    npad = (nrhs + bn - 1) // bn * bn
+    if npad != nrhs:
+        b = jnp.pad(b, ((0, 0), (0, npad - nrhs)))
+
+    out = pl.pallas_call(
+        functools.partial(_lu_solve_kernel, n=n),
+        grid=(npad // bn,),
+        in_specs=[
+            pl.BlockSpec((n, n), lambda j: (0, 0)),     # LU resident per step
+            pl.BlockSpec((n, bn), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((n, bn), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((n, npad), b.dtype),
+        interpret=interpret,
+    )(lu, b)
+    return out[:, :nrhs]

@@ -1,0 +1,32 @@
+"""LAPACK-style driver subsystem built on the look-ahead DMFs.
+
+The paper closes by arguing that static look-ahead "paves the road" to a
+high-performance implementation of a considerable fraction of LAPACK; this
+package is that road (DESIGN.md §8).  Layers:
+
+* :mod:`repro.solve.factors`    — immutable, pytree-registered factor
+  objects (factor once / solve many),
+* :mod:`repro.solve.triangular` — blocked multi-RHS substitution with the
+  look-ahead split applied to the solve phase,
+* :mod:`repro.solve.drivers`    — ``gesv``/``posv``/``gels``/``getri``/
+  ``gecon`` with the variant/backend contract,
+* :mod:`repro.solve.batched`    — ``vmap``-batched execution for the
+  many-small-systems serving scenario.
+"""
+from repro.solve.batched import (cholesky_factor_batched, gesv_batched,
+                                 lu_factor_batched, posv_batched,
+                                 solve_batched)
+from repro.solve.drivers import (cholesky_factor, gecon, gels, gesv, getri,
+                                 ldlt_factor, lu_factor, posv, qr_factor)
+from repro.solve.factors import (CholeskyFactors, LDLTFactors, LUFactors,
+                                 QRFactors)
+from repro.solve.triangular import lu_solve_packed, trsm_blocked
+
+__all__ = [
+    "LUFactors", "CholeskyFactors", "QRFactors", "LDLTFactors",
+    "lu_factor", "cholesky_factor", "qr_factor", "ldlt_factor",
+    "gesv", "posv", "gels", "getri", "gecon",
+    "gesv_batched", "posv_batched", "lu_factor_batched",
+    "cholesky_factor_batched", "solve_batched",
+    "trsm_blocked", "lu_solve_packed",
+]

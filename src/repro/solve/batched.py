@@ -1,0 +1,73 @@
+"""Batched drivers — the many-small-systems serving scenario (DESIGN.md §8).
+
+A production solver rarely sees one huge system; it sees thousands of small
+ones (per-request preconditioners, per-head whitening, per-expert normal
+equations).  Because the factor objects are registered pytrees, an entire
+*batch* of factored forms is just a factors object with a leading batch axis
+on every leaf — it can be produced by one ``vmap``-compiled factor step,
+cached, and consumed by a separately ``jit``-compiled solve step.
+
+All entry points are jit-compiled with the scheduling knobs static, so the
+whole batch lowers to one XLA computation (the batched analogue of the
+paper's single-process experiments).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.solve import drivers
+
+__all__ = [
+    "gesv_batched", "posv_batched",
+    "lu_factor_batched", "cholesky_factor_batched", "solve_batched",
+]
+
+
+@functools.partial(jax.jit, static_argnames=("block", "variant", "backend"))
+def gesv_batched(a: jnp.ndarray, b: jnp.ndarray, block: int = 32, *,
+                 variant: str = "la", backend: str = "jnp") -> jnp.ndarray:
+    """Solve ``A[i]·X[i] = B[i]`` for a stack of general square systems."""
+    fn = functools.partial(drivers.gesv, block=block, variant=variant,
+                           backend=backend)
+    return jax.vmap(fn)(a, b)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "variant", "backend"))
+def posv_batched(a: jnp.ndarray, b: jnp.ndarray, block: int = 32, *,
+                 variant: str = "la", backend: str = "jnp") -> jnp.ndarray:
+    """Solve a stack of SPD systems via batched Cholesky."""
+    fn = functools.partial(drivers.posv, block=block, variant=variant,
+                           backend=backend)
+    return jax.vmap(fn)(a, b)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "variant", "backend"))
+def lu_factor_batched(a: jnp.ndarray, block: int = 32, *,
+                      variant: str = "la", backend: str = "jnp"):
+    """Factor a stack of systems once; returns batched :class:`LUFactors`."""
+    fn = functools.partial(drivers.lu_factor, block=block, variant=variant,
+                           backend=backend)
+    return jax.vmap(fn)(a)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "variant", "backend"))
+def cholesky_factor_batched(a: jnp.ndarray, block: int = 32, *,
+                            variant: str = "la", backend: str = "jnp"):
+    """Factor a stack of SPD systems; returns batched :class:`CholeskyFactors`."""
+    fn = functools.partial(drivers.cholesky_factor, block=block,
+                           variant=variant, backend=backend)
+    return jax.vmap(fn)(a)
+
+
+@jax.jit
+def solve_batched(factors, b: jnp.ndarray) -> jnp.ndarray:
+    """Solve a fresh batch of RHS against previously batched factors.
+
+    ``factors`` is any factors pytree with a leading batch axis on its
+    leaves (as returned by the ``*_factor_batched`` steps) — the
+    factor-once/solve-many contract under ``vmap``.
+    """
+    return jax.vmap(lambda f, bi: f.solve(bi))(factors, b)

@@ -1,0 +1,231 @@
+"""Immutable factorization-result objects — factor once, solve many.
+
+Each class wraps the packed arrays produced by :mod:`repro.core` (LAPACK
+packed formats, DESIGN.md §3) together with the block size and backend they
+were built with, and exposes the downstream operations LAPACK derives from
+the factored form: ``solve`` (multi-RHS, optionally transposed), ``logdet``
+(slogdet semantics), and ``inverse``.
+
+All classes are registered as pytrees (:func:`repro.core.register_factors_pytree`):
+the packed arrays are leaves, so a factored form can be returned from a
+``jit``-compiled factor step, closed over by a ``jit``-compiled solve step,
+and batched under ``vmap`` (see :mod:`repro.solve.batched`).  ``block`` and
+``backend`` are static aux data — they select code paths, not values.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax.numpy as jnp
+
+from repro.core.backend import Backend, JNP_BACKEND
+from repro.core.ldlt import unpack_ldlt
+from repro.core.lu import permutation_from_pivots
+from repro.core.pytree import register_factors_pytree
+from repro.core.qr import build_t_matrix, unpack_v
+from repro.core.blocking import panel_steps
+from repro.solve.triangular import lu_solve_packed, trsm_blocked
+
+__all__ = ["LUFactors", "CholeskyFactors", "QRFactors", "LDLTFactors"]
+
+
+def _as_matrix(b: jnp.ndarray) -> tuple[jnp.ndarray, bool]:
+    """Promote a vector RHS to a single-column matrix."""
+    if b.ndim == 1:
+        return b[:, None], True
+    return b, False
+
+
+@functools.partial(register_factors_pytree,
+                   data_fields=("lu", "ipiv", "perm"),
+                   meta_fields=("block", "backend"))
+@dataclasses.dataclass(frozen=True)
+class LUFactors:
+    """Packed GETRF output: ``P·A = L·U`` with global 0-based ``ipiv``.
+
+    ``perm`` is the row-permutation vector derived from ``ipiv`` — stored at
+    factor time because deriving it is a sequential length-n loop that would
+    otherwise re-run on every solve of the solve-many phase.
+    """
+
+    lu: jnp.ndarray
+    ipiv: jnp.ndarray
+    perm: jnp.ndarray
+    block: int = 128
+    backend: Backend = JNP_BACKEND
+
+    @classmethod
+    def from_packed(cls, lu: jnp.ndarray, ipiv: jnp.ndarray, *,
+                    block: int = 128, backend: Backend = JNP_BACKEND):
+        perm = permutation_from_pivots(ipiv, lu.shape[0])
+        return cls(lu=lu, ipiv=ipiv, perm=perm, block=block, backend=backend)
+
+    @property
+    def n(self) -> int:
+        return self.lu.shape[0]
+
+    def solve(self, b: jnp.ndarray, *, trans: bool = False) -> jnp.ndarray:
+        """Solve ``A·X = B`` (or ``Aᵀ·X = B``) from the factored form."""
+        b, was_vec = _as_matrix(b)
+        if b.shape[0] != self.n:
+            # must reject here: the b[perm] gather below would silently
+            # clamp out-of-bounds indices instead of failing
+            raise ValueError(f"rhs rows {b.shape[0]} != system size {self.n}")
+        perm = self.perm
+        if not trans:
+            # A = Pᵀ·L·U  ⇒  L·U·X = P·B
+            x = lu_solve_packed(self.lu, b[perm], block=self.block,
+                                backend=self.backend)
+        else:
+            # Aᵀ = Uᵀ·Lᵀ·P  ⇒  Uᵀ·y = B, Lᵀ·z = y, X = Pᵀ·z
+            y = trsm_blocked(self.lu, b, lower=False, trans=True,
+                             block=self.block, backend=self.backend)
+            z = trsm_blocked(self.lu, y, lower=True, trans=True,
+                             unit_diagonal=True, block=self.block,
+                             backend=self.backend)
+            x = jnp.zeros_like(z).at[perm].set(z)
+        return x[:, 0] if was_vec else x
+
+    def logdet(self) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """``(sign, log|det A|)`` — slogdet semantics."""
+        d = jnp.diagonal(self.lu)
+        swaps = jnp.sum(self.ipiv != jnp.arange(self.ipiv.shape[0]))
+        psign = jnp.where(swaps % 2 == 0, 1.0, -1.0).astype(d.dtype)
+        sign = psign * jnp.prod(jnp.sign(d))
+        return sign, jnp.sum(jnp.log(jnp.abs(d)))
+
+    def inverse(self) -> jnp.ndarray:
+        """``A⁻¹`` via n simultaneous solves (GETRI semantics)."""
+        return self.solve(jnp.eye(self.n, dtype=self.lu.dtype))
+
+
+@functools.partial(register_factors_pytree,
+                   data_fields=("l",),
+                   meta_fields=("block", "backend"))
+@dataclasses.dataclass(frozen=True)
+class CholeskyFactors:
+    """POTRF output: ``A = L·Lᵀ`` with L lower triangular."""
+
+    l: jnp.ndarray
+    block: int = 128
+    backend: Backend = JNP_BACKEND
+
+    @property
+    def n(self) -> int:
+        return self.l.shape[0]
+
+    def solve(self, b: jnp.ndarray, *, trans: bool = False) -> jnp.ndarray:
+        del trans  # A is symmetric
+        b, was_vec = _as_matrix(b)
+        y = trsm_blocked(self.l, b, lower=True, block=self.block,
+                         backend=self.backend)
+        x = trsm_blocked(self.l, y, lower=True, trans=True, block=self.block,
+                         backend=self.backend)
+        return x[:, 0] if was_vec else x
+
+    def logdet(self) -> tuple[jnp.ndarray, jnp.ndarray]:
+        d = jnp.diagonal(self.l)
+        return jnp.ones((), d.dtype), 2.0 * jnp.sum(jnp.log(d))
+
+    def inverse(self) -> jnp.ndarray:
+        return self.solve(jnp.eye(self.n, dtype=self.l.dtype))
+
+
+@functools.partial(register_factors_pytree,
+                   data_fields=("packed", "taus"),
+                   meta_fields=("block", "backend"))
+@dataclasses.dataclass(frozen=True)
+class QRFactors:
+    """GEQRF output: R on/above the diagonal, reflectors V below."""
+
+    packed: jnp.ndarray
+    taus: jnp.ndarray
+    block: int = 128
+    backend: Backend = JNP_BACKEND
+
+    @property
+    def m(self) -> int:
+        return self.packed.shape[0]
+
+    @property
+    def n(self) -> int:
+        return self.packed.shape[1]
+
+    def apply_qt(self, c: jnp.ndarray) -> jnp.ndarray:
+        """``Qᵀ·C`` via the stored compact-WY panels (ORMQR analogue)."""
+        m, n = self.m, self.n
+        for st in panel_steps(n, self.block):
+            k, bk = st.k, st.bk
+            if k >= m:
+                break
+            v = unpack_v(self.packed[k:, k : k + bk], bk)
+            t = build_t_matrix(v, self.taus[k : k + bk])
+            w = self.backend.gemm(t.T, self.backend.gemm(v.T, c[k:]))
+            c = c.at[k:].set(c[k:] - self.backend.gemm(v, w))
+        return c
+
+    def solve(self, b: jnp.ndarray) -> jnp.ndarray:
+        """Least-squares solution ``argmin‖A·X − B‖₂`` (m ≥ n)."""
+        if self.m < self.n:
+            raise ValueError("QRFactors.solve requires m >= n "
+                             "(underdetermined systems need LQ)")
+        b, was_vec = _as_matrix(b)
+        qtb = self.apply_qt(b)
+        r = jnp.triu(self.packed[: self.n])
+        x = trsm_blocked(r, qtb[: self.n], lower=False, block=self.block,
+                         backend=self.backend)
+        return x[:, 0] if was_vec else x
+
+    def logdet(self) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """slogdet of a *square* A from its QR form.
+
+        Each nontrivial Householder reflector has determinant −1, so
+        ``det Q = Π_j (τ_j ≠ 0 ? −1 : 1)`` and ``det A = det Q · Π r_jj``.
+        """
+        if self.m != self.n:
+            raise ValueError("logdet requires a square matrix")
+        d = jnp.diagonal(self.packed)
+        qsign = jnp.prod(jnp.where(self.taus != 0, -1.0, 1.0)).astype(d.dtype)
+        sign = qsign * jnp.prod(jnp.sign(d))
+        return sign, jnp.sum(jnp.log(jnp.abs(d)))
+
+    def inverse(self) -> jnp.ndarray:
+        if self.m != self.n:
+            raise ValueError("inverse requires a square matrix")
+        return self.solve(jnp.eye(self.n, dtype=self.packed.dtype))
+
+
+@functools.partial(register_factors_pytree,
+                   data_fields=("packed",),
+                   meta_fields=("block", "backend"))
+@dataclasses.dataclass(frozen=True)
+class LDLTFactors:
+    """Unpivoted LDLᵀ: unit-lower L strictly below the diagonal, D on it."""
+
+    packed: jnp.ndarray
+    block: int = 128
+    backend: Backend = JNP_BACKEND
+
+    @property
+    def n(self) -> int:
+        return self.packed.shape[0]
+
+    def solve(self, b: jnp.ndarray, *, trans: bool = False) -> jnp.ndarray:
+        del trans  # A is symmetric
+        b, was_vec = _as_matrix(b)
+        _, d = unpack_ldlt(self.packed)
+        y = trsm_blocked(self.packed, b, lower=True, unit_diagonal=True,
+                         block=self.block, backend=self.backend)
+        y = (y / d[:, None]).astype(y.dtype)
+        x = trsm_blocked(self.packed, y, lower=True, trans=True,
+                         unit_diagonal=True, block=self.block,
+                         backend=self.backend)
+        return x[:, 0] if was_vec else x
+
+    def logdet(self) -> tuple[jnp.ndarray, jnp.ndarray]:
+        d = jnp.diagonal(self.packed)
+        return jnp.prod(jnp.sign(d)), jnp.sum(jnp.log(jnp.abs(d)))
+
+    def inverse(self) -> jnp.ndarray:
+        return self.solve(jnp.eye(self.n, dtype=self.packed.dtype))

@@ -1,0 +1,124 @@
+"""Blocked multi-RHS triangular substitution with static look-ahead.
+
+The factorizations in :mod:`repro.core` stop at the packed factors; this
+module is the solve-phase counterpart (DESIGN.md §8).  A triangular solve
+with an (n × nrhs) right-hand-side block walks the same panel schedule as
+the factorizations (:func:`repro.core.blocking.panel_steps`): per panel k a
+small diagonal solve (the latency-bound "PF" analogue) followed by a GEMM
+update of the remaining row panels (the "TU" analogue).  The paper's §4
+split therefore applies verbatim to the solve phase: the update of the
+*next* panel's rows (``PU``) shares only read dependencies with the bulk
+update of the rest (``TU_right``), so the next diagonal solve can overlap
+the bulk GEMM — look-ahead for substitution.
+
+All four ``op(T)`` cases reduce to one loop: ``lower ^ trans`` decides the
+traversal direction, and the off-diagonal block is read from ``T`` or
+``Tᵀ`` accordingly.  Everything goes through the :class:`Backend` vtable so
+the Pallas BLIS kernels serve the solve layer unchanged.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.backend import Backend, JNP_BACKEND
+from repro.core.blocking import panel_steps
+
+__all__ = ["trsm_blocked", "lu_solve_packed"]
+
+
+def _offdiag(t: jnp.ndarray, rows: slice, k: int, bk: int,
+             trans: bool) -> jnp.ndarray:
+    """Block ``op(T)[rows, k:k+bk]`` — transposed read when ``trans``."""
+    if trans:
+        return t[k : k + bk, rows].T
+    return t[rows, k : k + bk]
+
+
+def trsm_blocked(
+    t: jnp.ndarray,
+    rhs: jnp.ndarray,
+    *,
+    lower: bool = True,
+    trans: bool = False,
+    unit_diagonal: bool = False,
+    block: int = 128,
+    backend: Backend = JNP_BACKEND,
+    lookahead: bool = True,
+) -> jnp.ndarray:
+    """Solve ``op(T)·X = B`` for a multi-column B with blocked substitution.
+
+    ``lookahead=True`` splits each trailing update into (next-panel rows |
+    rest) so the next diagonal solve is data-independent of the bulk GEMM —
+    the paper's LA restructuring applied to the solve phase.
+    ``lookahead=False`` is the MTB analogue: one barrier-separated update.
+    """
+    n = t.shape[0]
+    if rhs.shape[0] != n:
+        raise ValueError(f"rhs rows {rhs.shape[0]} != matrix dim {n}")
+    steps = list(panel_steps(n, block))
+    forward = lower != trans  # lower·notrans / upper·trans march downward
+    order = steps if forward else list(reversed(steps))
+    x = rhs
+
+    for i, st in enumerate(order):
+        k, bk = st.k, st.bk
+        tkk = t[k : k + bk, k : k + bk]
+        xk = backend.trsm(tkk, x[k : k + bk], side="left", lower=lower,
+                          trans=trans, unit_diagonal=unit_diagonal)
+        x = x.at[k : k + bk].set(xk)
+
+        # rows of X still to be updated by this panel's solution
+        if forward:
+            remaining = slice(st.k_next, n)
+        else:
+            remaining = slice(0, k)
+        if remaining.start >= remaining.stop:
+            continue
+
+        nxt = order[i + 1] if i + 1 < len(order) else None
+        if lookahead and nxt is not None:
+            # PU: update the next panel's rows first (enables its solve) …
+            pu = slice(nxt.k, nxt.k + nxt.bk)
+            x = x.at[pu].set(
+                backend.update(x[pu], _offdiag(t, pu, k, bk, trans), xk))
+            # … TU_right: bulk update of the rest, data-independent of PU.
+            if forward:
+                rest = slice(pu.stop, n)
+            else:
+                rest = slice(0, pu.start)
+            if rest.start < rest.stop:
+                x = x.at[rest].set(
+                    backend.update(x[rest], _offdiag(t, rest, k, bk, trans),
+                                   xk))
+        else:
+            x = x.at[remaining].set(
+                backend.update(x[remaining],
+                               _offdiag(t, remaining, k, bk, trans), xk))
+    return x
+
+
+def lu_solve_packed(
+    lu: jnp.ndarray,
+    rhs: jnp.ndarray,
+    *,
+    block: int = 128,
+    backend: Backend = JNP_BACKEND,
+    lookahead: bool = True,
+) -> jnp.ndarray:
+    """Solve ``L·U·X = B`` from a packed (already row-permuted) LU.
+
+    Small systems on the Pallas backend take the fused VMEM-resident
+    forward+back substitution kernel (:func:`repro.kernels.ops.lu_solve_small`)
+    — both sweeps without leaving VMEM, the solve-phase analogue of the
+    LA_MB fused panel-update.  Everything else runs the blocked
+    :func:`trsm_blocked` pair.
+    """
+    n = lu.shape[0]
+    if backend.name == "pallas" and n <= block:
+        from repro.kernels import ops as kops
+
+        return kops.lu_solve_small(lu, rhs)
+    y = trsm_blocked(lu, rhs, lower=True, unit_diagonal=True, block=block,
+                     backend=backend, lookahead=lookahead)
+    return trsm_blocked(lu, y, lower=False, block=block, backend=backend,
+                        lookahead=lookahead)

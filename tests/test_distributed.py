@@ -62,8 +62,32 @@ print("RESULT:" + json.dumps(out))
 """
 
 
+_PROBE = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax
+print("DEVICES:%d" % jax.local_device_count())
+"""
+
+
+def _available_devices() -> int:
+    """Device count the child would see under the forced-8 XLA flag."""
+    try:
+        proc = subprocess.run([sys.executable, "-c", _PROBE],
+                              capture_output=True, text=True, timeout=120)
+    except (OSError, subprocess.TimeoutExpired):
+        return 0
+    for line in proc.stdout.splitlines():
+        if line.startswith("DEVICES:"):
+            return int(line[len("DEVICES:"):])
+    return 0
+
+
 @pytest.fixture(scope="module")
 def child_result():
+    ndev = _available_devices()
+    if ndev < 8:
+        pytest.skip(f"needs 8 local host devices, XLA provides {ndev}")
     env = dict(os.environ)
     root = os.path.join(os.path.dirname(__file__), "..")
     env["PYTHONPATH"] = os.path.join(root, "src")

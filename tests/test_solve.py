@@ -1,0 +1,261 @@
+"""Solve-layer round trips: drivers × scheduling variants × backends.
+
+Acceptance contract (ISSUE 1): ``gesv``/``posv``/``gels``/``getri`` pass
+round-trip residual tests for every (variant, backend) pair exposed by
+:func:`repro.core.lookahead.get_variant`, across float32/float64, and
+``gesv_batched`` matches a vmapped reference solve inside ``jit``.
+
+Residual criterion: the LAPACK-style scaled residual
+``‖A·x − b‖ / (n · eps · ‖A‖ · ‖x‖)`` stays below a modest constant, where
+``eps`` is the epsilon of the *effective compute* dtype (the Pallas kernels
+and the fused ``la_mb`` panel-update accumulate in float32 by design).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.lookahead import VARIANTS, get_variant
+from repro.solve import (LUFactors, gecon, gels, gesv, gesv_batched, getri,
+                         ldlt_factor, lu_factor, lu_factor_batched, posv,
+                         posv_batched, qr_factor, solve_batched)
+
+jax.config.update("jax_enable_x64", True)
+
+THRESH = 50.0
+BACKENDS = ("jnp", "pallas")
+
+
+def available_variants(dmf):
+    out = []
+    for v in VARIANTS:
+        try:
+            get_variant(dmf, v)
+        except KeyError:
+            continue
+        out.append(v)
+    return out
+
+
+def _pairs(dmf):
+    return [(v, be) for v in available_variants(dmf) for be in BACKENDS]
+
+
+def _eps(dtype, variant, backend):
+    if variant == "la_mb" or backend == "pallas":
+        return float(jnp.finfo(jnp.float32).eps)
+    return float(jnp.finfo(dtype).eps)
+
+
+def _dtypes(backend):
+    # the Pallas kernels accumulate in f32 — f64 inputs add nothing there
+    return (np.float32,) if backend == "pallas" else (np.float32, np.float64)
+
+
+def _rand(shape, seed, dtype):
+    return jnp.asarray(
+        np.random.default_rng(seed).standard_normal(shape).astype(dtype))
+
+
+def _scaled_residual(a, x, b, eps):
+    n = a.shape[0]
+    num = jnp.linalg.norm(a @ x - b)
+    den = n * eps * jnp.linalg.norm(a) * (jnp.linalg.norm(x) + 1.0)
+    return float(num / den)
+
+
+# ---------------------------------------------------------------------------
+# Drivers, every (variant, backend) pair.
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("variant,backend", _pairs("lu"))
+def test_gesv_roundtrip(variant, backend):
+    for dtype in _dtypes(backend):
+        a = _rand((32, 32), 10, dtype)
+        b = _rand((32, 3), 11, dtype)
+        x = gesv(a, b, 16, variant=variant, backend=backend)
+        assert x.dtype == a.dtype
+        r = _scaled_residual(a, x, b, _eps(dtype, variant, backend))
+        assert r < THRESH, (variant, backend, dtype, r)
+
+
+@pytest.mark.parametrize("variant,backend", _pairs("cholesky"))
+def test_posv_roundtrip(variant, backend):
+    for dtype in _dtypes(backend):
+        g = _rand((32, 32), 12, dtype)
+        a = g @ g.T + 32 * jnp.eye(32, dtype=dtype)
+        b = _rand((32, 3), 13, dtype)
+        x = posv(a, b, 16, variant=variant, backend=backend)
+        r = _scaled_residual(a, x, b, _eps(dtype, variant, backend))
+        assert r < THRESH, (variant, backend, dtype, r)
+
+
+@pytest.mark.parametrize("variant,backend", _pairs("qr"))
+def test_gels_least_squares(variant, backend):
+    for dtype in _dtypes(backend):
+        a = _rand((48, 32), 14, dtype)
+        b = _rand((48, 2), 15, dtype)
+        x = gels(a, b, 16, variant=variant, backend=backend)
+        eps = _eps(dtype, variant, backend)
+        # least-squares optimality: Aᵀ·(A·x − b) ≈ 0 at the scaled level
+        nr = jnp.linalg.norm(a.T @ (a @ x - b))
+        den = (a.shape[1] * eps * jnp.linalg.norm(a) ** 2
+               * (jnp.linalg.norm(x) + 1.0))
+        assert float(nr / den) < THRESH, (variant, backend, dtype)
+
+
+@pytest.mark.parametrize("variant,backend", _pairs("lu"))
+def test_getri_roundtrip(variant, backend):
+    for dtype in _dtypes(backend):
+        a = _rand((32, 32), 16, dtype)
+        inv = getri(a, 16, variant=variant, backend=backend)
+        eps = _eps(dtype, variant, backend)
+        num = jnp.linalg.norm(a @ inv - jnp.eye(32, dtype=dtype))
+        den = 32 * eps * jnp.linalg.norm(a) * jnp.linalg.norm(inv)
+        assert float(num / den) < THRESH, (variant, backend, dtype)
+
+
+@pytest.mark.parametrize("variant", available_variants("gauss_jordan"))
+def test_getri_gauss_jordan_method(variant):
+    g = _rand((32, 32), 17, np.float64)
+    a = g @ g.T + 32 * jnp.eye(32)          # unpivoted GJE needs SPD-like A
+    inv = getri(a, 16, variant=variant, method="gj")
+    assert float(jnp.abs(inv - jnp.linalg.inv(a)).max()) < 1e-10
+
+
+def test_gesv_small_system_fused_pallas_path():
+    """n <= block on the pallas backend routes through lu_solve_small."""
+    dtype = np.float32
+    a = _rand((16, 16), 40, dtype)
+    b = _rand((16, 3), 41, dtype)
+    x = gesv(a, b, 32, backend="pallas")        # n=16 <= block=32 → fused
+    assert _scaled_residual(a, x, b, float(jnp.finfo(dtype).eps)) < THRESH
+    # and the fused kernel agrees with the two-sweep blocked path
+    x_ref = gesv(a, b, 8, backend="pallas")     # n=16 > block=8 → blocked
+    np.testing.assert_allclose(np.asarray(x), np.asarray(x_ref),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_lu_solve_rejects_mismatched_rhs():
+    """The b[perm] gather would clamp silently — must raise instead."""
+    a = _rand((32, 32), 42, np.float64)
+    facs = lu_factor(a, 16)
+    with pytest.raises(ValueError, match="rhs rows"):
+        facs.solve(_rand((16, 2), 43, np.float64))
+
+
+def test_gesv_uneven_panels():
+    a = _rand((40, 40), 18, np.float64)     # 40 % 16 != 0 — ragged last panel
+    b = _rand((40, 4), 19, np.float64)
+    x = gesv(a, b, 16)
+    assert _scaled_residual(a, x, b, float(jnp.finfo(np.float64).eps)) < THRESH
+
+
+def test_gecon_estimates_condition():
+    a = _rand((48, 48), 20, np.float64)
+    rc = gecon(a, 16)
+    true_rc = 1.0 / (jnp.linalg.norm(a, 1)
+                     * jnp.linalg.norm(jnp.linalg.inv(a), 1))
+    # Hager–Higham lower-bounds ‖A⁻¹‖₁, so rc upper-bounds the true rcond
+    assert float(true_rc) <= float(rc) * (1 + 1e-10)
+    assert float(rc) < 50 * float(true_rc)
+
+
+# ---------------------------------------------------------------------------
+# Factor once / solve many.
+# ---------------------------------------------------------------------------
+def test_factor_once_solve_many():
+    a = _rand((48, 48), 21, np.float64)
+    facs = lu_factor(a, 16)
+    for seed in (22, 23, 24):
+        b = _rand((48, 6), seed, np.float64)
+        x = facs.solve(b)
+        assert _scaled_residual(a, x, b,
+                                float(jnp.finfo(np.float64).eps)) < THRESH
+    # transposed solves reuse the same factors (the gecon workhorse)
+    b = _rand((48,), 25, np.float64)
+    xt = facs.solve(b, trans=True)
+    assert float(jnp.linalg.norm(a.T @ xt - b)) < 1e-9
+
+
+def test_ldlt_factor_roundtrip_and_logdet():
+    """LDLTFactors on a genuinely indefinite (quasi-definite) system."""
+    n = 45                                   # 15 negative pivots → det < 0
+    rng = np.random.default_rng(44)
+    g = rng.standard_normal((n, n))
+    signs = np.where(np.arange(n) % 3 == 0, -1.0, 1.0)
+    a = jnp.asarray((g + g.T) / 2 + np.diag(signs * 2.0 * n))
+    facs = ldlt_factor(a, 16)
+    b = _rand((n, 4), 45, np.float64)
+    x = facs.solve(b)
+    assert _scaled_residual(a, x, b, float(jnp.finfo(np.float64).eps)) < THRESH
+    s, ld = facs.logdet()
+    rs, rld = jnp.linalg.slogdet(a)
+    assert float(s) == pytest.approx(float(rs))   # negative determinant
+    assert float(rs) == -1.0
+    assert float(ld) == pytest.approx(float(rld), rel=1e-10)
+    inv = facs.inverse()
+    assert float(jnp.abs(inv - jnp.linalg.inv(a)).max()) < 1e-9
+
+
+def test_logdet_matches_slogdet():
+    for seed in (26, 27):
+        a = _rand((32, 32), seed, np.float64)
+        s, ld = lu_factor(a, 16).logdet()
+        rs, rld = jnp.linalg.slogdet(a)
+        assert float(s) == pytest.approx(float(rs))
+        assert float(ld) == pytest.approx(float(rld), rel=1e-10)
+        qs, qld = qr_factor(a, 16).logdet()
+        assert float(qs) == pytest.approx(float(rs))
+        assert float(qld) == pytest.approx(float(rld), rel=1e-10)
+
+
+def test_factors_cross_jit_boundary():
+    """Factors are pytrees: returned from one jit, consumed by another."""
+    a = _rand((32, 32), 28, np.float64)
+    b = _rand((32, 2), 29, np.float64)
+    factor = jax.jit(lambda m: lu_factor(m, 16))
+    solve = jax.jit(lambda f, rhs: f.solve(rhs))
+    facs = factor(a)
+    assert isinstance(facs, LUFactors)
+    x = solve(facs, b)
+    assert float(jnp.linalg.norm(a @ x - b)) < 1e-9
+    leaves, treedef = jax.tree_util.tree_flatten(facs)
+    assert len(leaves) == 3              # lu+ipiv+perm; block/backend static
+    rebuilt = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert float(jnp.abs(rebuilt.solve(b) - x).max()) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Batched execution (the many-small-systems serving scenario).
+# ---------------------------------------------------------------------------
+def test_gesv_batched_matches_vmapped_reference():
+    rng = np.random.default_rng(30)
+    a = jnp.asarray(rng.standard_normal((8, 24, 24)))
+    b = jnp.asarray(rng.standard_normal((8, 24, 2)))
+    x = gesv_batched(a, b, 8)                # jit-compiled entry point
+    ref = jax.vmap(jnp.linalg.solve)(a, b)
+    np.testing.assert_allclose(np.asarray(x), np.asarray(ref), atol=1e-9)
+
+
+def test_posv_batched_matches_vmapped_reference():
+    rng = np.random.default_rng(31)
+    g = jnp.asarray(rng.standard_normal((8, 24, 24)))
+    a = jnp.einsum("bij,bkj->bik", g, g) + 24 * jnp.eye(24)
+    b = jnp.asarray(rng.standard_normal((8, 24, 2)))
+    x = posv_batched(a, b, 8)
+    ref = jax.vmap(jnp.linalg.solve)(a, b)
+    np.testing.assert_allclose(np.asarray(x), np.asarray(ref), atol=1e-9)
+
+
+def test_batched_factors_live_inside_vmap():
+    """A batch of factored forms is one pytree; solve is a separate jit."""
+    rng = np.random.default_rng(32)
+    a = jnp.asarray(rng.standard_normal((8, 24, 24)))
+    facs = lu_factor_batched(a, 8)
+    assert facs.lu.shape == (8, 24, 24) and facs.ipiv.shape == (8, 24)
+    for seed in (33, 34):                    # fresh RHS against cached factors
+        b = jnp.asarray(np.random.default_rng(seed)
+                        .standard_normal((8, 24, 2)))
+        x = solve_batched(facs, b)
+        ref = jax.vmap(jnp.linalg.solve)(a, b)
+        np.testing.assert_allclose(np.asarray(x), np.asarray(ref), atol=1e-9)
