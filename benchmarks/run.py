@@ -1,48 +1,86 @@
 """Benchmark harness — one function per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--large]
+    PYTHONPATH=src python -m benchmarks.run [--large] [--only NAME] [--csv PATH]
 
 Emits ``name,us_per_call,derived`` CSV rows (also aggregated at the end).
 Mapping to the paper: bench_gemm → Fig 2 (top); bench_lu → Figs 2/4/6;
 bench_qr → Fig 7; bench_svd → Fig 8; bench_cholesky → §3.1 generality;
-bench_blocksizes → §6.1 block-size choice; bench_distributed → §4 at pod
-scale (schedule evidence from the optimized HLO); bench_solve → §8 ("a
-considerable fraction of LAPACK"): driver + batched solve throughput.
+bench_blocksizes → §6.1 block-size choice + tuned-vs-fixed (repro.tune);
+bench_distributed → §4 at pod scale (schedule evidence from the optimized
+HLO); bench_solve → §8 ("a considerable fraction of LAPACK"): driver +
+batched solve throughput.
+
+``--only`` substring-filters the benchmark groups (so the tuner and CI can
+run targeted sweeps); ``--csv`` writes the aggregated rows to a file.
 """
 from __future__ import annotations
 
 import argparse
 import sys
 
+CSV_HEADER = "name,us_per_call,derived"
 
-def main() -> None:
+
+def _groups(args):
+    """(name, thunk) per benchmark group — thunks close over problem sizes."""
+    from benchmarks import (bench_blocksizes, bench_cholesky,
+                            bench_distributed, bench_gemm, bench_lu, bench_qr,
+                            bench_solve, bench_svd)
+
+    sizes = (512, 1024, 2048) if args.large else (512, 1024)
+    svd_sizes = (384, 768, 1152) if args.large else (384, 768)
+    groups = [
+        ("gemm", lambda: bench_gemm.run(sizes=sizes)),
+        ("lu", lambda: bench_lu.run(sizes=sizes)),
+        ("qr", lambda: bench_qr.run(sizes=sizes)),
+        ("cholesky", lambda: bench_cholesky.run(sizes=sizes)),
+        ("svd", lambda: bench_svd.run(sizes=svd_sizes)),
+        ("solve", lambda: bench_solve.run(sizes=sizes)),
+        ("blocksizes", lambda: bench_blocksizes.run(n=sizes[-1],
+                                                    tuned=not args.skip_tune)),
+    ]
+    if not args.skip_distributed:
+        groups.append(("distributed", bench_distributed.run))
+    return groups
+
+
+def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--large", action="store_true",
                     help="larger problem sizes (slower)")
     ap.add_argument("--skip-distributed", action="store_true")
-    args = ap.parse_args()
+    ap.add_argument("--skip-tune", action="store_true",
+                    help="omit the tuned-vs-fixed row (no tuner search, no "
+                         "write to the persistent tune cache)")
+    ap.add_argument("--only", default=None, metavar="NAME",
+                    help="run only benchmark groups whose name contains NAME")
+    ap.add_argument("--csv", default=None, metavar="PATH",
+                    help="also write the aggregated rows to PATH")
+    args = ap.parse_args(argv)
 
-    from benchmarks import (bench_blocksizes, bench_cholesky, bench_distributed,
-                            bench_gemm, bench_lu, bench_qr, bench_solve,
-                            bench_svd)
+    groups = _groups(args)
+    if args.only is not None:
+        groups = [(n, fn) for n, fn in groups if args.only in n]
+        if not groups:
+            ap.error(f"--only {args.only!r} matches no benchmark group "
+                     f"(have: {', '.join(n for n, _ in _groups(args))})")
 
-    sizes = (512, 1024, 2048) if args.large else (512, 1024)
-    svd_sizes = (384, 768, 1152) if args.large else (384, 768)
     rows = []
-    print("name,us_per_call,derived")
-    rows += bench_gemm.run(sizes=sizes)
-    rows += bench_lu.run(sizes=sizes)
-    rows += bench_qr.run(sizes=sizes)
-    rows += bench_cholesky.run(sizes=sizes)
-    rows += bench_svd.run(sizes=svd_sizes)
-    rows += bench_solve.run(sizes=sizes)
-    rows += bench_blocksizes.run(n=sizes[-1])
-    if not args.skip_distributed:
+    print(CSV_HEADER)
+    for name, fn in groups:
         try:
-            rows += bench_distributed.run()
+            rows += fn()
         except Exception as e:  # subprocess env issues shouldn't kill the run
+            if name != "distributed":
+                raise
             print(f"bench_distributed skipped: {e!r}", file=sys.stderr)
     print(f"\n# {len(rows)} rows")
+
+    if args.csv:
+        with open(args.csv, "w") as f:
+            f.write(CSV_HEADER + "\n")
+            f.writelines(row + "\n" for row in rows)
+        print(f"# wrote {args.csv}", file=sys.stderr)
 
 
 if __name__ == "__main__":

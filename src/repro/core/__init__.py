@@ -9,20 +9,29 @@ See DESIGN.md §1–4.  Public surface:
 * distributed (pod-scale) versions: :mod:`repro.core.distributed`
 """
 from repro.core.backend import Backend, JNP_BACKEND, get_backend
-from repro.core.blocking import PanelStep, num_panels, panel_steps, split_trailing
-from repro.core.lookahead import FACTORIZATIONS, VARIANTS, get_variant
+from repro.core.blocking import (BlockSpec, PanelStep, expand_schedule,
+                                 max_width, normalize_block, num_panels,
+                                 panel_steps, split_trailing)
+from repro.core.lookahead import (FACTORIZATIONS, TUNABLE, VARIANTS,
+                                  get_variant, list_variants)
 from repro.core.pytree import register_factors_pytree
 
 __all__ = [
     "Backend",
     "JNP_BACKEND",
     "get_backend",
+    "BlockSpec",
     "PanelStep",
+    "expand_schedule",
+    "max_width",
+    "normalize_block",
     "num_panels",
     "panel_steps",
     "split_trailing",
     "FACTORIZATIONS",
+    "TUNABLE",
     "VARIANTS",
     "get_variant",
+    "list_variants",
     "register_factors_pytree",
 ]

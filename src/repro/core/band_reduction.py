@@ -22,11 +22,38 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.core.backend import Backend, JNP_BACKEND
-from repro.core.blocking import panel_steps
+from repro.core.blocking import BlockSpec, normalize_block, panel_steps
 from repro.core.qr import (_factor_panel, apply_qt_blocked, build_t_matrix,
                            unpack_v)
 
-__all__ = ["band_reduction_blocked", "band_reduction_lookahead"]
+__all__ = ["band_reduction_blocked", "band_reduction_lookahead",
+           "check_uniform_tiling"]
+
+
+def check_uniform_tiling(n: int, w: BlockSpec) -> None:
+    """Band reduction needs a *uniform* schedule that tiles ``n`` exactly.
+
+    ``w`` is the output bandwidth, so it cannot vary mid-sweep — and a
+    varying width would also leave the already-banded rows of step k outside
+    the column range the step-k+1 right transform updates (their nonzeros
+    end at ``nxt_k + w_k``, the transform starts at ``nxt_k + w_{k+1}``).
+    For a scalar this reduces to the seed's ``n % w == 0`` rule; an explicit
+    schedule must be the same thing written out (``expand_schedule`` form).
+    Public so the tuner's cost model can reject candidates by the same rule.
+    """
+    spec = normalize_block(w)
+    if isinstance(spec, int):
+        if n % spec:
+            raise ValueError(
+                f"band reduction requires n % w == 0 (n={n}, w={spec})")
+        return
+    # validate the *requested* widths, not the clipped expansion — e.g.
+    # [128] on n=96 would expand to the "uniform" (96,) yet perform no
+    # reduction at all
+    if len(set(spec)) > 1 or n % spec[0]:
+        raise ValueError(
+            f"band reduction requires a uniform schedule tiling n={n} "
+            f"exactly (w is the output bandwidth); got schedule {spec}")
 
 
 def _right_panel(a_rows: jnp.ndarray):
@@ -51,12 +78,11 @@ def _apply_right(c: jnp.ndarray, v: jnp.ndarray, t: jnp.ndarray,
     return (c - backend.gemm(w, v.T)).astype(c.dtype)
 
 
-def band_reduction_blocked(a: jnp.ndarray, w: int = 128, *,
+def band_reduction_blocked(a: jnp.ndarray, w: BlockSpec = 128, *,
                            backend: Backend = JNP_BACKEND) -> jnp.ndarray:
     """Blocked two-sided reduction to band width ``w`` — MTB analogue."""
     n = a.shape[0]
-    if n % w:
-        raise ValueError(f"band reduction requires n % w == 0 (n={n}, w={w})")
+    check_uniform_tiling(n, w)
     for st in panel_steps(n, w):
         o, bw, nxt = st.k, st.bk, st.k_next
         # ---- left QR panel + left update -------------------------------
@@ -74,12 +100,11 @@ def band_reduction_blocked(a: jnp.ndarray, w: int = 128, *,
     return a
 
 
-def band_reduction_lookahead(a: jnp.ndarray, w: int = 128, *,
+def band_reduction_lookahead(a: jnp.ndarray, w: BlockSpec = 128, *,
                              backend: Backend = JNP_BACKEND) -> jnp.ndarray:
     """Band reduction with look-ahead on the right update (see module doc)."""
     n = a.shape[0]
-    if n % w:
-        raise ValueError(f"band reduction requires n % w == 0 (n={n}, w={w})")
+    check_uniform_tiling(n, w)
     steps = list(panel_steps(n, w))
     pnl_next = None                                    # factored next QR panel
 

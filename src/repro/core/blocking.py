@@ -5,10 +5,34 @@ columns per iteration.  In JAX we realise the same traversal as a Python-level
 loop with *static* slice bounds (``k`` is a Python int), so every iteration
 lowers to static-shape ops and the whole factorization unrolls under ``jit``
 — the direct analogue of the FLAME repartitioning.
+
+Block schedules (paper §5, early termination).  The paper's look-ahead with
+malleable BLAS *shrinks b on the fly* when the panel factorization outpaces
+the trailing update.  The static-trace analogue is a **per-iteration block
+schedule**: everywhere a driver accepts a block size ``b`` it may instead
+receive a sequence ``[b_0, b_1, ...]`` of panel widths, consumed one per
+iteration (the last entry repeats if the schedule is shorter than the
+traversal; every width is clipped to the remaining columns).  A scalar ``b``
+is exactly the uniform schedule ``[b, b, ...]`` — :func:`expand_schedule`
+makes the equivalence explicit, and the two paths produce bit-identical
+traces.  ``repro.tune`` emits decreasing-``b`` tail schedules through this
+interface.
 """
 from __future__ import annotations
 
-from typing import Iterator, NamedTuple
+import operator
+from typing import Iterator, NamedTuple, Optional, Sequence, Tuple, Union
+
+#: A block size: a scalar ``b`` or a per-iteration schedule ``[b_0, b_1, ...]``.
+BlockSpec = Union[int, Sequence[int]]
+
+
+def _as_index(b) -> Optional[int]:
+    """Integer value of a scalar block size (accepts numpy ints), else None."""
+    try:
+        return operator.index(b)
+    except TypeError:
+        return None
 
 
 class PanelStep(NamedTuple):
@@ -29,20 +53,74 @@ class PanelStep(NamedTuple):
     last: bool
 
 
-def panel_steps(n: int, b: int) -> Iterator[PanelStep]:
-    """Iterate the panel schedule for an ``n``-wide traversal with block ``b``."""
-    if b <= 0:
-        raise ValueError(f"block size must be positive, got {b}")
-    ks = list(range(0, n, b))
-    for i, k in enumerate(ks):
-        bk = min(b, n - k)
+def _validate_widths(widths: Sequence[int]) -> Tuple[int, ...]:
+    widths = tuple(operator.index(w) for w in widths)
+    if not widths:
+        raise ValueError("block schedule must be non-empty")
+    for w in widths:
+        if w <= 0:
+            raise ValueError(f"block widths must be positive, got {widths}")
+    return widths
+
+
+def expand_schedule(n: int, b: BlockSpec) -> Tuple[int, ...]:
+    """Per-iteration panel widths covering ``[0, n)`` exactly.
+
+    A scalar ``b`` expands to the uniform schedule (last panel clipped);
+    a sequence is consumed in order, its last entry repeating if the
+    traversal is longer than the schedule, every entry clipped to the
+    remaining width.  ``sum(expand_schedule(n, b)) == n`` always.
+    """
+    bi = _as_index(b)
+    if bi is not None:
+        if bi <= 0:
+            raise ValueError(f"block size must be positive, got {bi}")
+        widths = (bi,)
+    else:
+        widths = _validate_widths(b)
+    out = []
+    k, i = 0, 0
+    while k < n:
+        w = min(widths[i], n - k)
+        out.append(w)
+        k += w
+        if i < len(widths) - 1:
+            i += 1
+    return tuple(out)
+
+
+def normalize_block(b: BlockSpec) -> Union[int, Tuple[int, ...]]:
+    """Canonical hashable form of a ``BlockSpec``.
+
+    Scalars (numpy ints included) become ``int``; schedules become validated
+    tuples — the form usable as static/pytree-aux data and for equality.
+    """
+    bi = _as_index(b)
+    return bi if bi is not None else _validate_widths(b)
+
+
+def max_width(b: BlockSpec) -> int:
+    """Largest panel width a ``BlockSpec`` can produce (scalar for gates)."""
+    b = normalize_block(b)
+    return b if isinstance(b, int) else max(b)
+
+
+def panel_steps(n: int, b: BlockSpec) -> Iterator[PanelStep]:
+    """Iterate the panel schedule for an ``n``-wide traversal.
+
+    ``b`` is a scalar block size or a per-iteration schedule (module doc).
+    """
+    widths = expand_schedule(n, b)
+    k = 0
+    for i, bk in enumerate(widths):
         k_next = k + bk
-        b_next = min(b, n - k_next) if k_next < n else 0
-        yield PanelStep(k, bk, k_next, b_next, i == len(ks) - 1)
+        b_next = widths[i + 1] if i + 1 < len(widths) else 0
+        yield PanelStep(k, bk, k_next, b_next, i == len(widths) - 1)
+        k = k_next
 
 
-def num_panels(n: int, b: int) -> int:
-    return (n + b - 1) // b
+def num_panels(n: int, b: BlockSpec) -> int:
+    return len(expand_schedule(n, b))
 
 
 def split_trailing(k_next: int, b_next: int, n: int) -> tuple[slice, slice]:

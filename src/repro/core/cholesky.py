@@ -16,7 +16,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core.backend import Backend, JNP_BACKEND
-from repro.core.blocking import panel_steps, split_trailing
+from repro.core.blocking import BlockSpec, panel_steps, split_trailing
 
 __all__ = [
     "cholesky_unblocked",
@@ -54,7 +54,7 @@ def cholesky_panel(panel: jnp.ndarray, nb: int,
     return out
 
 
-def cholesky_blocked(a: jnp.ndarray, b: int = 128, *,
+def cholesky_blocked(a: jnp.ndarray, b: BlockSpec = 128, *,
                      backend: Backend = JNP_BACKEND) -> jnp.ndarray:
     """Right-looking blocked Cholesky — the MTB analogue."""
     n = a.shape[0]
@@ -71,7 +71,7 @@ def cholesky_blocked(a: jnp.ndarray, b: int = 128, *,
     return jnp.tril(a)
 
 
-def cholesky_tiled(a: jnp.ndarray, b: int = 128, *,
+def cholesky_tiled(a: jnp.ndarray, b: BlockSpec = 128, *,
                    backend: Backend = JNP_BACKEND) -> jnp.ndarray:
     """RTM analogue: trailing update fragmented into b×b tile tasks."""
     n = a.shape[0]
@@ -79,11 +79,11 @@ def cholesky_tiled(a: jnp.ndarray, b: int = 128, *,
         k, bk, k_next = st.k, st.bk, st.k_next
         a = a.at[k:, k : k + bk].set(
             cholesky_panel(a[k:, k : k + bk], bk, backend))
-        for j in range(k_next, n, b):
-            bj = min(b, n - j)
+        for j in range(k_next, n, bk):
+            bj = min(bk, n - j)
             lj = a[j : j + bj, k : k + bk]
-            for i in range(j, n, b):  # lower triangle only
-                bi = min(b, n - i)
+            for i in range(j, n, bk):  # lower triangle only
+                bi = min(bk, n - i)
                 li = a[i : i + bi, k : k + bk]
                 a = a.at[i : i + bi, j : j + bj].set(
                     backend.update(a[i : i + bi, j : j + bj], li, lj.T))
@@ -92,7 +92,7 @@ def cholesky_tiled(a: jnp.ndarray, b: int = 128, *,
 
 def cholesky_lookahead(
     a: jnp.ndarray,
-    b: int = 128,
+    b: BlockSpec = 128,
     *,
     backend: Backend = JNP_BACKEND,
     fused_pu: Optional[Callable] = None,

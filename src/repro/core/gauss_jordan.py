@@ -22,7 +22,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core.backend import Backend, JNP_BACKEND
-from repro.core.blocking import panel_steps
+from repro.core.blocking import BlockSpec, panel_steps
 
 __all__ = ["gj_inverse_unblocked", "gj_inverse_blocked", "gj_inverse_lookahead"]
 
@@ -56,7 +56,7 @@ def _gj_panel(a: jnp.ndarray, k: int, bk: int,
     return backend.gemm(p - eye_cols, dinv)
 
 
-def gj_inverse_blocked(a: jnp.ndarray, b: int = 128, *,
+def gj_inverse_blocked(a: jnp.ndarray, b: BlockSpec = 128, *,
                        backend: Backend = JNP_BACKEND) -> jnp.ndarray:
     """Blocked GJE inversion — MTB analogue (one update op per iteration)."""
     n = a.shape[0]
@@ -71,7 +71,7 @@ def gj_inverse_blocked(a: jnp.ndarray, b: int = 128, *,
     return a
 
 
-def gj_inverse_lookahead(a: jnp.ndarray, b: int = 128, *,
+def gj_inverse_lookahead(a: jnp.ndarray, b: BlockSpec = 128, *,
                          backend: Backend = JNP_BACKEND) -> jnp.ndarray:
     """GJE inversion with static look-ahead.
 

@@ -17,7 +17,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core.backend import Backend, JNP_BACKEND
-from repro.core.blocking import panel_steps, split_trailing
+from repro.core.blocking import BlockSpec, panel_steps, split_trailing
 
 __all__ = ["ldlt_unblocked", "ldlt_panel", "ldlt_blocked", "ldlt_lookahead",
            "unpack_ldlt"]
@@ -52,7 +52,7 @@ def ldlt_panel(panel: jnp.ndarray, nb: int,
     return out
 
 
-def ldlt_blocked(a: jnp.ndarray, b: int = 128, *,
+def ldlt_blocked(a: jnp.ndarray, b: BlockSpec = 128, *,
                  backend: Backend = JNP_BACKEND) -> jnp.ndarray:
     """Blocked right-looking LDLᵀ — MTB analogue."""
     n = a.shape[0]
@@ -70,7 +70,7 @@ def ldlt_blocked(a: jnp.ndarray, b: int = 128, *,
 
 def ldlt_lookahead(
     a: jnp.ndarray,
-    b: int = 128,
+    b: BlockSpec = 128,
     *,
     backend: Backend = JNP_BACKEND,
     fused_pu: Optional[Callable] = None,

@@ -56,27 +56,101 @@ _REGISTRY: Dict[str, Dict[str, Callable]] = {
 VARIANTS = ("mtb", "rtm", "la", "la_mb")
 FACTORIZATIONS = tuple(_REGISTRY)
 
+#: Variants resolved by composition rather than a registry row: ``la_mb``
+#: (``la`` + fused panel-update kernel) and ``tuned`` (config from
+#: ``repro.tune``'s persistent cache, falling back to ``la`` when cold).
+DERIVED_VARIANTS = ("la_mb", "tuned")
+
+#: ``tuned`` substitutes the cached block schedule for the caller's — only
+#: valid where the block size is a pure performance knob.  Band reduction is
+#: excluded: its ``w`` is the *output bandwidth*, so overriding it would
+#: change the mathematical result, not just the schedule.
+TUNABLE = tuple(d for d in _REGISTRY if d != "band_reduction")
+
+
+def list_variants(dmf: str) -> tuple[str, ...]:
+    """Variants actually available for ``dmf``.
+
+    Unlike the paper-taxonomy constant :data:`VARIANTS` — which advertises
+    ``rtm`` even for DMFs that only implement ``mtb``/``la`` — every name
+    returned here resolves through :func:`get_variant` without a KeyError.
+    """
+    if dmf not in _REGISTRY:
+        raise KeyError(f"unknown DMF {dmf!r}; expected one of {FACTORIZATIONS}")
+    table = _REGISTRY[dmf]
+    out = [v for v in VARIANTS if v in table]
+    if "la" in table:
+        out.append("la_mb")
+    if dmf in TUNABLE:
+        out.append("tuned")
+    return tuple(out)
+
+
+def _make_la_mb(dmf: str, la: Callable) -> Callable:
+    from repro.kernels import ops as kops
+
+    fused = kops.FUSED_PU.get(dmf)
+    if fused is None:
+        return la
+
+    def la_mb(a, b=128, **kw):
+        # forward b by keyword so callers may use either fn(a, 32) or
+        # fn(a, b=[48, 32, 16]); an explicit fused_pu= kwarg wins.
+        kw.setdefault("fused_pu", fused)
+        return la(a, b=b, **kw)
+
+    return la_mb
+
+
+def _make_tuned(dmf: str, table: Dict[str, Callable]) -> Callable:
+    def tuned(a, b=None, **kw):
+        """Dispatch through the ``repro.tune`` cache (DESIGN.md §9).
+
+        Cache hit → the tuned (variant, schedule) pair runs, on the caller's
+        backend.  Cold cache → the ``la`` driver with the caller's block size
+        (or 128), so ``"tuned"`` is always executable.
+        """
+        from repro import tune
+        from repro.core.backend import get_backend
+
+        be = kw.get("backend")
+        if isinstance(be, str):            # drivers expect a Backend instance
+            be = kw["backend"] = get_backend(be)
+        bname = getattr(be, "name", "jnp")
+        cfg = tune.tuned(dmf, a.shape, dtype=a.dtype, backend=bname)
+        # block is positional: band_reduction names the parameter w, not b
+        if cfg is not None:
+            return get_variant(dmf, cfg.variant)(a, cfg.schedule, **kw)
+        fallback = table.get("la", table["mtb"])
+        return fallback(a, b if b is not None else 128, **kw)
+
+    return tuned
+
 
 def get_variant(dmf: str, variant: str) -> Callable:
     """Resolve (factorization, scheduling-variant) to a callable.
 
     ``la_mb`` resolves to the look-ahead driver with the fused Pallas
     panel-update kernel plugged in (falls back to ``la`` for DMFs without a
-    fused kernel).
+    fused kernel).  ``tuned`` resolves the (variant, block schedule) pair
+    recorded by :mod:`repro.tune` for the input's (shape, dtype, backend) at
+    call time, falling back to ``la`` with the caller's block size when the
+    cache is cold.
     """
     if dmf not in _REGISTRY:
         raise KeyError(f"unknown DMF {dmf!r}; expected one of {FACTORIZATIONS}")
     table = _REGISTRY[dmf]
     if variant == "la_mb":
-        from repro.kernels import ops as kops
-
-        la = table["la"]
-        fused = kops.FUSED_PU.get(dmf)
-        if fused is None:
-            return la
-        return lambda a, b=128, **kw: la(a, b, fused_pu=fused, **kw)
+        return _make_la_mb(dmf, table["la"])
+    if variant == "tuned":
+        if dmf not in TUNABLE:
+            raise KeyError(
+                f"variant 'tuned' not available for {dmf!r}: its block size "
+                f"defines the output, not just the schedule; "
+                f"have {list_variants(dmf)}")
+        return _make_tuned(dmf, table)
     if variant not in table:
         raise KeyError(
             f"variant {variant!r} not available for {dmf!r}; "
-            f"have {tuple(table)} (+ 'la_mb')")
+            f"have {list_variants(dmf)}")
     return table[variant]

@@ -30,7 +30,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core.backend import Backend, JNP_BACKEND
-from repro.core.blocking import panel_steps, split_trailing
+from repro.core.blocking import BlockSpec, panel_steps, split_trailing
 
 __all__ = [
     "lu_unblocked",
@@ -119,7 +119,7 @@ def unpack_lu(lu: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
 # ---------------------------------------------------------------------------
 def lu_blocked(
     a: jnp.ndarray,
-    b: int = 128,
+    b: BlockSpec = 128,
     *,
     backend: Backend = JNP_BACKEND,
     panel_fn: Optional[Callable] = None,
@@ -156,7 +156,7 @@ def lu_blocked(
 # ---------------------------------------------------------------------------
 def lu_tiled(
     a: jnp.ndarray,
-    b: int = 128,
+    b: BlockSpec = 128,
     *,
     backend: Backend = JNP_BACKEND,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
@@ -181,14 +181,16 @@ def lu_tiled(
             break
         a = a.at[:, st.k_next :].set(laswp(a[:, st.k_next :], piv, offset=k))
         l11 = a[k : k + bk, k : k + bk]
-        # one "task" per trailing column panel j (TU_k^j), itself tiled by rows
-        for j in range(st.k_next, n, b):
-            bj = min(b, n - j)
+        # one "task" per trailing column panel j (TU_k^j), itself tiled by
+        # rows; the tile edge is this step's panel width (== b for scalar b on
+        # every step that has trailing work, and the schedule entry otherwise)
+        for j in range(st.k_next, n, bk):
+            bj = min(bk, n - j)
             u12 = backend.trsm(l11, a[k : k + bk, j : j + bj],
                                side="left", lower=True, unit_diagonal=True)
             a = a.at[k : k + bk, j : j + bj].set(u12)
-            for i in range(st.k_next, n, b):
-                bi = min(b, n - i)
+            for i in range(st.k_next, n, bk):
+                bi = min(bk, n - i)
                 l21 = a[i : i + bi, k : k + bk]
                 a = a.at[i : i + bi, j : j + bj].set(
                     backend.update(a[i : i + bi, j : j + bj], l21, u12))
@@ -200,7 +202,7 @@ def lu_tiled(
 # ---------------------------------------------------------------------------
 def lu_lookahead(
     a: jnp.ndarray,
-    b: int = 128,
+    b: BlockSpec = 128,
     *,
     backend: Backend = JNP_BACKEND,
     fused_pu: Optional[Callable] = None,

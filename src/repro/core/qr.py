@@ -20,7 +20,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core.backend import Backend, JNP_BACKEND
-from repro.core.blocking import panel_steps, split_trailing
+from repro.core.blocking import BlockSpec, panel_steps, split_trailing
 
 __all__ = [
     "qr_unblocked",
@@ -120,7 +120,7 @@ def apply_qt_blocked(p: _Panel, c: jnp.ndarray,
     return (c - backend.gemm(p.v, w)).astype(c.dtype)
 
 
-def qr_blocked(a: jnp.ndarray, b: int = 128, *,
+def qr_blocked(a: jnp.ndarray, b: BlockSpec = 128, *,
                backend: Backend = JNP_BACKEND) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Blocked GEQRF — the MTB analogue.  Returns (packed A, tau)."""
     m, n = a.shape
@@ -138,7 +138,7 @@ def qr_blocked(a: jnp.ndarray, b: int = 128, *,
     return a, taus
 
 
-def qr_tiled(a: jnp.ndarray, b: int = 128, *,
+def qr_tiled(a: jnp.ndarray, b: BlockSpec = 128, *,
              backend: Backend = JNP_BACKEND) -> tuple[jnp.ndarray, jnp.ndarray]:
     """RTM analogue: trailing update fragmented into per-panel tasks."""
     m, n = a.shape
@@ -150,8 +150,8 @@ def qr_tiled(a: jnp.ndarray, b: int = 128, *,
         packed, tau, p = _factor_panel(a[k:, k : k + bk])
         a = a.at[k:, k : k + bk].set(packed)
         taus = taus.at[k : k + bk].set(tau[: min(bk, m - k)])
-        for j in range(k_next, n, b):          # one task per column panel
-            bj = min(b, n - j)
+        for j in range(k_next, n, bk):         # one task per column panel
+            bj = min(bk, n - j)
             a = a.at[k:, j : j + bj].set(
                 apply_qt_blocked(p, a[k:, j : j + bj], backend))
     return a, taus
@@ -159,7 +159,7 @@ def qr_tiled(a: jnp.ndarray, b: int = 128, *,
 
 def qr_lookahead(
     a: jnp.ndarray,
-    b: int = 128,
+    b: BlockSpec = 128,
     *,
     backend: Backend = JNP_BACKEND,
     fused_pu: Optional[Callable] = None,
@@ -217,7 +217,7 @@ def qr_lookahead(
     return a, taus
 
 
-def form_q(a_packed: jnp.ndarray, taus: jnp.ndarray, b: int = 128, *,
+def form_q(a_packed: jnp.ndarray, taus: jnp.ndarray, b: BlockSpec = 128, *,
            backend: Backend = JNP_BACKEND) -> jnp.ndarray:
     """Form Q (m × m) explicitly from GEQRF output (ORGQR analogue)."""
     m, n = a_packed.shape

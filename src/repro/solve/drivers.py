@@ -1,12 +1,15 @@
 """LAPACK-style driver routines built on the DMF layer (DESIGN.md §8).
 
 Every driver accepts ``variant=`` (one of the scheduling strategies the
-paper evaluates — ``mtb``/``rtm``/``la``/``la_mb``, resolved through
+paper evaluates — ``mtb``/``rtm``/``la``/``la_mb``, plus ``"tuned"`` which
+resolves the autotuned (variant, block schedule) pair from the
+:mod:`repro.tune` cache, all through
 :func:`repro.core.lookahead.get_variant`) and ``backend=`` (``"jnp"`` for
 XLA-native BLAS, ``"pallas"`` for the BLIS-analogue kernels, or a
 :class:`~repro.core.backend.Backend` instance), so the look-ahead schedules
 and the Pallas BLAS flow through the factor *and* solve phases unchanged —
-the variant/backend contract.
+the variant/backend contract.  ``block`` may be a scalar or a per-iteration
+schedule (:data:`repro.core.blocking.BlockSpec`, DESIGN.md §9).
 
 Factor steps (``lu_factor`` …) return the immutable factor objects from
 :mod:`repro.solve.factors`; the one-shot drivers (``gesv`` …) are thin
@@ -25,6 +28,7 @@ from typing import Union
 import jax.numpy as jnp
 
 from repro.core.backend import Backend, get_backend
+from repro.core.blocking import BlockSpec, normalize_block
 from repro.core.lookahead import get_variant
 from repro.solve.factors import (CholeskyFactors, LDLTFactors, LUFactors,
                                  QRFactors)
@@ -41,59 +45,66 @@ def _resolve(backend: BackendLike) -> Backend:
     return get_backend(backend) if isinstance(backend, str) else backend
 
 
+# factor-object aux data must be hashable: schedules become tuples
+_static_block = normalize_block
+
+
 # ---------------------------------------------------------------------------
 # Factor steps — factor once, reuse the object for many solves.
 # ---------------------------------------------------------------------------
-def lu_factor(a: jnp.ndarray, block: int = 128, *, variant: str = "la",
+def lu_factor(a: jnp.ndarray, block: BlockSpec = 128, *, variant: str = "la",
               backend: BackendLike = "jnp") -> LUFactors:
     be = _resolve(backend)
     lu, ipiv = get_variant("lu", variant)(a, block, backend=be)
-    return LUFactors.from_packed(lu, ipiv, block=block, backend=be)
+    return LUFactors.from_packed(lu, ipiv, block=_static_block(block),
+                                 backend=be)
 
 
-def cholesky_factor(a: jnp.ndarray, block: int = 128, *, variant: str = "la",
+def cholesky_factor(a: jnp.ndarray, block: BlockSpec = 128, *, variant: str = "la",
                     backend: BackendLike = "jnp") -> CholeskyFactors:
     be = _resolve(backend)
     l = get_variant("cholesky", variant)(a, block, backend=be)
-    return CholeskyFactors(l=l, block=block, backend=be)
+    return CholeskyFactors(l=l, block=_static_block(block), backend=be)
 
 
-def qr_factor(a: jnp.ndarray, block: int = 128, *, variant: str = "la",
+def qr_factor(a: jnp.ndarray, block: BlockSpec = 128, *, variant: str = "la",
               backend: BackendLike = "jnp") -> QRFactors:
     be = _resolve(backend)
     packed, taus = get_variant("qr", variant)(a, block, backend=be)
-    return QRFactors(packed=packed, taus=taus, block=block, backend=be)
+    return QRFactors(packed=packed, taus=taus,
+                     block=_static_block(block), backend=be)
 
 
-def ldlt_factor(a: jnp.ndarray, block: int = 128, *, variant: str = "la",
+def ldlt_factor(a: jnp.ndarray, block: BlockSpec = 128, *, variant: str = "la",
                 backend: BackendLike = "jnp") -> LDLTFactors:
     be = _resolve(backend)
     packed = get_variant("ldlt", variant)(a, block, backend=be)
-    return LDLTFactors(packed=packed, block=block, backend=be)
+    return LDLTFactors(packed=packed, block=_static_block(block),
+                       backend=be)
 
 
 # ---------------------------------------------------------------------------
 # One-shot drivers.
 # ---------------------------------------------------------------------------
-def gesv(a: jnp.ndarray, b: jnp.ndarray, block: int = 128, *,
+def gesv(a: jnp.ndarray, b: jnp.ndarray, block: BlockSpec = 128, *,
          variant: str = "la", backend: BackendLike = "jnp") -> jnp.ndarray:
     """Solve ``A·X = B`` for general square A (LU with partial pivoting)."""
     return lu_factor(a, block, variant=variant, backend=backend).solve(b)
 
 
-def posv(a: jnp.ndarray, b: jnp.ndarray, block: int = 128, *,
+def posv(a: jnp.ndarray, b: jnp.ndarray, block: BlockSpec = 128, *,
          variant: str = "la", backend: BackendLike = "jnp") -> jnp.ndarray:
     """Solve ``A·X = B`` for symmetric positive-definite A (Cholesky)."""
     return cholesky_factor(a, block, variant=variant, backend=backend).solve(b)
 
 
-def gels(a: jnp.ndarray, b: jnp.ndarray, block: int = 128, *,
+def gels(a: jnp.ndarray, b: jnp.ndarray, block: BlockSpec = 128, *,
          variant: str = "la", backend: BackendLike = "jnp") -> jnp.ndarray:
     """Least-squares ``argmin‖A·X − B‖₂`` for m ≥ n via Householder QR."""
     return qr_factor(a, block, variant=variant, backend=backend).solve(b)
 
 
-def getri(a: jnp.ndarray, block: int = 128, *, variant: str = "la",
+def getri(a: jnp.ndarray, block: BlockSpec = 128, *, variant: str = "la",
           backend: BackendLike = "jnp", method: str = "lu") -> jnp.ndarray:
     """Matrix inverse.
 
@@ -111,7 +122,7 @@ def getri(a: jnp.ndarray, block: int = 128, *, variant: str = "la",
     raise ValueError(f"method must be 'lu' or 'gj', got {method!r}")
 
 
-def gecon(a: jnp.ndarray, block: int = 128, *, variant: str = "la",
+def gecon(a: jnp.ndarray, block: BlockSpec = 128, *, variant: str = "la",
           backend: BackendLike = "jnp", iters: int = 5) -> jnp.ndarray:
     """Reciprocal 1-norm condition estimate ``1 / (‖A‖₁·est(‖A⁻¹‖₁))``.
 

@@ -21,7 +21,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.core.backend import Backend, JNP_BACKEND
-from repro.core.blocking import panel_steps
+from repro.core.blocking import BlockSpec, max_width, panel_steps
 
 __all__ = ["trsm_blocked", "lu_solve_packed"]
 
@@ -41,7 +41,7 @@ def trsm_blocked(
     lower: bool = True,
     trans: bool = False,
     unit_diagonal: bool = False,
-    block: int = 128,
+    block: BlockSpec = 128,
     backend: Backend = JNP_BACKEND,
     lookahead: bool = True,
 ) -> jnp.ndarray:
@@ -101,7 +101,7 @@ def lu_solve_packed(
     lu: jnp.ndarray,
     rhs: jnp.ndarray,
     *,
-    block: int = 128,
+    block: BlockSpec = 128,
     backend: Backend = JNP_BACKEND,
     lookahead: bool = True,
 ) -> jnp.ndarray:
@@ -114,7 +114,7 @@ def lu_solve_packed(
     :func:`trsm_blocked` pair.
     """
     n = lu.shape[0]
-    if backend.name == "pallas" and n <= block:
+    if backend.name == "pallas" and n <= max_width(block):
         from repro.kernels import ops as kops
 
         return kops.lu_solve_small(lu, rhs)

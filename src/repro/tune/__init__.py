@@ -1,0 +1,41 @@
+"""``repro.tune`` — autotuning + adaptive block schedules (DESIGN.md §9).
+
+The paper fixes the algorithmic block size by hand (b = 192 to match the
+BLIS micro-kernel, §6.1) and shrinks it on the fly via early termination
+(§5).  This subsystem replaces both hand decisions with a model-seeded
+empirical search per ``(dmf, n, dtype, backend)``:
+
+* :func:`search` — sweep (variant × block size × uniform/tail schedule),
+  pruned by the analytical cost model, measured with the shared benchmark
+  timer, persisted in the cache;
+* :func:`tuned` — read-only cache lookup; the hook behind
+  ``get_variant(dmf, "tuned")`` and ``variant="tuned"`` in ``repro.solve``;
+* :class:`TuneCache` / :class:`TuneConfig` — the JSON-on-disk record with
+  an in-memory LRU front;
+* :func:`tail_schedule` — decreasing-``b`` schedules, the static-trace
+  analogue of the paper's malleable-BLAS early termination.
+"""
+from repro.tune import model
+from repro.tune.cache import (TuneCache, TuneConfig, cache_key, default_cache,
+                              set_default_cache, tuned)
+from repro.tune.schedule import is_uniform, tail_schedule, uniform_schedule
+from repro.tune.search import (BASELINE_BLOCK, BASELINE_VARIANT,
+                               DEFAULT_BLOCKS, Candidate, search)
+
+__all__ = [
+    "model",
+    "TuneCache",
+    "TuneConfig",
+    "cache_key",
+    "default_cache",
+    "set_default_cache",
+    "tuned",
+    "is_uniform",
+    "tail_schedule",
+    "uniform_schedule",
+    "Candidate",
+    "search",
+    "DEFAULT_BLOCKS",
+    "BASELINE_BLOCK",
+    "BASELINE_VARIANT",
+]

@@ -1,0 +1,238 @@
+"""Persistent tuning cache: JSON on disk, in-memory LRU in front.
+
+One entry per ``backend + dmf + shape + dtype`` key (DESIGN.md §9) holding
+the winning :class:`TuneConfig`.  The disk file is the cross-process record
+(written atomically, re-read when another process updated it); the LRU keeps
+the hot keys out of the JSON parse on repeated ``tuned()`` dispatches inside
+a factor-heavy run.
+
+Cache location: ``$REPRO_TUNE_CACHE`` if set, else
+``~/.cache/repro/tune.json``.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import json
+import os
+import tempfile
+from collections import OrderedDict
+from pathlib import Path
+from typing import Optional, Tuple, Union
+
+import jax.numpy as jnp
+
+__all__ = ["TuneConfig", "TuneCache", "cache_key", "default_cache",
+           "set_default_cache", "tuned"]
+
+ENV_VAR = "REPRO_TUNE_CACHE"
+_DEFAULT_PATH = Path("~/.cache/repro/tune.json")
+
+ShapeLike = Union[int, Tuple[int, ...]]
+
+
+def _norm_shape(shape: ShapeLike) -> Tuple[int, ...]:
+    if isinstance(shape, int):
+        return (shape, shape)
+    return tuple(int(s) for s in shape)
+
+
+def _norm_dtype(dtype) -> str:
+    return jnp.dtype(dtype).name
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneConfig:
+    """The winner of one tuning search — everything ``"tuned"`` dispatch needs."""
+
+    dmf: str
+    shape: Tuple[int, ...]
+    dtype: str                       # canonical numpy name, e.g. "float32"
+    backend: str                     # backend the measurement ran on
+    variant: str                     # concrete variant (never "tuned")
+    schedule: Tuple[int, ...]        # per-iteration block widths
+    seconds: float                   # measured wall-clock of the winner
+    baseline_seconds: float          # measured fixed-b la baseline
+    from_cache: bool = False         # True when returned without measuring
+
+    def __post_init__(self):
+        if self.variant == "tuned":
+            raise ValueError("a TuneConfig must record a concrete variant")
+
+    def to_json(self) -> dict:
+        d = dataclasses.asdict(self)
+        d.pop("from_cache")
+        d["shape"] = list(self.shape)
+        d["schedule"] = list(self.schedule)
+        return d
+
+    @classmethod
+    def from_json(cls, d: dict, *, from_cache: bool = False) -> "TuneConfig":
+        return cls(dmf=d["dmf"], shape=tuple(d["shape"]), dtype=d["dtype"],
+                   backend=d["backend"], variant=d["variant"],
+                   schedule=tuple(d["schedule"]), seconds=d["seconds"],
+                   baseline_seconds=d["baseline_seconds"],
+                   from_cache=from_cache)
+
+
+def cache_key(dmf: str, shape: ShapeLike, dtype, backend: str) -> str:
+    """``backend:dmf:MxN:dtype`` — the §9 cache-key format."""
+    m, n = (_norm_shape(shape) + (0, 0))[:2]
+    return f"{backend}:{dmf}:{m}x{n}:{_norm_dtype(dtype)}"
+
+
+class TuneCache:
+    """Write-through JSON store with an LRU front (newest at the end)."""
+
+    #: LRU sentinel for a key known to be absent on disk — a cold-cache
+    #: ``tuned()`` dispatch must not re-parse the JSON on every call.
+    _MISS = object()
+
+    def __init__(self, path: Optional[Union[str, Path]] = None,
+                 lru_size: int = 64):
+        env = os.environ.get(ENV_VAR)
+        self.path = Path(path or env or _DEFAULT_PATH).expanduser()
+        self.lru_size = lru_size
+        self._lru: "OrderedDict[str, object]" = OrderedDict()
+        self._lru_stamp = self._file_stamp()
+
+    def _file_stamp(self):
+        """(mtime_ns, size) of the JSON file — None when absent."""
+        try:
+            st = os.stat(self.path)
+            return (st.st_mtime_ns, st.st_size)
+        except OSError:
+            return None
+
+    # -- disk ----------------------------------------------------------------
+    def _read_disk(self) -> dict:
+        try:
+            with open(self.path) as f:
+                return json.load(f)
+        except (FileNotFoundError, json.JSONDecodeError):
+            return {}
+
+    def _write_disk(self, data: dict) -> None:
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=self.path.parent,
+                                   prefix=self.path.name, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(data, f, indent=1, sort_keys=True)
+            os.replace(tmp, self.path)               # atomic on POSIX
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+
+    @contextlib.contextmanager
+    def _locked(self):
+        """Exclusive advisory lock so concurrent put()s don't drop entries.
+
+        The read-modify-write in :meth:`put` would otherwise lose the other
+        writer's update (last rename wins).  Best-effort: on platforms
+        without ``fcntl`` the atomic rename still prevents corruption.
+        """
+        try:
+            import fcntl
+        except ImportError:                          # non-POSIX: no locking
+            yield
+            return
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+        with open(self.path.with_suffix(self.path.suffix + ".lock"), "w") as f:
+            fcntl.flock(f, fcntl.LOCK_EX)
+            try:
+                yield
+            finally:
+                fcntl.flock(f, fcntl.LOCK_UN)
+
+    # -- API -----------------------------------------------------------------
+    def get(self, key: str) -> Optional[TuneConfig]:
+        # The LRU is a memo of an *unchanged* file (stat() is far cheaper
+        # than a JSON parse): if another process rewrote it, drop the memo so
+        # tune-then-serve across processes picks up new entries.
+        stamp = self._file_stamp()
+        if stamp != self._lru_stamp:
+            self._lru.clear()
+            self._lru_stamp = stamp
+        if key in self._lru:
+            self._lru.move_to_end(key)
+            hit = self._lru[key]
+            return None if hit is self._MISS else hit
+        entry = self._read_disk().get(key)
+        if entry is not None:
+            try:
+                cfg = TuneConfig.from_json(entry, from_cache=True)
+            except (KeyError, TypeError, ValueError):
+                entry = None              # schema-skewed/hand-edited: a miss,
+                #                           the read-only probe must not crash
+        if entry is None:
+            self._remember(key, self._MISS)   # negative lookups memoize too
+            return None
+        self._remember(key, cfg)
+        return cfg
+
+    def put(self, key: str, cfg: TuneConfig) -> None:
+        with self._locked():
+            data = self._read_disk()
+            data[key] = cfg.to_json()
+            self._write_disk(data)
+            # stamp inside the lock: after release another process may write
+            # a newer file, and stamping *that* would mask its entries with
+            # our memo below
+            stamp = self._file_stamp()
+        # drop stale memos (a sentinel may mask a key another process wrote
+        # between our last get() and this put()) before stamping the new file
+        self._lru.clear()
+        self._lru_stamp = stamp
+        self._remember(key, dataclasses.replace(cfg, from_cache=True))
+
+    def _remember(self, key: str, cfg) -> None:
+        self._lru[key] = cfg
+        self._lru.move_to_end(key)
+        while len(self._lru) > self.lru_size:
+            self._lru.popitem(last=False)
+
+    def clear(self) -> None:
+        self._lru.clear()
+        try:
+            os.unlink(self.path)
+        except FileNotFoundError:
+            pass
+        self._lru_stamp = None
+
+    def __len__(self) -> int:
+        return len(self._read_disk())
+
+
+_DEFAULT: Optional[TuneCache] = None
+
+
+def default_cache() -> TuneCache:
+    """The process-wide cache (honours ``$REPRO_TUNE_CACHE`` at first use)."""
+    global _DEFAULT
+    if _DEFAULT is None:
+        _DEFAULT = TuneCache()
+    return _DEFAULT
+
+
+def set_default_cache(cache: Optional[TuneCache]) -> Optional[TuneCache]:
+    """Swap the process-wide cache (tests, benchmarks); returns the old one."""
+    global _DEFAULT
+    old, _DEFAULT = _DEFAULT, cache
+    return old
+
+
+def tuned(dmf: str, shape: ShapeLike, *, dtype=jnp.float32,
+          backend: str = "jnp",
+          cache: Optional[TuneCache] = None) -> Optional[TuneConfig]:
+    """Cached config for ``(dmf, shape, dtype, backend)``, or None when cold.
+
+    This is the read-only dispatch hook behind
+    ``get_variant(dmf, "tuned")`` — it never triggers a measurement; run
+    :func:`repro.tune.search` to populate the cache.
+    """
+    cache = cache if cache is not None else default_cache()
+    return cache.get(cache_key(dmf, shape, dtype, backend))

@@ -1,0 +1,161 @@
+"""Analytical cost model that seeds and prunes the empirical sweep.
+
+Per "Co-Design of the Dense Linear Algebra Software Stack" (PAPERS.md) the
+tuning search should be *model-seeded*: a cheap analytical ranking picks the
+few candidates worth measuring, and only those hit the wall clock.  The
+model reuses the roofline flop/byte accounting constants from
+:mod:`repro.launch.roofline` (peak FLOP/s, HBM bandwidth) and adds the two
+empirical facts the paper's §5/§6.1 analysis turns on:
+
+* the trailing update runs near BLAS-3 peak (``GEMM_EFF``), while the
+  unblocked panel factorization is latency-bound and runs orders of
+  magnitude below it (``PANEL_EFF``) — this is what makes small ``b`` lose;
+* per-iteration combination depends on the scheduling variant: ``mtb``
+  serializes panel and update, ``la``/``la_mb`` overlap them
+  (``max(PF, TU)``, paper §4), and ``rtm`` pays a per-task overhead for its
+  fragmented trailing update (paper §3.3).
+
+Absolute predictions are not the point — only the *ranking* feeds the
+search, and the search always measures the fixed-``b`` baseline too.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Sequence, Tuple
+
+import jax.numpy as jnp
+
+from repro.core.blocking import BlockSpec, panel_steps
+from repro.launch.roofline import HBM_BW, PEAK_FLOPS
+
+__all__ = ["predict", "rank", "step_costs"]
+
+# Effective fraction of bf16 peak for BLAS-3 trailing updates, per backend.
+# The Pallas kernels run interpreted on CPU (DESIGN.md §2) — heavily derated
+# so the model never sends the sweep there unless asked to.
+GEMM_EFF = {"jnp": 0.80, "pallas": 0.05}
+# The unblocked panel is a sequential fori_loop of rank-1 updates.
+PANEL_EFF = 0.01
+# Fixed per-iteration dispatch cost and the RTM per-tile task overhead.
+STEP_OVERHEAD_S = 2e-6
+RTM_TASK_OVERHEAD_S = 1e-6
+
+
+def _peak_flops(dtype) -> float:
+    """Scale the bf16 roofline peak by element width (MXU-style)."""
+    itemsize = jnp.dtype(dtype).itemsize
+    return PEAK_FLOPS * 2.0 / max(itemsize, 2)
+
+
+# ---------------------------------------------------------------------------
+# Per-step (panel_flops, update_flops, update_bytes) decompositions.
+# `k, bk` come from the PanelStep; `n` is the traversal width.
+# ---------------------------------------------------------------------------
+def _lu(n: int, k: int, bk: int, itemsize: int):
+    r = n - k - bk
+    pf = 2.0 * bk * bk * (n - k)                     # GETF2 rank-1 sweep
+    tu = bk * bk * r + 2.0 * bk * r * r              # TRSM + GEMM
+    byts = 3.0 * r * (r + bk) * itemsize             # read/update/write trailing
+    return pf, tu, byts
+
+
+def _cholesky(n: int, k: int, bk: int, itemsize: int):
+    r = n - k - bk
+    pf = bk * bk * (n - k)
+    tu = bk * bk * r + bk * r * r                    # TRSM + half-GEMM (syrk)
+    byts = 1.5 * r * (r + bk) * itemsize
+    return pf, tu, byts
+
+
+def _qr(n: int, k: int, bk: int, itemsize: int):
+    r = n - k - bk
+    m = n - k                                        # panel rows
+    pf = 4.0 * bk * bk * m                           # GEQR2 + T build
+    tu = 4.0 * bk * m * r                            # two GEMMs of the WY apply
+    byts = 3.0 * m * r * itemsize
+    return pf, tu, byts
+
+
+def _gauss_jordan(n: int, k: int, bk: int, itemsize: int):
+    pf = 2.0 * bk * bk * n                           # D⁻¹ + M build
+    tu = 2.0 * bk * n * (n - bk)                     # update of ALL other cols
+    byts = 3.0 * n * n * itemsize
+    return pf, tu, byts
+
+
+def _band_reduction(n: int, k: int, bk: int, itemsize: int):
+    r = n - k - bk
+    m = n - k
+    pf = 8.0 * bk * bk * m                           # left QR + right LQ panels
+    tu = 8.0 * bk * m * r                            # both two-sided updates
+    byts = 4.0 * m * r * itemsize
+    return pf, tu, byts
+
+
+STEP_COSTS: Dict[str, Callable] = {
+    "lu": _lu,
+    "cholesky": _cholesky,
+    "qr": _qr,
+    "ldlt": _cholesky,                               # same BLAS-3 shape
+    "gauss_jordan": _gauss_jordan,
+    "band_reduction": _band_reduction,
+}
+
+
+def step_costs(dmf: str, n: int, k: int, bk: int,
+               dtype=jnp.float32) -> Tuple[float, float, float]:
+    """(panel_flops, update_flops, update_bytes) for iteration ``k``."""
+    if dmf not in STEP_COSTS:
+        raise KeyError(f"no cost model for DMF {dmf!r}")
+    return STEP_COSTS[dmf](n, k, bk, jnp.dtype(dtype).itemsize)
+
+
+def predict(dmf: str, n: int, dtype, variant: str, schedule: BlockSpec,
+            backend: str = "jnp") -> float:
+    """Modeled seconds for one factorization under ``schedule``.
+
+    Raises ValueError for schedules the DMF would reject (band reduction's
+    uniform-bandwidth rule, checked by the same core helper the drivers
+    use), so :func:`rank` can sort them last.
+    """
+    if dmf == "band_reduction":
+        from repro.core.band_reduction import check_uniform_tiling
+
+        check_uniform_tiling(n, schedule)
+    peak = _peak_flops(dtype)
+    gemm_eff = GEMM_EFF.get(backend, 0.5)
+    total = 0.0
+    for st in panel_steps(n, schedule):
+        pf_fl, tu_fl, tu_by = step_costs(dmf, n, st.k, st.bk, dtype)
+        pf_t = pf_fl / (peak * PANEL_EFF)
+        tu_t = max(tu_fl / (peak * gemm_eff), tu_by / HBM_BW)
+        if variant in ("la", "la_mb", "tuned"):
+            # look-ahead: the panel of k+1 hides under TU_right(k)
+            step_t = max(pf_t, tu_t)
+            if variant == "la_mb":
+                step_t = max(0.8 * pf_t, tu_t)       # fused PU, VMEM-resident
+        elif variant == "rtm":
+            r = n - st.k_next
+            ntasks = max(1, -(-r // st.bk)) ** 2
+            step_t = pf_t + tu_t + ntasks * RTM_TASK_OVERHEAD_S
+        else:                                        # mtb: barrier-separated
+            step_t = pf_t + tu_t
+        total += step_t + STEP_OVERHEAD_S
+    return total
+
+
+def rank(dmf: str, n: int, dtype,
+         candidates: Sequence) -> list:
+    """Candidates sorted by modeled time (ascending).
+
+    Each candidate needs ``.variant``, ``.schedule``, ``.backend``
+    attributes (see :class:`repro.tune.search.Candidate`); candidates whose
+    schedule :func:`predict` rejects as invalid for the DMF (band
+    reduction's uniform-bandwidth rule) sort last rather than raising.
+    """
+    def score(c):
+        try:
+            return predict(dmf, n, dtype, c.variant, c.schedule, c.backend)
+        except (KeyError, ValueError):
+            return float("inf")
+
+    return sorted(candidates, key=score)

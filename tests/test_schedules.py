@@ -1,0 +1,173 @@
+"""Per-iteration block schedules across every (dmf, variant) pair.
+
+Three contracts (ISSUE 2, DESIGN.md §9):
+
+* **ragged sizes** — n not divisible by b (n=100, b=32) works for every
+  variant of every DMF (band reduction keeps its exact-tiling rule and is
+  exercised with a schedule that tiles n exactly);
+* **bitwise equivalence** — the expanded uniform schedule
+  ``expand_schedule(n, b)`` drives the sequence code path yet produces the
+  *identical trace*, so outputs match the scalar-``b`` path bit for bit;
+* **non-uniform schedules** — a decreasing tail like ``[48, 32, 16, 4]``
+  still produces a correct factorization (residual check per DMF).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import expand_schedule, get_variant, list_variants
+from repro.core import lu as L
+from repro.core.blocking import max_width, num_panels, panel_steps
+from repro.core.ldlt import unpack_ldlt
+from repro.core.qr import form_q
+
+jax.config.update("jax_enable_x64", True)
+
+N, B = 100, 32                      # ragged: 100 % 32 != 0
+SCHEDULE = (48, 32, 16, 4)          # non-uniform, sums to 100
+BAND_N = 96                         # band: bandwidth is uniform by contract
+
+TOL = 1e-10
+TOL_F32 = 1e-4                      # la_mb fused kernels accumulate in f32
+
+
+def _rand(n, seed, dtype=np.float64):
+    return jnp.asarray(np.random.default_rng(seed).standard_normal((n, n))
+                       .astype(dtype))
+
+
+def _spd(n, seed, dtype=np.float64):
+    a = np.random.default_rng(seed).standard_normal((n, n)).astype(dtype)
+    return jnp.asarray(a @ a.T + n * np.eye(n, dtype=dtype))
+
+
+# --- per-DMF (input generator, residual checker) ---------------------------
+def _check_lu(a, out, tol):
+    fac, piv = out
+    l, u = L.unpack_lu(fac)
+    perm = L.permutation_from_pivots(piv, a.shape[0])
+    assert jnp.linalg.norm(a[perm] - l @ u) / jnp.linalg.norm(a) < tol
+
+
+def _check_cholesky(a, lout, tol):
+    assert jnp.linalg.norm(lout @ lout.T - a) / jnp.linalg.norm(a) < tol
+
+
+def _check_qr(a, out, tol, sched):
+    packed, taus = out
+    q = form_q(packed, taus, sched)
+    r = jnp.triu(packed)
+    assert jnp.linalg.norm(q @ r - a) / jnp.linalg.norm(a) < tol
+    assert jnp.linalg.norm(q.T @ q - jnp.eye(a.shape[0], dtype=a.dtype)) < tol
+
+
+def _check_ldlt(a, packed, tol):
+    l, d = unpack_ldlt(packed)
+    assert jnp.linalg.norm(l @ (d[:, None] * l.T) - a) / jnp.linalg.norm(a) < tol
+
+
+def _check_gj(a, inv, tol):
+    eye = jnp.eye(a.shape[0], dtype=a.dtype)
+    assert jnp.linalg.norm(a @ inv - eye) / jnp.linalg.norm(inv) < tol
+
+
+def _check_band(a, band, tol):
+    sa = jnp.linalg.svd(a, compute_uv=False)
+    sb = jnp.linalg.svd(band, compute_uv=False)
+    assert jnp.linalg.norm(sa - sb) / jnp.linalg.norm(sa) < tol
+
+
+DMFS = {
+    "lu": (_rand, lambda a, o, t, s: _check_lu(a, o, t)),
+    "cholesky": (_spd, lambda a, o, t, s: _check_cholesky(a, o, t)),
+    "qr": (_rand, _check_qr),
+    "ldlt": (_spd, lambda a, o, t, s: _check_ldlt(a, o, t)),
+    "gauss_jordan": (_spd, lambda a, o, t, s: _check_gj(a, o, t)),
+    "band_reduction": (_rand, lambda a, o, t, s: _check_band(a, o, t)),
+}
+
+PAIRS = [(dmf, v) for dmf in DMFS
+         for v in list_variants(dmf) if v != "tuned"]
+
+
+def _case(dmf):
+    """(n, scalar b, non-uniform schedule)."""
+    if dmf == "band_reduction":
+        return BAND_N, 32, SCHEDULE
+    return N, B, SCHEDULE
+
+
+def _tol(variant):
+    return TOL_F32 if variant == "la_mb" else TOL
+
+
+@pytest.mark.parametrize("dmf,variant", PAIRS)
+def test_expanded_schedule_matches_scalar_bitwise(dmf, variant):
+    n, b, _ = _case(dmf)
+    gen, _ = DMFS[dmf]
+    a = gen(n, seed=7 + n)
+    fn = get_variant(dmf, variant)
+    ref = fn(a, b)
+    out = fn(a, expand_schedule(n, b))
+    for r, o in zip(jax.tree_util.tree_leaves(ref),
+                    jax.tree_util.tree_leaves(out)):
+        np.testing.assert_array_equal(np.asarray(r), np.asarray(o))
+
+
+@pytest.mark.parametrize("dmf,variant", PAIRS)
+def test_nonuniform_schedule_residual(dmf, variant):
+    n, _, sched = _case(dmf)
+    gen, check = DMFS[dmf]
+    a = gen(n, seed=11 + n)
+    if dmf == "band_reduction":
+        # the bandwidth is the *output* shape — it cannot vary mid-sweep
+        with pytest.raises(ValueError):
+            get_variant(dmf, variant)(a, sched)
+        return
+    out = get_variant(dmf, variant)(a, sched)
+    check(a, out, _tol(variant), sched)
+
+
+@pytest.mark.parametrize("dmf,variant", PAIRS)
+def test_ragged_scalar_b(dmf, variant):
+    """n not divisible by b — the clipped-last-panel path, every variant."""
+    n, b, _ = _case(dmf)
+    if dmf == "band_reduction":
+        pytest.skip("band reduction requires exact tiling by construction")
+    gen, check = DMFS[dmf]
+    a = gen(n, seed=3 + n)
+    out = get_variant(dmf, variant)(a, b)
+    check(a, out, _tol(variant), b)
+
+
+def test_schedule_validation():
+    with pytest.raises(ValueError):
+        list(panel_steps(64, 0))
+    with pytest.raises(ValueError):
+        list(panel_steps(64, []))
+    with pytest.raises(ValueError):
+        list(panel_steps(64, [32, -4]))
+    with pytest.raises(ValueError):
+        max_width([])
+
+
+def test_expand_schedule_semantics():
+    assert expand_schedule(100, 32) == (32, 32, 32, 4)
+    assert expand_schedule(100, (48, 32, 16, 4)) == (48, 32, 16, 4)
+    # last entry repeats, clipped to the remainder
+    assert expand_schedule(100, (48, 16)) == (48, 16, 16, 16, 4)
+    assert sum(expand_schedule(997, (128, 64))) == 997
+    assert num_panels(100, (48, 16)) == 5
+
+
+def test_band_reduction_rejects_clipped_schedule():
+    a = _rand(BAND_N, seed=1)
+    with pytest.raises(ValueError):
+        get_variant("band_reduction", "mtb")(a, (40, 40))  # clips: 40+40+16
+    with pytest.raises(ValueError):
+        get_variant("band_reduction", "la")(a, 28)         # 96 % 28 != 0
+    with pytest.raises(ValueError):
+        # [128] would clip to the "uniform" (96,) — no reduction at all;
+        # the requested width must divide n just like the scalar spelling
+        get_variant("band_reduction", "la")(a, [128])

@@ -1,0 +1,357 @@
+"""`repro.tune`: cache round-trips, model-seeded search, "tuned" dispatch.
+
+Acceptance contract (ISSUE 2): the search winner's measured wall-clock is
+never above the fixed b=128 `la` baseline (the baseline is always in the
+measured set); a second invocation is served from the persistent cache with
+no re-measurement; `get_variant(dmf, "tuned")` and `gesv(variant="tuned")`
+execute end-to-end with correct residuals, cold or warm.
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import importlib
+
+from repro import tune
+from repro.core import expand_schedule, get_variant, list_variants
+from repro.core import lu as L
+from repro.solve import gesv
+
+jax.config.update("jax_enable_x64", True)
+
+# the search() function shadows the submodule on the package — resolve the
+# module itself for monkeypatching
+search_mod = importlib.import_module("repro.tune.search")
+
+N = 64
+KW = dict(blocks=(16, 32), top_k=2, repeats=1)   # small, fast sweep
+
+
+def _rand(n, seed=0, dtype=np.float32):
+    return jnp.asarray(np.random.default_rng(seed).standard_normal((n, n))
+                       .astype(dtype))
+
+
+def _cfg(**over):
+    base = dict(dmf="lu", shape=(N, N), dtype="float32", backend="jnp",
+                variant="la", schedule=(32, 32), seconds=1e-3,
+                baseline_seconds=2e-3)
+    base.update(over)
+    return tune.TuneConfig(**base)
+
+
+@pytest.fixture
+def cache(tmp_path):
+    return tune.TuneCache(tmp_path / "tune.json")
+
+
+@pytest.fixture
+def as_default(cache):
+    old = tune.set_default_cache(cache)
+    yield cache
+    tune.set_default_cache(old)
+
+
+# ---------------------------------------------------------------------------
+# cache.py
+# ---------------------------------------------------------------------------
+def test_cache_key_format():
+    key = tune.cache_key("lu", 128, jnp.float32, "jnp")
+    assert key == "jnp:lu:128x128:float32"
+    assert tune.cache_key("qr", (200, 100), np.float64, "pallas") \
+        == "pallas:qr:200x100:float64"
+
+
+def test_cache_round_trip_and_persistence(cache):
+    key = tune.cache_key("lu", N, "float32", "jnp")
+    assert cache.get(key) is None
+    cache.put(key, _cfg())
+    hit = cache.get(key)
+    assert hit.schedule == (32, 32) and hit.from_cache
+    # a fresh instance re-reads the JSON file
+    fresh = tune.TuneCache(cache.path)
+    assert fresh.get(key).schedule == (32, 32)
+    assert len(fresh) == 1
+    # the on-disk format is plain JSON keyed by the §9 key string
+    assert key in json.load(open(cache.path))
+    cache.clear()
+    assert tune.TuneCache(cache.path).get(key) is None
+
+
+def test_cache_lru_front_bounded(tmp_path):
+    cache = tune.TuneCache(tmp_path / "t.json", lru_size=2)
+    for i in range(4):
+        cache.put(f"k{i}", _cfg(seconds=float(i + 1)))
+    for i in range(4):                    # warm more keys than the front holds
+        cache.get(f"k{i}")
+    assert len(cache._lru) <= 2           # front is bounded ...
+    assert len(cache) == 4                # ... the disk record is not
+    assert cache.get("k0").seconds == 1.0  # evicted entries reload from disk
+
+
+def test_config_rejects_tuned_variant():
+    with pytest.raises(ValueError):
+        _cfg(variant="tuned")
+
+
+def test_cache_treats_schema_skewed_entries_as_misses(cache):
+    key = tune.cache_key("lu", N, "float32", "jnp")
+    cache.put(key, _cfg())
+    data = json.load(open(cache.path))
+    del data[key]["baseline_seconds"]     # entry from an older schema
+    data["bad"] = {"variant": "tuned"}
+    with open(cache.path, "w") as f:
+        json.dump(data, f)
+    fresh = tune.TuneCache(cache.path)    # the read-only probe must not crash
+    assert fresh.get(key) is None
+    assert fresh.get("bad") is None
+
+
+# ---------------------------------------------------------------------------
+# schedule.py / model.py
+# ---------------------------------------------------------------------------
+def test_tail_schedule_tiles_exactly_and_decreases():
+    for n, b in [(1024, 128), (100, 32), (96, 48), (17, 64)]:
+        s = tune.tail_schedule(n, b)
+        assert sum(s) == n
+        assert all(x >= y for x, y in zip(s, s[1:])), s  # non-increasing
+        assert max(s) <= b
+
+
+def test_model_predicts_positive_and_prefers_lookahead():
+    for dmf in ("lu", "cholesky", "qr", "ldlt", "gauss_jordan",
+                "band_reduction"):
+        t = tune.model.predict(dmf, 512, jnp.float32, "mtb", 128)
+        assert np.isfinite(t) and t > 0
+    # with look-ahead the panel hides under the update → never slower
+    mtb = tune.model.predict("lu", 1024, jnp.float32, "mtb", 128)
+    la = tune.model.predict("lu", 1024, jnp.float32, "la", 128)
+    assert la <= mtb
+
+
+def test_model_rank_handles_invalid_candidates():
+    good = tune.Candidate("la", expand_schedule(96, 32), "jnp")
+    bad = tune.Candidate("la", (48, 32, 16), "jnp")
+    with pytest.raises(ValueError):       # predict rejects invalid schedules
+        tune.model.predict("band_reduction", 96, jnp.float32, "la",
+                           (48, 32, 16))
+    order = tune.model.rank("band_reduction", 96, jnp.float32, [bad, good])
+    assert order[0] == good               # ... so rank sorts them last
+
+
+def test_cache_memoizes_negative_lookups(cache, monkeypatch):
+    key = tune.cache_key("lu", N, "float32", "jnp")
+    assert cache.get(key) is None
+    monkeypatch.setattr(cache, "_read_disk",
+                        lambda: pytest.fail("miss was not memoized"))
+    assert cache.get(key) is None         # served from the LRU sentinel
+
+
+def test_cache_negative_memo_invalidated_by_other_writer(cache):
+    """Tune-then-serve across processes: a memoized miss must not outlive a
+    rewrite of the JSON file by another TuneCache instance."""
+    key = tune.cache_key("lu", N, "float32", "jnp")
+    assert cache.get(key) is None         # miss memoized
+    writer = tune.TuneCache(cache.path)   # "the other process"
+    writer.put(key, _cfg())
+    hit = cache.get(key)
+    assert hit is not None and hit.schedule == (32, 32)
+
+
+def test_cache_own_put_does_not_revive_stale_miss(cache):
+    """put() re-stamps the file — it must also drop memoized misses, or a
+    sentinel could permanently mask a key another process wrote in between."""
+    key = tune.cache_key("lu", N, "float32", "jnp")
+    assert cache.get(key) is None         # miss memoized
+    tune.TuneCache(cache.path).put(key, _cfg())        # other process writes K
+    cache.put("other-key", _cfg(dmf="cholesky"))       # our own unrelated put
+    hit = cache.get(key)                  # must see the other process's K
+    assert hit is not None and hit.schedule == (32, 32)
+
+
+# ---------------------------------------------------------------------------
+# search.py
+# ---------------------------------------------------------------------------
+def test_search_measures_then_caches(cache, monkeypatch):
+    calls = []
+    real = search_mod._measure
+    monkeypatch.setattr(search_mod, "_measure",
+                        lambda *a, **k: calls.append(a) or real(*a, **k))
+    cfg = tune.search("lu", N, cache=cache, **KW)
+    assert not cfg.from_cache and calls
+    assert cfg.variant != "tuned" and sum(cfg.schedule) == N
+    # winner can't lose to the always-measured fixed-b la baseline
+    assert cfg.seconds <= cfg.baseline_seconds
+    n_measured = len(calls)
+    again = tune.search("lu", N, cache=cache, **KW)
+    assert again.from_cache and len(calls) == n_measured  # no re-measurement
+    assert again.schedule == cfg.schedule
+    # force=True re-measures
+    tune.search("lu", N, cache=cache, force=True, **KW)
+    assert len(calls) > n_measured
+
+
+def test_search_spd_dmf(cache):
+    cfg = tune.search("cholesky", N, cache=cache, **KW)
+    assert cfg.dmf == "cholesky" and cfg.seconds > 0
+
+
+def test_tuned_lookup(cache):
+    assert tune.tuned("lu", N, cache=cache) is None       # cold
+    cfg = tune.search("lu", N, cache=cache, **KW)
+    hit = tune.tuned("lu", N, cache=cache)
+    assert hit is not None and hit.schedule == cfg.schedule
+    assert tune.tuned("lu", 2 * N, cache=cache) is None   # other size: cold
+
+
+# ---------------------------------------------------------------------------
+# "tuned" variant + driver integration
+# ---------------------------------------------------------------------------
+def _lu_residual(a, fac, piv):
+    l, u = L.unpack_lu(fac)
+    perm = L.permutation_from_pivots(piv, a.shape[0])
+    return float(jnp.linalg.norm(a[perm] - l @ u) / jnp.linalg.norm(a))
+
+
+def test_get_variant_tuned_cold_falls_back_to_la(as_default):
+    a = _rand(N, seed=1)
+    fac, piv = get_variant("lu", "tuned")(a, 32)
+    ref, refp = get_variant("lu", "la")(a, 32)
+    np.testing.assert_array_equal(np.asarray(fac), np.asarray(ref))
+    np.testing.assert_array_equal(np.asarray(piv), np.asarray(refp))
+
+
+def test_tuned_executes_for_every_tunable_dmf_cold_and_warm(as_default):
+    spd = jnp.asarray(
+        np.random.default_rng(9).standard_normal((N, N)).astype(np.float32))
+    spd = spd @ spd.T + N * jnp.eye(N, dtype=spd.dtype)
+    inputs = {"lu": _rand(N, seed=9), "cholesky": spd, "qr": _rand(N, seed=9),
+              "ldlt": spd, "gauss_jordan": spd}
+    for dmf, a in inputs.items():
+        jax.block_until_ready(get_variant(dmf, "tuned")(a, 16))   # cold
+    tune.search("gauss_jordan", N, **KW)                          # warm one
+    jax.block_until_ready(get_variant("gauss_jordan", "tuned")(spd))
+
+
+def test_band_reduction_is_not_tunable(as_default):
+    """w is the output bandwidth: a cached 'tuned' schedule would silently
+    change the mathematical result, so band_reduction is excluded."""
+    assert "tuned" not in list_variants("band_reduction")
+    with pytest.raises(KeyError):
+        get_variant("band_reduction", "tuned")
+    with pytest.raises(ValueError):
+        tune.search("band_reduction", N, **KW)
+
+
+def test_get_variant_tuned_warm_uses_cached_schedule(as_default):
+    tune.search("lu", N, **KW)
+    a = _rand(N, seed=2)
+    fac, piv = get_variant("lu", "tuned")(a)
+    assert _lu_residual(a, fac, piv) < 1e-4
+    cfg = tune.tuned("lu", N)
+    ref = get_variant("lu", cfg.variant)(a, cfg.schedule)
+    np.testing.assert_array_equal(np.asarray(fac), np.asarray(ref[0]))
+
+
+def test_gesv_tuned_end_to_end(as_default):
+    a = _rand(N, seed=3, dtype=np.float64)
+    b = _rand(N, seed=4, dtype=np.float64)[:, :3]
+    x_cold = gesv(a, b, variant="tuned")             # cold: la fallback
+    assert float(jnp.linalg.norm(a @ x_cold - b)) < 1e-8
+    tune.search("lu", N, dtype=np.float64, **KW)
+    x_warm = gesv(a, b, variant="tuned")             # warm: tuned schedule
+    assert float(jnp.linalg.norm(a @ x_warm - b)) < 1e-8
+
+
+# ---------------------------------------------------------------------------
+# lookahead registry satellites
+# ---------------------------------------------------------------------------
+def test_list_variants_reports_only_available():
+    assert list_variants("lu") == ("mtb", "rtm", "la", "la_mb", "tuned")
+    assert list_variants("band_reduction") == ("mtb", "la", "la_mb")
+    for dmf in ("ldlt", "gauss_jordan", "band_reduction"):
+        assert "rtm" not in list_variants(dmf)
+    with pytest.raises(KeyError):
+        list_variants("nope")
+    # every advertised name resolves
+    for dmf in ("lu", "cholesky", "qr", "ldlt", "gauss_jordan",
+                "band_reduction"):
+        for v in list_variants(dmf):
+            assert callable(get_variant(dmf, v))
+
+
+def test_numpy_int_block_sizes_accepted():
+    assert expand_schedule(100, np.int64(32)) == (32, 32, 32, 4)
+    a = _rand(N, seed=6, dtype=np.float64)
+    fac, piv = get_variant("lu", "la")(a, np.int32(16))
+    ref, refp = get_variant("lu", "la")(a, 16)
+    np.testing.assert_array_equal(np.asarray(fac), np.asarray(ref))
+    # numpy ints inside schedules too
+    fac2, _ = get_variant("lu", "la")(a, np.array([32, 16, 16], dtype=np.int64))
+    np.testing.assert_array_equal(
+        np.asarray(fac2), np.asarray(get_variant("lu", "la")(a, (32, 16, 16))[0]))
+
+
+def test_get_variant_tuned_accepts_string_backend(as_default):
+    a = _rand(N, seed=7)
+    fac, piv = get_variant("lu", "tuned")(a, 32, backend="jnp")
+    ref, refp = get_variant("lu", "la")(a, 32)
+    np.testing.assert_array_equal(np.asarray(fac), np.asarray(ref))
+
+
+def test_search_multibackend_writes_one_entry_per_backend(cache, monkeypatch):
+    measured = []
+    monkeypatch.setattr(search_mod, "_measure",
+                        lambda dmf, c, a, **k: measured.append(c) or 1e-3)
+    cfg = tune.search("lu", N, backends=("jnp", "pallas"), cache=cache, **KW)
+    assert cfg.backend == "jnp"
+    # per-backend top-k: both backends get real candidates measured
+    for be in ("jnp", "pallas"):
+        assert sum(c.backend == be for c in measured) > 1, be
+        hit = cache.get(tune.cache_key("lu", N, "float32", be))
+        assert hit is not None and hit.backend == be
+    # a second call is fully served from the cache (both keys warm)
+    monkeypatch.setattr(search_mod, "_measure",
+                        lambda *a, **k: pytest.fail("re-measured"))
+    assert tune.search("lu", N, backends=("jnp", "pallas"),
+                       cache=cache, **KW).from_cache
+
+
+def test_search_partial_multibackend_hit_measures_only_cold(cache,
+                                                            monkeypatch):
+    measured = []
+    monkeypatch.setattr(search_mod, "_measure",
+                        lambda dmf, c, a, **k: measured.append(c) or 1e-3)
+    tune.search("lu", N, backends=("jnp",), cache=cache, **KW)
+    measured.clear()
+    cfg = tune.search("lu", N, backends=("jnp", "pallas"), cache=cache, **KW)
+    assert measured and all(c.backend == "pallas" for c in measured)
+    assert cfg.from_cache                  # backends[0] entry was the warm one
+
+
+def test_search_excludes_f32_accumulating_la_mb_for_f64():
+    f32 = search_mod._candidates("lu", N, np.float32, (16,), None, ("jnp",))
+    f64 = search_mod._candidates("lu", N, np.float64, (16,), None, ("jnp",))
+    assert any(c.variant == "la_mb" for c in f32)
+    assert all(c.variant != "la_mb" for c in f64)
+    # the guards hold for explicit variant lists too (the natural way to
+    # build one is list_variants, which includes "tuned")
+    with pytest.warns(UserWarning):
+        explicit = search_mod._candidates("lu", N, np.float64, (16,),
+                                          list_variants("lu"), ("jnp",))
+    assert all(c.variant not in ("tuned", "la_mb") for c in explicit)
+
+
+def test_la_mb_forwards_keyword_b():
+    a = _rand(N, seed=5, dtype=np.float64)
+    fn = get_variant("lu", "la_mb")
+    kw_fac, kw_piv = fn(a, b=16)
+    pos_fac, pos_piv = fn(a, 16)
+    np.testing.assert_array_equal(np.asarray(kw_fac), np.asarray(pos_fac))
+    np.testing.assert_array_equal(np.asarray(kw_piv), np.asarray(pos_piv))
+    # schedules flow through the la_mb wrapper too
+    sched_fac, _ = fn(a, b=expand_schedule(N, 16))
+    np.testing.assert_array_equal(np.asarray(sched_fac), np.asarray(kw_fac))
