@@ -5,9 +5,13 @@ micro-kernel on Haswell.  The same trade-off exists here: small b → more
 panel (latency-bound) iterations; large b → panel cost grows quadratically
 and the trailing update shrinks.  Swept on LU-LA wall-clock.
 
-The final row is the ``repro.tune`` comparison: the autotuned
-(variant, schedule) for this (dmf, n) — searched on first run, served from
-the persistent cache afterwards — against the fixed-``b`` sweep above.
+Two extra row groups (ISSUE 3):
+
+* the **depth sweep** — LU-LA at fixed b with ``depth`` ∈ {1, 2, 3} panels
+  in flight (the generic engine's ``la<d>`` variants, DESIGN.md §10);
+* the ``repro.tune`` comparison — the autotuned (variant, depth, schedule)
+  for this (dmf, n) — searched on first run, served from the persistent
+  cache afterwards — against the fixed-``b`` sweep above.
 """
 from __future__ import annotations
 
@@ -17,7 +21,8 @@ from benchmarks.common import emit, gflops, random_matrix, time_fn
 from repro.core.lookahead import get_variant
 
 
-def run(n: int = 1024, blocks=(64, 128, 192, 256, 384), tuned: bool = True):
+def run(n: int = 1024, blocks=(64, 128, 192, 256, 384), tuned: bool = True,
+        depths=(1, 2, 3), depth_block: int = 128):
     rows = []
     a = random_matrix(n, 6)
     flops = 2.0 * n ** 3 / 3.0
@@ -25,6 +30,12 @@ def run(n: int = 1024, blocks=(64, 128, 192, 256, 384), tuned: bool = True):
         fn = jax.jit(lambda x, b=b: get_variant("lu", "la")(x, b)[0])
         t = time_fn(fn, a)
         rows.append(emit(f"lu_la_blocksweep_n{n}_b{b}", t,
+                         f"{gflops(flops, t):.2f}GFLOPS"))
+    for d in depths:
+        variant = "la" if d == 1 else f"la{d}"
+        fn = jax.jit(lambda x, v=variant: get_variant("lu", v)(x, depth_block)[0])
+        t = time_fn(fn, a)
+        rows.append(emit(f"lu_la_depthsweep_n{n}_b{depth_block}_d{d}", t,
                          f"{gflops(flops, t):.2f}GFLOPS"))
     if tuned:
         from repro import tune

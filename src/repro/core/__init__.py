@@ -4,16 +4,20 @@ See DESIGN.md §1–4.  Public surface:
 
 * factorizations: :mod:`repro.core.lu`, :mod:`repro.core.cholesky`,
   :mod:`repro.core.qr`, :mod:`repro.core.ldlt`,
-  :mod:`repro.core.gauss_jordan`, :mod:`repro.core.band_reduction`
+  :mod:`repro.core.gauss_jordan`, :mod:`repro.core.band_reduction` —
+  each a :class:`~repro.core.pipeline.StepOps` declaration (band reduction
+  excepted) scheduled by the generic engine in :mod:`repro.core.pipeline`
 * scheduling variants: :func:`repro.core.lookahead.get_variant`
+  (``mtb``/``rtm``/``la``/``la_mb``, depth-suffixed ``la2``/``la3`` …)
 * distributed (pod-scale) versions: :mod:`repro.core.distributed`
 """
 from repro.core.backend import Backend, JNP_BACKEND, get_backend
 from repro.core.blocking import (BlockSpec, PanelStep, expand_schedule,
                                  max_width, normalize_block, num_panels,
                                  panel_steps, split_trailing)
-from repro.core.lookahead import (FACTORIZATIONS, TUNABLE, VARIANTS,
-                                  get_variant, list_variants)
+from repro.core.lookahead import (FACTORIZATIONS, TUNABLE, VARIANTS, deepen,
+                                  get_variant, list_variants, parse_variant)
+from repro.core.pipeline import StepOps, factorize, make_variant
 from repro.core.pytree import register_factors_pytree
 
 __all__ = [
@@ -31,7 +35,12 @@ __all__ = [
     "FACTORIZATIONS",
     "TUNABLE",
     "VARIANTS",
+    "deepen",
     "get_variant",
     "list_variants",
+    "parse_variant",
+    "StepOps",
+    "factorize",
+    "make_variant",
     "register_factors_pytree",
 ]

@@ -16,15 +16,25 @@ its factorization — and (b) ``TU_right`` — update of the remaining columns.
 (a) and (b) are data-independent given ``W``, so the next panel factorization
 overlaps the bulk outer-product update, exactly the paper's §4 scheme mapped
 onto the two-sided operation.
+
+Band reduction deliberately stays *outside* the generic
+:mod:`repro.core.pipeline` engine (DESIGN.md §10): it shares the
+``panel_steps`` traversal protocol and the ``panel_fn=`` kernel hook with
+the StepOps DMFs, but its iteration interleaves **two** coupled panel
+factorizations (left QR, right LQ) whose look-ahead split reuses the shared
+wide product ``W`` — a dataflow the one-panel StepOps contract cannot
+express without widening it for a single DMF.
 """
 from __future__ import annotations
+
+from typing import Callable, Optional
 
 import jax.numpy as jnp
 
 from repro.core.backend import Backend, JNP_BACKEND
 from repro.core.blocking import BlockSpec, normalize_block, panel_steps
-from repro.core.qr import (_factor_panel, apply_qt_blocked, build_t_matrix,
-                           unpack_v)
+from repro.core.qr import _hooked_factor_panel as _qr_panel
+from repro.core.qr import apply_qt_blocked
 
 __all__ = ["band_reduction_blocked", "band_reduction_lookahead",
            "check_uniform_tiling"]
@@ -56,7 +66,7 @@ def check_uniform_tiling(n: int, w: BlockSpec) -> None:
             f"exactly (w is the output bandwidth); got schedule {spec}")
 
 
-def _right_panel(a_rows: jnp.ndarray):
+def _right_panel(a_rows: jnp.ndarray, panel_fn: Optional[Callable] = None):
     """LQ of a (w × m) row block via QR of its transpose.
 
     Returns (l_block, v, t): ``l_block`` is the (w × m) block after the right
@@ -64,7 +74,7 @@ def _right_panel(a_rows: jnp.ndarray):
     transform to apply to the remaining rows.
     """
     w, m = a_rows.shape
-    packed, tau, pnl = _factor_panel(a_rows.T)         # (m × w)
+    packed, tau, pnl = _qr_panel(a_rows.T, panel_fn)   # (m × w)
     r = jnp.triu(packed[:w])                           # (w × w)
     l_block = jnp.zeros_like(a_rows).at[:, :w].set(r.T)
     return l_block, pnl.v, pnl.t
@@ -79,20 +89,22 @@ def _apply_right(c: jnp.ndarray, v: jnp.ndarray, t: jnp.ndarray,
 
 
 def band_reduction_blocked(a: jnp.ndarray, w: BlockSpec = 128, *,
-                           backend: Backend = JNP_BACKEND) -> jnp.ndarray:
+                           backend: Backend = JNP_BACKEND,
+                           panel_fn: Optional[Callable] = None
+                           ) -> jnp.ndarray:
     """Blocked two-sided reduction to band width ``w`` — MTB analogue."""
     n = a.shape[0]
     check_uniform_tiling(n, w)
     for st in panel_steps(n, w):
         o, bw, nxt = st.k, st.bk, st.k_next
         # ---- left QR panel + left update -------------------------------
-        packed, tau, pnl = _factor_panel(a[o:, o : o + bw])
+        packed, tau, pnl = _qr_panel(a[o:, o : o + bw], panel_fn)
         a = a.at[o:, o : o + bw].set(
             jnp.zeros_like(packed).at[:bw].set(jnp.triu(packed[:bw])))
         if nxt < n:
             a = a.at[o:, nxt:].set(apply_qt_blocked(pnl, a[o:, nxt:], backend))
             # ---- right LQ panel + right update --------------------------
-            lblk, v2, t2 = _right_panel(a[o : o + bw, nxt:])
+            lblk, v2, t2 = _right_panel(a[o : o + bw, nxt:], panel_fn)
             a = a.at[o : o + bw, nxt:].set(lblk)
             if nxt < n:
                 a = a.at[nxt:, nxt:].set(
@@ -101,7 +113,9 @@ def band_reduction_blocked(a: jnp.ndarray, w: BlockSpec = 128, *,
 
 
 def band_reduction_lookahead(a: jnp.ndarray, w: BlockSpec = 128, *,
-                             backend: Backend = JNP_BACKEND) -> jnp.ndarray:
+                             backend: Backend = JNP_BACKEND,
+                             panel_fn: Optional[Callable] = None
+                             ) -> jnp.ndarray:
     """Band reduction with look-ahead on the right update (see module doc)."""
     n = a.shape[0]
     check_uniform_tiling(n, w)
@@ -112,7 +126,7 @@ def band_reduction_lookahead(a: jnp.ndarray, w: BlockSpec = 128, *,
         o, bw, nxt = st.k, st.bk, st.k_next
         # ---- left QR panel (maybe pre-factored by PU at step k−1) ------
         if pnl_next is None:
-            packed, tau, pnl = _factor_panel(a[o:, o : o + bw])
+            packed, tau, pnl = _qr_panel(a[o:, o : o + bw], panel_fn)
         else:
             packed, pnl = pnl_next
         a = a.at[o:, o : o + bw].set(
@@ -123,7 +137,7 @@ def band_reduction_lookahead(a: jnp.ndarray, w: BlockSpec = 128, *,
         # ---- left update (whole trailing — the LQ row panel needs it) --
         a = a.at[o:, nxt:].set(apply_qt_blocked(pnl, a[o:, nxt:], backend))
         # ---- right LQ panel ---------------------------------------------
-        lblk, v2, t2 = _right_panel(a[o : o + bw, nxt:])
+        lblk, v2, t2 = _right_panel(a[o : o + bw, nxt:], panel_fn)
         a = a.at[o : o + bw, nxt:].set(lblk)
         if nxt >= n:
             break
@@ -135,7 +149,7 @@ def band_reduction_lookahead(a: jnp.ndarray, w: BlockSpec = 128, *,
             # PU(k+1): finish the next panel's columns and QR-factor them.
             upd_l = (c[:, :b_next]
                      - backend.gemm(wprod, v2[:b_next].T)).astype(a.dtype)
-            packed_n, tau_n, pnl_n = _factor_panel(upd_l)
+            packed_n, tau_n, pnl_n = _qr_panel(upd_l, panel_fn)
             pnl_next = (packed_n, pnl_n)
             a = a.at[nxt:, nxt : nxt + b_next].set(packed_n)
             # TU_right: remaining columns — independent of PU(k+1).

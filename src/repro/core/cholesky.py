@@ -1,8 +1,9 @@
 """Cholesky factorization (lower, A = L·Lᵀ) — all scheduling variants.
 
-Same variant family as :mod:`repro.core.lu` (the paper's framework §3.1
-covers Cholesky explicitly): unblocked, blocked right-looking (MTB), tiled
-(RTM), and static look-ahead (LA / LA_MB via ``fused_pu``).
+Declared as :data:`CHOLESKY_OPS` and scheduled by the generic engine in
+:mod:`repro.core.pipeline` (the paper's framework §3.1 covers Cholesky
+explicitly): unblocked, blocked right-looking (MTB), tiled (RTM), and static
+look-ahead (LA / LA_MB via ``fused_pu``, depth-d via ``depth=``).
 
 Cholesky needs no pivoting, which makes it the cleanest illustration of the
 look-ahead restructuring: ``PU(k+1)`` (update + factor the next block column)
@@ -15,8 +16,10 @@ from typing import Callable, Optional
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core import pipeline
 from repro.core.backend import Backend, JNP_BACKEND
-from repro.core.blocking import BlockSpec, panel_steps, split_trailing
+from repro.core.blocking import BlockSpec
+from repro.core.pipeline import StepOps
 
 __all__ = [
     "cholesky_unblocked",
@@ -24,6 +27,7 @@ __all__ = [
     "cholesky_blocked",
     "cholesky_tiled",
     "cholesky_lookahead",
+    "CHOLESKY_OPS",
 ]
 
 
@@ -54,82 +58,104 @@ def cholesky_panel(panel: jnp.ndarray, nb: int,
     return out
 
 
-def cholesky_blocked(a: jnp.ndarray, b: BlockSpec = 128, *,
-                     backend: Backend = JNP_BACKEND) -> jnp.ndarray:
-    """Right-looking blocked Cholesky — the MTB analogue."""
+# ---------------------------------------------------------------------------
+# StepOps declaration (DESIGN.md §10).
+# ---------------------------------------------------------------------------
+def _factor(state, st, backend, panel_fn):
+    # PF(k): ``panel_fn`` has the `cholesky_panel` signature
+    # ``(m × nb panel, nb, backend) -> factored panel``.
+    a, _ = state
+    k, bk = st.k, st.bk
+    fn = panel_fn or cholesky_panel
+    a = a.at[k:, k : k + bk].set(fn(a[k:, k : k + bk], bk, backend))
+    return (a, None), None
+
+
+def _update(state, ctx, st, c0, c1, backend):
+    # TU_k on columns [c0, c1): A[c0:, c0:c1] -= L[c0:, k] · L[c0:c1, k]ᵀ.
+    # Rows start at c0 — entries above are strictly upper and never read.
+    a, _ = state
+    k, bk = st.k, st.bk
+    lrow = a[c0:c1, k : k + bk]
+    a = a.at[c0:, c0:c1].set(
+        backend.update(a[c0:, c0:c1], a[c0:, k : k + bk], lrow.T))
+    return (a, None)
+
+
+def _tiles(state, ctx, st, backend):
+    # RTM: one SYRK/GEMM task per b×b tile of the lower trailing triangle.
+    a, _ = state
     n = a.shape[0]
-    for st in panel_steps(n, b):
-        k, bk, k_next = st.k, st.bk, st.k_next
-        # PF(k)
-        a = a.at[k:, k : k + bk].set(
-            cholesky_panel(a[k:, k : k + bk], bk, backend))
-        # TU(k): A22 -= L21 · L21ᵀ  (full trailing, one op, implicit barrier)
-        if k_next < n:
-            l21 = a[k_next:, k : k + bk]
-            a = a.at[k_next:, k_next:].set(
-                backend.update(a[k_next:, k_next:], l21, l21.T))
-    return jnp.tril(a)
+    k, bk = st.k, st.bk
+    for j in range(st.k_next, n, bk):
+        bj = min(bk, n - j)
+        lj = a[j : j + bj, k : k + bk]
+        for i in range(j, n, bk):
+            bi = min(bk, n - i)
+            li = a[i : i + bi, k : k + bk]
+            a = a.at[i : i + bi, j : j + bj].set(
+                backend.update(a[i : i + bi, j : j + bj], li, lj.T))
+    return (a, None)
+
+
+def _pu(state, ctx, st, st_next, backend, fused):
+    # LA_MB: GEMM-update + PF of the next block column in one kernel —
+    # ``fused(lrow_top, l21, panel) -> factored_panel``.
+    a, _ = state
+    k, bk, k_next = st.k, st.bk, st.k_next
+    lcols = slice(st_next.k, st_next.k_next)
+    l21 = a[k_next:, k : k + bk]
+    lrow_next = a[lcols, k : k + bk]
+    panel_next = fused(lrow_next, l21, a[k_next:, lcols])
+    a = a.at[k_next:, lcols].set(panel_next)
+    return (a, None), None
+
+
+CHOLESKY_OPS = StepOps(
+    name="cholesky",
+    init=lambda a: (a, None),
+    factor=_factor,
+    update=_update,
+    finalize=lambda state: jnp.tril(state[0]),
+    tiles=_tiles,
+    pu=_pu,
+)
+
+
+# ---------------------------------------------------------------------------
+# Public drivers.
+# ---------------------------------------------------------------------------
+def cholesky_blocked(a: jnp.ndarray, b: BlockSpec = 128, *,
+                     backend: Backend = JNP_BACKEND,
+                     panel_fn: Optional[Callable] = None) -> jnp.ndarray:
+    """Right-looking blocked Cholesky — the MTB analogue."""
+    return pipeline.factorize(CHOLESKY_OPS, a, b, variant="mtb",
+                              backend=backend, panel_fn=panel_fn)
 
 
 def cholesky_tiled(a: jnp.ndarray, b: BlockSpec = 128, *,
-                   backend: Backend = JNP_BACKEND) -> jnp.ndarray:
+                   backend: Backend = JNP_BACKEND,
+                   panel_fn: Optional[Callable] = None) -> jnp.ndarray:
     """RTM analogue: trailing update fragmented into b×b tile tasks."""
-    n = a.shape[0]
-    for st in panel_steps(n, b):
-        k, bk, k_next = st.k, st.bk, st.k_next
-        a = a.at[k:, k : k + bk].set(
-            cholesky_panel(a[k:, k : k + bk], bk, backend))
-        for j in range(k_next, n, bk):
-            bj = min(bk, n - j)
-            lj = a[j : j + bj, k : k + bk]
-            for i in range(j, n, bk):  # lower triangle only
-                bi = min(bk, n - i)
-                li = a[i : i + bi, k : k + bk]
-                a = a.at[i : i + bi, j : j + bj].set(
-                    backend.update(a[i : i + bi, j : j + bj], li, lj.T))
-    return jnp.tril(a)
+    return pipeline.factorize(CHOLESKY_OPS, a, b, variant="rtm",
+                              backend=backend, panel_fn=panel_fn)
 
 
+@pipeline.mark_depth_capable
 def cholesky_lookahead(
     a: jnp.ndarray,
     b: BlockSpec = 128,
     *,
     backend: Backend = JNP_BACKEND,
+    panel_fn: Optional[Callable] = None,
     fused_pu: Optional[Callable] = None,
+    depth: int = 1,
 ) -> jnp.ndarray:
-    """Cholesky with static look-ahead (paper Listing 5 restructuring).
+    """Cholesky with static look-ahead; ``depth`` panels in flight.
 
     ``fused_pu``: optional fused kernel ``(l21_top, l21_rest, panel) ->
     factored_panel`` realizing GEMM-update + PF in one VMEM-resident call.
     """
-    n = a.shape[0]
-    steps = list(panel_steps(n, b))
-
-    # PF(0)
-    st0 = steps[0]
-    a = a.at[:, : st0.bk].set(cholesky_panel(a[:, : st0.bk], st0.bk, backend))
-
-    for st in steps:
-        k, bk, k_next = st.k, st.bk, st.k_next
-        if k_next >= n:
-            break
-        lcols, rcols = split_trailing(k_next, st.b_next, n)
-        l21 = a[k_next:, k : k + bk]          # rows below panel k (read-only)
-
-        # --- PU(k+1): update next block column, then factor it ----------
-        if st.b_next > 0:
-            lrow_next = a[lcols, k : k + bk]  # L rows of the next block col
-            if fused_pu is not None:
-                panel_next = fused_pu(lrow_next, l21, a[k_next:, lcols])
-            else:
-                upd = backend.update(a[k_next:, lcols], l21, lrow_next.T)
-                panel_next = cholesky_panel(upd, st.b_next, backend)
-            a = a.at[k_next:, lcols].set(panel_next)
-
-        # --- TU_right(k): independent of PU(k+1) ------------------------
-        if rcols.start < n:
-            lrow_r = a[rcols, k : k + bk]
-            a = a.at[rcols.start :, rcols].set(
-                backend.update(a[rcols.start :, rcols],
-                               a[rcols.start :, k : k + bk], lrow_r.T))
-    return jnp.tril(a)
+    return pipeline.factorize(CHOLESKY_OPS, a, b, variant="la", depth=depth,
+                              backend=backend, panel_fn=panel_fn,
+                              fused_pu=fused_pu)

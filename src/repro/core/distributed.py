@@ -34,8 +34,6 @@ no wasted trailing FLOPs on already-factored blocks.
 """
 from __future__ import annotations
 
-import functools
-from typing import Literal
 
 import jax
 import jax.numpy as jnp
@@ -66,7 +64,7 @@ def _shard_map(*args, **kwargs):
 
 from repro.core.cholesky import cholesky_panel
 from repro.core.lu import laswp, lu_unblocked
-from repro.core.qr import _Panel, build_t_matrix, qr_unblocked, unpack_v
+from repro.core.qr import build_t_matrix, qr_unblocked, unpack_v
 
 def _acc_dt(dtype):
     """f32 accumulation for low-precision inputs, native otherwise."""

@@ -6,6 +6,12 @@ one-sided factorizations — its per-iteration update touches *all* columns
 (left and right of the panel), so the trailing-update:panel cost ratio is
 even larger and the panel hides even better.
 
+Declared as :data:`GAUSS_JORDAN_OPS` and scheduled by
+:mod:`repro.core.pipeline`.  GJE exercises the engine's two optional hooks
+the one-sided DMFs don't need: ``update_left`` (the already-inverted columns
+left of the panel are updated every iteration) and ``commit`` (the panel's
+own columns are finalized to ``I[:, kr] − M`` after the updates).
+
 Unpivoted (valid for SPD / diagonally dominant inputs — documented caveat,
 as in :mod:`repro.core.ldlt`).  In-place: after the sweep the matrix holds
 ``A⁻¹``.
@@ -18,13 +24,18 @@ Blocked update per panel k (columns ``kc``, rows ``kr`` = same index range):
 """
 from __future__ import annotations
 
+from typing import Callable, NamedTuple, Optional
+
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core import pipeline
 from repro.core.backend import Backend, JNP_BACKEND
-from repro.core.blocking import BlockSpec, panel_steps
+from repro.core.blocking import BlockSpec
+from repro.core.pipeline import StepOps
 
-__all__ = ["gj_inverse_unblocked", "gj_inverse_blocked", "gj_inverse_lookahead"]
+__all__ = ["gj_inverse_unblocked", "gj_inverse_blocked",
+           "gj_inverse_lookahead", "GAUSS_JORDAN_OPS"]
 
 
 def gj_inverse_unblocked(a: jnp.ndarray) -> jnp.ndarray:
@@ -45,72 +56,106 @@ def gj_inverse_unblocked(a: jnp.ndarray) -> jnp.ndarray:
     return lax.fori_loop(0, n, body, a)
 
 
-def _gj_panel(a: jnp.ndarray, k: int, bk: int,
-              backend: Backend) -> jnp.ndarray:
-    """Compute M = (A[:,kc] − I[:,kr])·D⁻¹ for panel k."""
-    n = a.shape[0]
-    dinv = gj_inverse_unblocked(a[k : k + bk, k : k + bk])
+def _eye_cols(n: int, k: int, bk: int, dtype) -> jnp.ndarray:
+    """Columns ``k:k+bk`` of the n×n identity."""
+    return jnp.zeros((n, bk), dtype).at[k : k + bk].set(
+        jnp.eye(bk, dtype=dtype))
+
+
+def _gj_panel(a: jnp.ndarray, k: int, bk: int, backend: Backend,
+              inv_fn: Optional[Callable] = None) -> jnp.ndarray:
+    """Compute M = (A[:,kc] − I[:,kr])·D⁻¹ for panel k.
+
+    ``inv_fn`` optionally replaces :func:`gj_inverse_unblocked` on the
+    diagonal block (the panel-kernel hook).
+    """
+    dinv = (inv_fn or gj_inverse_unblocked)(a[k : k + bk, k : k + bk])
     p = a[:, k : k + bk]
-    eye_cols = jnp.zeros((n, bk), a.dtype).at[k : k + bk].set(
-        jnp.eye(bk, dtype=a.dtype))
-    return backend.gemm(p - eye_cols, dinv)
+    return backend.gemm(p - _eye_cols(a.shape[0], k, bk, a.dtype), dinv)
 
 
+# ---------------------------------------------------------------------------
+# StepOps declaration (DESIGN.md §10).
+# ---------------------------------------------------------------------------
+class _GJCtx(NamedTuple):
+    m: jnp.ndarray            # the n×bk multiplier block M of this panel
+
+
+def _factor(state, st, backend, panel_fn):
+    # "PF(k)": D⁻¹ + M build.  The panel columns are *not* written here —
+    # they are finalized by `commit` after the iteration's updates, exactly
+    # the in-place GJE dataflow.  ``panel_fn`` inverts the diagonal block.
+    a, _ = state
+    return state, _GJCtx(_gj_panel(a, st.k, st.bk, backend, panel_fn))
+
+
+def _update(state, ctx, st, c0, c1, backend):
+    # TU_k on columns [c0, c1): all n rows, A[:, c] −= M·A[kr, c].
+    a, _ = state
+    row = a[st.k : st.k + st.bk, c0:c1]
+    a = a.at[:, c0:c1].set(a[:, c0:c1] - backend.gemm(ctx.m, row))
+    return (a, None)
+
+
+def _update_left(state, ctx, st, backend):
+    # The already-inverted columns [0, k) — GJE's two-sided trailing update.
+    return _update(state, ctx, st, 0, st.k, backend)
+
+
+def _commit(state, ctx, st, backend):
+    a, _ = state
+    k, bk = st.k, st.bk
+    a = a.at[:, k : k + bk].set(_eye_cols(a.shape[0], k, bk, a.dtype) - ctx.m)
+    return (a, None)
+
+
+def _update_all(state, ctx, st, backend):
+    # mtb's single barrier-separated op: one GEMM over *all* columns (the
+    # panel's own are recomputed then overwritten by the commit — the
+    # throwaway is what makes it one op), exactly the blocked GJE sweep.
+    a, _ = state
+    k, bk = st.k, st.bk
+    arow = a[k : k + bk, :]
+    upd = a - backend.gemm(ctx.m, arow)
+    a = upd.at[:, k : k + bk].set(
+        _eye_cols(a.shape[0], k, bk, a.dtype) - ctx.m)
+    return (a, None)
+
+
+GAUSS_JORDAN_OPS = StepOps(
+    name="gauss_jordan",
+    init=lambda a: (a, None),
+    factor=_factor,
+    update=_update,
+    finalize=lambda state: state[0],
+    update_left=_update_left,
+    update_all=_update_all,
+    commit=_commit,
+)
+
+
+# ---------------------------------------------------------------------------
+# Public drivers.
+# ---------------------------------------------------------------------------
 def gj_inverse_blocked(a: jnp.ndarray, b: BlockSpec = 128, *,
-                       backend: Backend = JNP_BACKEND) -> jnp.ndarray:
+                       backend: Backend = JNP_BACKEND,
+                       panel_fn: Optional[Callable] = None) -> jnp.ndarray:
     """Blocked GJE inversion — MTB analogue (one update op per iteration)."""
-    n = a.shape[0]
-    for st in panel_steps(n, b):
-        k, bk = st.k, st.bk
-        m = _gj_panel(a, k, bk, backend)
-        arow = a[k : k + bk, :]
-        upd = a - backend.gemm(m, arow)
-        eye_cols = jnp.zeros((n, bk), a.dtype).at[k : k + bk].set(
-            jnp.eye(bk, dtype=a.dtype))
-        a = upd.at[:, k : k + bk].set(eye_cols - m)
-    return a
+    return pipeline.factorize(GAUSS_JORDAN_OPS, a, b, variant="mtb",
+                              backend=backend, panel_fn=panel_fn)
 
 
+@pipeline.mark_depth_capable
 def gj_inverse_lookahead(a: jnp.ndarray, b: BlockSpec = 128, *,
-                         backend: Backend = JNP_BACKEND) -> jnp.ndarray:
-    """GJE inversion with static look-ahead.
+                         backend: Backend = JNP_BACKEND,
+                         panel_fn: Optional[Callable] = None,
+                         depth: int = 1) -> jnp.ndarray:
+    """GJE inversion with static look-ahead; ``depth`` panels in flight.
 
     ``PU(k+1)``: update the next panel's columns with panel k's ``M`` and
     immediately compute the next panel's ``D⁻¹``/``M`` — independent of the
     update of all remaining columns (``TU_right``), which includes here the
     already-inverted columns to the *left* as well.
     """
-    n = a.shape[0]
-    steps = list(panel_steps(n, b))
-    st0 = steps[0]
-    m_cur = _gj_panel(a, st0.k, st0.bk, backend)
-
-    for st in steps:
-        k, bk, k_next = st.k, st.bk, st.k_next
-        arow = a[k : k + bk, :]
-        eye_cols = jnp.zeros((n, bk), a.dtype).at[k : k + bk].set(
-            jnp.eye(bk, dtype=a.dtype))
-
-        if st.b_next > 0:
-            # PU(k+1): update next panel cols, then "factor" (D⁻¹, M).
-            lcols = slice(k_next, k_next + st.b_next)
-            pnl = a[:, lcols] - backend.gemm(m_cur, arow[:, lcols])
-            a = a.at[:, lcols].set(pnl)
-            dinv_next = gj_inverse_unblocked(pnl[k_next : k_next + st.b_next])
-            eye_next = jnp.zeros((n, st.b_next), a.dtype).at[lcols].set(
-                jnp.eye(st.b_next, dtype=a.dtype))
-            m_next = backend.gemm(pnl - eye_next, dinv_next)
-
-        # TU_right(k): all other columns (left inverse part + right part).
-        left = a[:, :k] - backend.gemm(m_cur, arow[:, :k]) if k > 0 else a[:, :0]
-        rstart = k_next + st.b_next
-        right = (a[:, rstart:] - backend.gemm(m_cur, arow[:, rstart:])
-                 if rstart < n else a[:, n:])
-        a = a.at[:, :k].set(left)
-        if rstart < n:
-            a = a.at[:, rstart:].set(right)
-        a = a.at[:, k : k + bk].set(eye_cols - m_cur)
-
-        if st.b_next > 0:
-            m_cur = m_next
-    return a
+    return pipeline.factorize(GAUSS_JORDAN_OPS, a, b, variant="la",
+                              depth=depth, backend=backend, panel_fn=panel_fn)

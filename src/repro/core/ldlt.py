@@ -6,6 +6,10 @@ variant (valid for quasi-definite / diagonally dominant symmetric matrices);
 Bunch–Kaufman pivoting is out of scope and noted in DESIGN.md — the paper
 itself makes the analogous caveat for LUpp vs incremental pivoting (§3.3).
 
+Declared as :data:`LDLT_OPS` and scheduled by :mod:`repro.core.pipeline`
+(MTB and LA/LA_MB at any depth; no RTM fragmentation — the paper's RTM
+study covers the three canonical DMFs only).
+
 Packed format: L strictly below the diagonal (unit diagonal implicit), D on
 the diagonal.
 """
@@ -16,11 +20,13 @@ from typing import Callable, Optional
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core import pipeline
 from repro.core.backend import Backend, JNP_BACKEND
-from repro.core.blocking import BlockSpec, panel_steps, split_trailing
+from repro.core.blocking import BlockSpec
+from repro.core.pipeline import StepOps
 
 __all__ = ["ldlt_unblocked", "ldlt_panel", "ldlt_blocked", "ldlt_lookahead",
-           "unpack_ldlt"]
+           "unpack_ldlt", "LDLT_OPS"]
 
 
 def ldlt_unblocked(a: jnp.ndarray) -> jnp.ndarray:
@@ -52,64 +58,80 @@ def ldlt_panel(panel: jnp.ndarray, nb: int,
     return out
 
 
-def ldlt_blocked(a: jnp.ndarray, b: BlockSpec = 128, *,
-                 backend: Backend = JNP_BACKEND) -> jnp.ndarray:
-    """Blocked right-looking LDLᵀ — MTB analogue."""
-    n = a.shape[0]
-    for st in panel_steps(n, b):
-        k, bk, k_next = st.k, st.bk, st.k_next
-        a = a.at[k:, k : k + bk].set(ldlt_panel(a[k:, k : k + bk], bk, backend))
-        if k_next < n:
-            l21 = a[k_next:, k : k + bk]
-            d = jnp.diagonal(a[k : k + bk, k : k + bk])
-            w = (l21 * d[None, :]).astype(a.dtype)          # L21·D
-            a = a.at[k_next:, k_next:].set(
-                backend.update(a[k_next:, k_next:], l21, w.T))
-    return jnp.tril(a)
-
-
-def ldlt_lookahead(
-    a: jnp.ndarray,
-    b: BlockSpec = 128,
-    *,
-    backend: Backend = JNP_BACKEND,
-    fused_pu: Optional[Callable] = None,
-) -> jnp.ndarray:
-    """LDLᵀ with static look-ahead — same restructuring as Cholesky."""
-    n = a.shape[0]
-    steps = list(panel_steps(n, b))
-    st0 = steps[0]
-    a = a.at[:, : st0.bk].set(ldlt_panel(a[:, : st0.bk], st0.bk, backend))
-
-    for st in steps:
-        k, bk, k_next = st.k, st.bk, st.k_next
-        if k_next >= n:
-            break
-        lcols, rcols = split_trailing(k_next, st.b_next, n)
-        l21 = a[k_next:, k : k + bk]
-        d = jnp.diagonal(a[k : k + bk, k : k + bk])
-
-        if st.b_next > 0:
-            lrow = a[lcols, k : k + bk]
-            w = (lrow * d[None, :]).astype(a.dtype)
-            upd = backend.update(a[k_next:, lcols], l21, w.T)
-            if fused_pu is not None:
-                panel_next = fused_pu(upd, st.b_next)
-            else:
-                panel_next = ldlt_panel(upd, st.b_next, backend)
-            a = a.at[k_next:, lcols].set(panel_next)
-
-        if rcols.start < n:
-            lrow_r = a[rcols, k : k + bk]
-            w = (lrow_r * d[None, :]).astype(a.dtype)
-            a = a.at[rcols.start :, rcols].set(
-                backend.update(a[rcols.start :, rcols],
-                               a[rcols.start :, k : k + bk], w.T))
-    return jnp.tril(a)
-
-
 def unpack_ldlt(packed: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Split packed LDLᵀ into (unit-lower L, diagonal d)."""
     n = packed.shape[0]
     l = jnp.tril(packed, -1) + jnp.eye(n, dtype=packed.dtype)
     return l, jnp.diagonal(packed)
+
+
+# ---------------------------------------------------------------------------
+# StepOps declaration (DESIGN.md §10).
+# ---------------------------------------------------------------------------
+def _factor(state, st, backend, panel_fn):
+    # PF(k): ``panel_fn`` has the `ldlt_panel` signature
+    # ``(m × nb panel, nb, backend) -> factored panel``.
+    a, _ = state
+    k, bk = st.k, st.bk
+    fn = panel_fn or ldlt_panel
+    a = a.at[k:, k : k + bk].set(fn(a[k:, k : k + bk], bk, backend))
+    return (a, None), None
+
+
+def _update(state, ctx, st, c0, c1, backend):
+    # TU_k on [c0, c1): A[c0:, c0:c1] -= L[c0:, k] · (L[c0:c1, k]·D_k)ᵀ.
+    a, _ = state
+    k, bk = st.k, st.bk
+    d = jnp.diagonal(a[k : k + bk, k : k + bk])
+    w = (a[c0:c1, k : k + bk] * d[None, :]).astype(a.dtype)
+    a = a.at[c0:, c0:c1].set(
+        backend.update(a[c0:, c0:c1], a[c0:, k : k + bk], w.T))
+    return (a, None)
+
+
+def _pu(state, ctx, st, st_next, backend, fused):
+    # LA_MB hook: the fused kernel covers only the PF half here —
+    # ``fused(updated_panel, nb) -> factored_panel`` (the GEMM update runs
+    # on the caller's backend first, matching the pre-refactor contract).
+    state = _update(state, ctx, st, st_next.k, st_next.k_next, backend)
+    a, _ = state
+    panel = fused(a[st_next.k :, st_next.k : st_next.k_next], st_next.bk)
+    a = a.at[st_next.k :, st_next.k : st_next.k_next].set(panel)
+    return (a, None), None
+
+
+LDLT_OPS = StepOps(
+    name="ldlt",
+    init=lambda a: (a, None),
+    factor=_factor,
+    update=_update,
+    finalize=lambda state: jnp.tril(state[0]),
+    pu=_pu,
+)
+
+
+# ---------------------------------------------------------------------------
+# Public drivers.
+# ---------------------------------------------------------------------------
+def ldlt_blocked(a: jnp.ndarray, b: BlockSpec = 128, *,
+                 backend: Backend = JNP_BACKEND,
+                 panel_fn: Optional[Callable] = None) -> jnp.ndarray:
+    """Blocked right-looking LDLᵀ — MTB analogue."""
+    return pipeline.factorize(LDLT_OPS, a, b, variant="mtb", backend=backend,
+                              panel_fn=panel_fn)
+
+
+@pipeline.mark_depth_capable
+def ldlt_lookahead(
+    a: jnp.ndarray,
+    b: BlockSpec = 128,
+    *,
+    backend: Backend = JNP_BACKEND,
+    panel_fn: Optional[Callable] = None,
+    fused_pu: Optional[Callable] = None,
+    depth: int = 1,
+) -> jnp.ndarray:
+    """LDLᵀ with static look-ahead — same restructuring as Cholesky."""
+    return pipeline.factorize(LDLT_OPS, a, b, variant="la", depth=depth,
+                              backend=backend, panel_fn=panel_fn,
+                              fused_pu=fused_pu)

@@ -8,6 +8,14 @@ benchmarks, tests, and the optimizer can select a scheduling variant by name:
 
     fn = get_variant("lu", "la")          # -> lu_lookahead
     fn = get_variant("qr", "mtb")         # -> qr_blocked
+    fn = get_variant("lu", "la2")         # -> lu_lookahead with depth=2
+
+Since every DMF is a :class:`~repro.core.pipeline.StepOps` declaration
+scheduled by the generic engine (DESIGN.md §10), look-ahead **depth** is a
+variant parameter: ``"la<d>"`` / ``"la_mb<d>"`` resolve to the same driver
+with ``depth=d`` (d panels in flight, the paper's §5 generalization).
+``"la"`` ≡ ``"la1"``.  Band reduction keeps its bespoke two-panel driver
+and stays depth-1 — deeper names raise ``KeyError`` for it.
 
 On TPU the variants differ in *dataflow structure* rather than thread
 mapping (DESIGN.md §2): MTB = one barrier-separated panel/update pair per
@@ -18,11 +26,13 @@ plus the fused VMEM-resident panel-update kernel from
 """
 from __future__ import annotations
 
-from typing import Callable, Dict
+import re
+from typing import Callable, Dict, Tuple
 
 from repro.core import band_reduction, cholesky, gauss_jordan, ldlt, lu, qr
+from repro.core.pipeline import supports_depth
 
-# variant name -> per-DMF callable
+# variant base name -> per-DMF callable
 _REGISTRY: Dict[str, Dict[str, Callable]] = {
     "lu": {
         "mtb": lu.lu_blocked,
@@ -57,8 +67,9 @@ VARIANTS = ("mtb", "rtm", "la", "la_mb")
 FACTORIZATIONS = tuple(_REGISTRY)
 
 #: Variants resolved by composition rather than a registry row: ``la_mb``
-#: (``la`` + fused panel-update kernel) and ``tuned`` (config from
-#: ``repro.tune``'s persistent cache, falling back to ``la`` when cold).
+#: (``la`` + fused panel-update kernel), depth-suffixed names (``la2``,
+#: ``la_mb3``, …), and ``tuned`` (config from ``repro.tune``'s persistent
+#: cache, falling back to ``la`` when cold).
 DERIVED_VARIANTS = ("la_mb", "tuned")
 
 #: ``tuned`` substitutes the cached block schedule for the caller's — only
@@ -67,6 +78,45 @@ DERIVED_VARIANTS = ("la_mb", "tuned")
 #: change the mathematical result, not just the schedule.
 TUNABLE = tuple(d for d in _REGISTRY if d != "band_reduction")
 
+_DEPTH_RE = re.compile(r"^(la(?:_mb)?)([1-9]\d*)$")
+
+
+def parse_variant(variant: str) -> Tuple[str, int]:
+    """Split a variant name into (base, look-ahead depth).
+
+    ``"la3"`` → ``("la", 3)``; ``"la_mb2"`` → ``("la_mb", 2)``; names
+    without a depth suffix → depth 1 (``"la"``, ``"mtb"``, …).
+    """
+    m = _DEPTH_RE.match(variant)
+    if m:
+        return m.group(1), int(m.group(2))
+    return variant, 1
+
+
+def deepen(variant: str, depth: int) -> str:
+    """Canonical name of ``variant`` at ``depth`` (``("la", 2)`` → ``"la2"``).
+
+    The inverse of :func:`parse_variant`; rejects depth on variants that
+    have no look-ahead window (``mtb``/``rtm``/``tuned``).
+    """
+    base, d0 = parse_variant(variant)
+    if d0 != 1:
+        raise ValueError(f"variant {variant!r} already carries a depth")
+    if depth < 1:
+        raise ValueError(f"look-ahead depth must be >= 1, got {depth}")
+    if depth == 1:
+        return base
+    if base not in ("la", "la_mb"):
+        raise ValueError(
+            f"variant {base!r} has no look-ahead window; depth={depth} "
+            f"applies to 'la'/'la_mb' only")
+    return f"{base}{depth}"
+
+
+def _depth_capable(dmf: str) -> bool:
+    la = _REGISTRY[dmf].get("la")
+    return la is not None and supports_depth(la)
+
 
 def list_variants(dmf: str) -> tuple[str, ...]:
     """Variants actually available for ``dmf``.
@@ -74,24 +124,54 @@ def list_variants(dmf: str) -> tuple[str, ...]:
     Unlike the paper-taxonomy constant :data:`VARIANTS` — which advertises
     ``rtm`` even for DMFs that only implement ``mtb``/``la`` — every name
     returned here resolves through :func:`get_variant` without a KeyError.
+    Depth-d look-ahead is advertised by its ``"la2"`` representative; any
+    ``"la<d>"``/``"la_mb<d>"`` resolves for the pipeline-backed DMFs.
     """
     if dmf not in _REGISTRY:
         raise KeyError(f"unknown DMF {dmf!r}; expected one of {FACTORIZATIONS}")
     table = _REGISTRY[dmf]
     out = [v for v in VARIANTS if v in table]
     if "la" in table:
+        if _depth_capable(dmf):
+            out.insert(out.index("la") + 1, "la2")
         out.append("la_mb")
     if dmf in TUNABLE:
         out.append("tuned")
     return tuple(out)
 
 
-def _make_la_mb(dmf: str, la: Callable) -> Callable:
+def _with_depth(dmf: str, fn: Callable, depth: int) -> Callable:
+    if depth == 1:
+        return fn
+    if not supports_depth(fn):
+        raise KeyError(
+            f"depth-{depth} look-ahead not available for {dmf!r}: its "
+            f"driver is not pipeline-backed (band reduction interleaves two "
+            f"coupled panels; DESIGN.md §10); have {list_variants(dmf)}")
+
+    def deepened(a, b=128, **kw):
+        # an explicit depth= that disagrees with the name would run a
+        # different schedule than the label claims (and mis-attribute any
+        # measurement recorded against it) — same conflict deepen() rejects
+        if kw.setdefault("depth", depth) != depth:
+            raise ValueError(
+                f"variant name pins depth={depth} but depth={kw['depth']} "
+                f"was passed; drop one of them")
+        return fn(a, b=b, **kw)
+
+    deepened.__name__ = f"{fn.__name__}_d{depth}"
+    deepened.__doc__ = f"{fn.__name__} with look-ahead depth {depth}."
+    deepened.supports_depth = True
+    return deepened
+
+
+def _make_la_mb(dmf: str, la: Callable, depth: int = 1) -> Callable:
     from repro.kernels import ops as kops
 
     fused = kops.FUSED_PU.get(dmf)
     if fused is None:
-        return la
+        return _with_depth(dmf, la, depth)
+    la = _with_depth(dmf, la, depth)
 
     def la_mb(a, b=128, **kw):
         # forward b by keyword so callers may use either fn(a, 32) or
@@ -106,9 +186,9 @@ def _make_tuned(dmf: str, table: Dict[str, Callable]) -> Callable:
     def tuned(a, b=None, **kw):
         """Dispatch through the ``repro.tune`` cache (DESIGN.md §9).
 
-        Cache hit → the tuned (variant, schedule) pair runs, on the caller's
-        backend.  Cold cache → the ``la`` driver with the caller's block size
-        (or 128), so ``"tuned"`` is always executable.
+        Cache hit → the tuned (variant, depth, schedule) triple runs, on the
+        caller's backend.  Cold cache → the ``la`` driver with the caller's
+        block size (or 128), so ``"tuned"`` is always executable.
         """
         from repro import tune
         from repro.core.backend import get_backend
@@ -132,25 +212,27 @@ def get_variant(dmf: str, variant: str) -> Callable:
 
     ``la_mb`` resolves to the look-ahead driver with the fused Pallas
     panel-update kernel plugged in (falls back to ``la`` for DMFs without a
-    fused kernel).  ``tuned`` resolves the (variant, block schedule) pair
-    recorded by :mod:`repro.tune` for the input's (shape, dtype, backend) at
-    call time, falling back to ``la`` with the caller's block size when the
-    cache is cold.
+    fused kernel).  ``la<d>``/``la_mb<d>`` resolve the same drivers with
+    ``depth=d`` panels in flight.  ``tuned`` resolves the (variant, block
+    schedule) pair recorded by :mod:`repro.tune` for the input's (shape,
+    dtype, backend) at call time, falling back to ``la`` with the caller's
+    block size when the cache is cold.
     """
     if dmf not in _REGISTRY:
         raise KeyError(f"unknown DMF {dmf!r}; expected one of {FACTORIZATIONS}")
     table = _REGISTRY[dmf]
-    if variant == "la_mb":
-        return _make_la_mb(dmf, table["la"])
-    if variant == "tuned":
+    base, depth = parse_variant(variant)
+    if base == "la_mb":
+        return _make_la_mb(dmf, table["la"], depth)
+    if base == "tuned":
         if dmf not in TUNABLE:
             raise KeyError(
                 f"variant 'tuned' not available for {dmf!r}: its block size "
                 f"defines the output, not just the schedule; "
                 f"have {list_variants(dmf)}")
         return _make_tuned(dmf, table)
-    if variant not in table:
+    if base not in table:
         raise KeyError(
             f"variant {variant!r} not available for {dmf!r}; "
             f"have {list_variants(dmf)}")
-    return table[variant]
+    return _with_depth(dmf, table[base], depth)

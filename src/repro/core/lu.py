@@ -1,6 +1,8 @@
 """LU factorization with partial pivoting (LUpp) — all scheduling variants.
 
-Variants mirror the paper's experimental lines (§6.4):
+The algorithm is declared once as :data:`LU_OPS` (a
+:class:`~repro.core.pipeline.StepOps` record); every scheduling variant is
+emitted by the generic engine in :mod:`repro.core.pipeline`:
 
 * :func:`lu_unblocked`            — GETF2 analogue; also the PF building block.
 * :func:`lu_blocked`              — right-looking blocked GETRF; the **MTB**
@@ -10,27 +12,29 @@ Variants mirror the paper's experimental lines (§6.4):
 * :func:`lu_lookahead`            — **LA**: static look-ahead (Listing 5).
   ``TU_k^L + PF_{k+1}`` (= ``PU(k+1)``) is made *data-independent* of
   ``TU_k^R`` within each iteration so the scheduler can overlap them — the
-  TPU analogue of the paper's two ``parallel sections``.
+  TPU analogue of the paper's two ``parallel sections``.  ``depth=d`` keeps
+  d panels in flight (the paper's §5 generalization; DESIGN.md §10).
 * ``lu_lookahead(fused_pu=...)``  — **LA_MB**: look-ahead plus a fused
   VMEM-resident panel-update kernel (the malleable-BLAS analogue; see
   ``repro/kernels/fused_panel_update.py``).
 
 Pivoting follows GETRF semantics: ``ipiv[j]`` (0-based, global) is the row
 swapped with row ``j`` at step ``j``; row interchanges apply to the full row,
-so ``P·A = L·U`` exactly — the numerics are unchanged by look-ahead, which is
-the property the paper highlights against RTM incremental pivoting (§3.3).
+so ``P·A = L·U`` exactly — the numerics are unchanged by look-ahead (at any
+depth), which is the property the paper highlights against RTM incremental
+pivoting (§3.3).
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Callable, Optional
+from typing import Callable, NamedTuple, Optional
 
-import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core import pipeline
 from repro.core.backend import Backend, JNP_BACKEND
-from repro.core.blocking import BlockSpec, panel_steps, split_trailing
+from repro.core.blocking import BlockSpec
+from repro.core.pipeline import StepOps
 
 __all__ = [
     "lu_unblocked",
@@ -40,6 +44,7 @@ __all__ = [
     "laswp",
     "permutation_from_pivots",
     "unpack_lu",
+    "LU_OPS",
 ]
 
 
@@ -115,7 +120,105 @@ def unpack_lu(lu: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
 
 
 # ---------------------------------------------------------------------------
-# Blocked right-looking GETRF — the MTB analogue.
+# The StepOps declaration — everything above is algorithm, everything the
+# engine needs to schedule it is below (DESIGN.md §10).
+# ---------------------------------------------------------------------------
+class _LUCtx(NamedTuple):
+    piv: jnp.ndarray          # panel-relative pivots of the factored panel
+
+
+def _init(a):
+    return a, jnp.zeros((min(a.shape),), jnp.int32)
+
+
+def _factor(state, st, backend, panel_fn):
+    # PF(k): ``panel_fn`` (Pallas GETF2 kernel) has the `lu_unblocked`
+    # signature: (m × nb panel) -> (packed LU, panel-relative piv).
+    a, ipiv = state
+    k, bk = st.k, st.bk
+    panel, piv = (panel_fn or lu_unblocked)(a[k:, k : k + bk])
+    a = a.at[k:, k : k + bk].set(panel)
+    ipiv = ipiv.at[k : k + bk].set(piv + k)
+    return (a, ipiv), _LUCtx(piv)
+
+
+def _swap(state, ctx, st, backend):
+    # Interchanges of panel k applied to every column outside the panel —
+    # eager under mtb/rtm, deferred one iteration under la (Listing 5).
+    a, ipiv = state
+    k = st.k
+    if k > 0:
+        a = a.at[:, :k].set(laswp(a[:, :k], ctx.piv, offset=k))
+    if st.k_next < a.shape[1]:
+        a = a.at[:, st.k_next :].set(
+            laswp(a[:, st.k_next :], ctx.piv, offset=k))
+    return (a, ipiv)
+
+
+def _update(state, ctx, st, c0, c1, backend):
+    # TU_k over columns [c0, c1): TRSM on the block row, GEMM below it.
+    a, ipiv = state
+    k, bk, k_next = st.k, st.bk, st.k_next
+    l11 = a[k : k + bk, k : k + bk]
+    u12 = backend.trsm(l11, a[k : k + bk, c0:c1],
+                       side="left", lower=True, unit_diagonal=True)
+    a = a.at[k : k + bk, c0:c1].set(u12)
+    l21 = a[k_next:, k : k + bk]
+    a = a.at[k_next:, c0:c1].set(
+        backend.update(a[k_next:, c0:c1], l21, u12))
+    return (a, ipiv)
+
+
+def _tiles(state, ctx, st, backend):
+    # RTM: one TRSM task per trailing column panel, one GEMM task per tile.
+    a, ipiv = state
+    n = a.shape[1]
+    k, bk = st.k, st.bk
+    l11 = a[k : k + bk, k : k + bk]
+    for j in range(st.k_next, n, bk):
+        bj = min(bk, n - j)
+        u12 = backend.trsm(l11, a[k : k + bk, j : j + bj],
+                           side="left", lower=True, unit_diagonal=True)
+        a = a.at[k : k + bk, j : j + bj].set(u12)
+        for i in range(st.k_next, n, bk):
+            bi = min(bk, n - i)
+            l21 = a[i : i + bi, k : k + bk]
+            a = a.at[i : i + bi, j : j + bj].set(
+                backend.update(a[i : i + bi, j : j + bj], l21, u12))
+    return (a, ipiv)
+
+
+def _pu(state, ctx, st, st_next, backend, fused):
+    # LA_MB: TRSM + GEMM + GETF2 in one VMEM-resident kernel call —
+    # ``fused(l11, l21, a1l, a2l) -> (u12_panel, packed_panel, piv)``.
+    a, ipiv = state
+    k, bk, k_next = st.k, st.bk, st.k_next
+    lcols = slice(st_next.k, st_next.k_next)
+    l11 = a[k : k + bk, k : k + bk]
+    l21 = a[k_next:, k : k + bk]
+    u12l, panel_next, piv_next = fused(
+        l11, l21, a[k : k + bk, lcols], a[k_next:, lcols])
+    a = a.at[k : k + bk, lcols].set(u12l)
+    a = a.at[k_next:, lcols].set(panel_next)
+    ipiv = ipiv.at[st_next.k : st_next.k + st_next.bk].set(
+        piv_next + st_next.k)
+    return (a, ipiv), _LUCtx(piv_next)
+
+
+LU_OPS = StepOps(
+    name="lu",
+    init=_init,
+    factor=_factor,
+    update=_update,
+    finalize=lambda state: state,
+    swap=_swap,
+    tiles=_tiles,
+    pu=_pu,
+)
+
+
+# ---------------------------------------------------------------------------
+# Public drivers — thin engine wrappers, signatures unchanged since PR 0.
 # ---------------------------------------------------------------------------
 def lu_blocked(
     a: jnp.ndarray,
@@ -124,156 +227,45 @@ def lu_blocked(
     backend: Backend = JNP_BACKEND,
     panel_fn: Optional[Callable] = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """Right-looking blocked LUpp.  Returns (packed LU, global ipiv)."""
-    n = a.shape[0]
-    panel_fn = panel_fn or lu_unblocked
-    ipiv = jnp.zeros((min(a.shape),), jnp.int32)
-
-    for st in panel_steps(n, b):
-        k, bk = st.k, st.bk
-        # --- PF(k): factor the panel A[k:, k:k+bk] ----------------------
-        panel, piv = panel_fn(a[k:, k : k + bk])
-        a = a.at[k:, k : k + bk].set(panel)
-        ipiv = ipiv.at[k : k + bk].set(piv + k)
-        # --- apply the interchanges to the left and right of the panel --
-        if k > 0:
-            a = a.at[:, :k].set(laswp(a[:, :k], piv, offset=k))
-        if st.k_next < n:
-            a = a.at[:, st.k_next :].set(laswp(a[:, st.k_next :], piv, offset=k))
-            # --- TU(k): TRSM + GEMM on the whole trailing matrix --------
-            l11 = a[k : k + bk, k : k + bk]
-            u12 = backend.trsm(l11, a[k : k + bk, st.k_next :],
-                               side="left", lower=True, unit_diagonal=True)
-            a = a.at[k : k + bk, st.k_next :].set(u12)
-            l21 = a[st.k_next :, k : k + bk]
-            a = a.at[st.k_next :, st.k_next :].set(
-                backend.update(a[st.k_next :, st.k_next :], l21, u12))
-    return a, ipiv
+    """Right-looking blocked LUpp (MTB).  Returns (packed LU, global ipiv)."""
+    return pipeline.factorize(LU_OPS, a, b, variant="mtb", backend=backend,
+                              panel_fn=panel_fn)
 
 
-# ---------------------------------------------------------------------------
-# Tiled trailing update — the RTM analogue (Listing 4 fragmentation).
-# ---------------------------------------------------------------------------
 def lu_tiled(
     a: jnp.ndarray,
     b: BlockSpec = 128,
     *,
     backend: Backend = JNP_BACKEND,
+    panel_fn: Optional[Callable] = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """Blocked LUpp with the trailing update fragmented into per-panel tasks.
-
-    Mirrors the RTM code in paper Listing 4: ``TU_k -> (TU_k^{k+1} | ...)``.
-    Each column panel of the trailing matrix is updated by its own TRSM and a
-    sequence of b×b GEMM "tasks" — the fragmentation that causes the paper's
-    observed RTM overhead on a fast BLAS.
-    """
-    n = a.shape[0]
-    ipiv = jnp.zeros((min(a.shape),), jnp.int32)
-
-    for st in panel_steps(n, b):
-        k, bk = st.k, st.bk
-        panel, piv = lu_unblocked(a[k:, k : k + bk])
-        a = a.at[k:, k : k + bk].set(panel)
-        ipiv = ipiv.at[k : k + bk].set(piv + k)
-        if k > 0:
-            a = a.at[:, :k].set(laswp(a[:, :k], piv, offset=k))
-        if st.k_next >= n:
-            break
-        a = a.at[:, st.k_next :].set(laswp(a[:, st.k_next :], piv, offset=k))
-        l11 = a[k : k + bk, k : k + bk]
-        # one "task" per trailing column panel j (TU_k^j), itself tiled by
-        # rows; the tile edge is this step's panel width (== b for scalar b on
-        # every step that has trailing work, and the schedule entry otherwise)
-        for j in range(st.k_next, n, bk):
-            bj = min(bk, n - j)
-            u12 = backend.trsm(l11, a[k : k + bk, j : j + bj],
-                               side="left", lower=True, unit_diagonal=True)
-            a = a.at[k : k + bk, j : j + bj].set(u12)
-            for i in range(st.k_next, n, bk):
-                bi = min(bk, n - i)
-                l21 = a[i : i + bi, k : k + bk]
-                a = a.at[i : i + bi, j : j + bj].set(
-                    backend.update(a[i : i + bi, j : j + bj], l21, u12))
-    return a, ipiv
+    """Blocked LUpp with the trailing update fragmented into per-tile tasks
+    (RTM, paper Listing 4) — the fragmentation that causes the paper's
+    observed RTM overhead on a fast BLAS."""
+    return pipeline.factorize(LU_OPS, a, b, variant="rtm", backend=backend,
+                              panel_fn=panel_fn)
 
 
-# ---------------------------------------------------------------------------
-# Static look-ahead (paper §4, Listing 5) — the LA / LA_MB variants.
-# ---------------------------------------------------------------------------
+@pipeline.mark_depth_capable
 def lu_lookahead(
     a: jnp.ndarray,
     b: BlockSpec = 128,
     *,
     backend: Backend = JNP_BACKEND,
+    panel_fn: Optional[Callable] = None,
     fused_pu: Optional[Callable] = None,
+    depth: int = 1,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """LUpp with static look-ahead.
+    """LUpp with static look-ahead; ``depth`` panels in flight.
 
-    Per iteration k (panel k already factored):
-      1. interchanges + TRSM over the whole trailing block row,
-      2. ``PU(k+1)`` : GEMM-update of the *next* panel columns (``TU_k^L``)
-         followed immediately by its factorization (``PF_{k+1}``),
-      3. ``TU_right(k)`` : GEMM-update of the remaining columns (``TU_k^R``).
+    The pivots of ``PF(k+1)`` are applied lazily at the start of iteration
+    k+1 (row interchanges commute with the row-parallel GEMM update),
+    keeping GETRF numerics bit-for-bit at every depth.
 
-    Steps 2 and 3 share only *read* dependencies (``L21`` of panel k), so XLA
-    is free to schedule them concurrently — panel factorization leaves the
-    critical path exactly as in the paper's ``parallel sections`` version.
-    The pivots of ``PF_{k+1}`` are applied lazily to the right part at the
-    start of iteration k+1 (row interchanges commute with the row-parallel
-    GEMM update), keeping GETRF numerics bit-for-bit.
-
-    ``fused_pu``: optional fused panel-update kernel ``(l11, l21, a1l, a2l) ->
-    (u12_panel, packed_panel, piv)`` implementing TRSM+GEMM+PF in one
+    ``fused_pu``: optional fused panel-update kernel ``(l11, l21, a1l, a2l)
+    -> (u12_panel, packed_panel, piv)`` implementing TRSM+GEMM+PF in one
     VMEM-resident call — the malleable-BLAS (LA_MB) analogue.
     """
-    n = a.shape[0]
-    ipiv = jnp.zeros((min(a.shape),), jnp.int32)
-    steps = list(panel_steps(n, b))
-
-    # PF(0): factor the first panel before the pipelined loop (Listing 5).
-    st0 = steps[0]
-    panel, piv = lu_unblocked(a[:, : st0.bk])
-    a = a.at[:, : st0.bk].set(panel)
-    ipiv = ipiv.at[: st0.bk].set(piv)
-    pending_piv = piv  # interchanges not yet applied to columns outside panel
-
-    for st in steps:
-        k, bk, k_next = st.k, st.bk, st.k_next
-        lcols, rcols = split_trailing(k_next, st.b_next, n)
-        # --- lazily apply panel-k interchanges outside panel k ----------
-        if k > 0:
-            a = a.at[:, :k].set(laswp(a[:, :k], pending_piv, offset=k))
-        if k_next < n:
-            a = a.at[:, k_next:].set(laswp(a[:, k_next:], pending_piv, offset=k))
-        if k_next >= n:
-            break
-
-        l11 = a[k : k + bk, k : k + bk]
-        l21 = a[k_next:, k : k + bk]
-
-        # --- PU(k+1): TU_k^L + PF_{k+1} ---------------------------------
-        if fused_pu is not None and st.b_next > 0:
-            u12l, panel_next, piv_next = fused_pu(
-                l11, l21, a[k : k + bk, lcols], a[k_next:, lcols])
-            a = a.at[k : k + bk, lcols].set(u12l)
-            a = a.at[k_next:, lcols].set(panel_next)
-        elif st.b_next > 0:
-            u12l = backend.trsm(l11, a[k : k + bk, lcols],
-                                side="left", lower=True, unit_diagonal=True)
-            a = a.at[k : k + bk, lcols].set(u12l)
-            nxt = backend.update(a[k_next:, lcols], l21, u12l)
-            panel_next, piv_next = lu_unblocked(nxt)
-            a = a.at[k_next:, lcols].set(panel_next)
-        if st.b_next > 0:
-            ipiv = ipiv.at[k_next : k_next + st.b_next].set(piv_next + k_next)
-
-        # --- TU_right(k): independent of PU(k+1) ------------------------
-        if rcols.start < n:
-            u12r = backend.trsm(l11, a[k : k + bk, rcols],
-                                side="left", lower=True, unit_diagonal=True)
-            a = a.at[k : k + bk, rcols].set(u12r)
-            a = a.at[k_next:, rcols].set(
-                backend.update(a[k_next:, rcols], l21, u12r))
-
-        pending_piv = piv_next if st.b_next > 0 else None
-    return a, ipiv
+    return pipeline.factorize(LU_OPS, a, b, variant="la", depth=depth,
+                              backend=backend, panel_fn=panel_fn,
+                              fused_pu=fused_pu)

@@ -6,11 +6,13 @@ upper-triangular ``T`` such that ``Q_panel = I − V·T·Vᵀ``.  The trailing
 update applies ``Qᵀ·C = C − V·Tᵀ·(Vᵀ·C)`` — two large GEMMs, exactly the
 BLAS-3 shape the paper's trailing update relies on.
 
-Variants: :func:`qr_blocked` (MTB), :func:`qr_tiled` (RTM panel-fragmented —
-NOTE the paper's RTM-QR uses *incremental* QR [Gunter & van de Geijn 2005]
-which changes the factor representation; we implement the panel-fragmented
-task version so all variants produce identical GEQRF output, and note the
-difference in DESIGN.md), :func:`qr_lookahead` (LA / LA_MB via ``fused_pu``).
+Declared as :data:`QR_OPS`, scheduled by :mod:`repro.core.pipeline`:
+:func:`qr_blocked` (MTB), :func:`qr_tiled` (RTM panel-fragmented — NOTE the
+paper's RTM-QR uses *incremental* QR [Gunter & van de Geijn 2005] which
+changes the factor representation; we implement the panel-fragmented task
+version so all variants produce identical GEQRF output, and note the
+difference in DESIGN.md), :func:`qr_lookahead` (LA / LA_MB via ``fused_pu``,
+depth-d via ``depth=``).
 """
 from __future__ import annotations
 
@@ -19,8 +21,10 @@ from typing import Callable, NamedTuple, Optional
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core import pipeline
 from repro.core.backend import Backend, JNP_BACKEND
-from repro.core.blocking import BlockSpec, panel_steps, split_trailing
+from repro.core.blocking import BlockSpec, panel_steps
+from repro.core.pipeline import StepOps
 
 __all__ = [
     "qr_unblocked",
@@ -31,6 +35,7 @@ __all__ = [
     "unpack_v",
     "apply_qt_blocked",
     "form_q",
+    "QR_OPS",
 ]
 
 
@@ -112,6 +117,21 @@ def _factor_panel(block: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray, _Panel]
     return packed, tau, _Panel(v, t)
 
 
+def _hooked_factor_panel(block: jnp.ndarray, panel_fn=None
+                         ) -> tuple[jnp.ndarray, jnp.ndarray, _Panel]:
+    """PF with the ``panel_fn=`` kernel hook.
+
+    ``panel_fn`` has the QR panel-kernel signature ``(panel) -> (packed,
+    tau, T)`` (see ``repro.kernels.ref.qr_panel``); the WY reflectors are
+    re-derived from its packed output.  Shared by :data:`QR_OPS` and the
+    bespoke band-reduction driver so the contract lives in one place.
+    """
+    if panel_fn is None:
+        return _factor_panel(block)
+    packed, tau, t = panel_fn(block)
+    return packed, tau, _Panel(unpack_v(packed, block.shape[1]), t)
+
+
 def apply_qt_blocked(p: _Panel, c: jnp.ndarray,
                      backend: Backend = JNP_BACKEND) -> jnp.ndarray:
     """``Qᵀ·C = C − V·Tᵀ·(Vᵀ·C)`` — the BLAS-3 trailing update."""
@@ -120,53 +140,108 @@ def apply_qt_blocked(p: _Panel, c: jnp.ndarray,
     return (c - backend.gemm(p.v, w)).astype(c.dtype)
 
 
+# ---------------------------------------------------------------------------
+# StepOps declaration (DESIGN.md §10).
+# ---------------------------------------------------------------------------
+def _factor(state, st, backend, panel_fn):
+    # PF(k): ``panel_fn`` (Pallas GEQR2+LARFT kernel) has the signature
+    # ``(m × nb panel) -> (packed, tau, T)`` (see ``repro.kernels.ref``).
+    a, taus = state
+    m = a.shape[0]
+    k, bk = st.k, st.bk
+    packed, tau, pnl = _hooked_factor_panel(a[k:, k : k + bk], panel_fn)
+    a = a.at[k:, k : k + bk].set(packed)
+    taus = taus.at[k : k + bk].set(tau[: min(bk, m - k)])
+    return (a, taus), pnl
+
+
+def _update(state, ctx, st, c0, c1, backend):
+    # TU_k on columns [c0, c1): apply the block reflector to rows k:.
+    a, taus = state
+    a = a.at[st.k :, c0:c1].set(
+        apply_qt_blocked(ctx, a[st.k :, c0:c1], backend))
+    return (a, taus)
+
+
+def _tiles(state, ctx, st, backend):
+    # RTM: one Qᵀ-apply task per trailing column panel.
+    a, taus = state
+    n = a.shape[1]
+    k, bk = st.k, st.bk
+    for j in range(st.k_next, n, bk):
+        bj = min(bk, n - j)
+        a = a.at[k:, j : j + bj].set(
+            apply_qt_blocked(ctx, a[k:, j : j + bj], backend))
+    return (a, taus)
+
+
+def _pu(state, ctx, st, st_next, backend, fused):
+    # LA_MB: block-reflector apply + GEQR2 without leaving VMEM —
+    # ``fused(v, t, c_panel) -> (packed, tau)``.
+    a, taus = state
+    m = a.shape[0]
+    lcols = slice(st_next.k, st_next.k_next)
+    packed_n, tau_n = fused(ctx.v, ctx.t, a[st.k :, lcols])
+    a = a.at[st.k :, lcols].set(packed_n)
+    # re-derive the reflectors for the *next* iteration
+    pkd = a[st_next.k :, lcols]
+    v_n = unpack_v(pkd, st_next.bk)
+    pnl_next = _Panel(v_n, build_t_matrix(v_n, tau_n))
+    taus = taus.at[st_next.k : st_next.k + st_next.bk].set(
+        tau_n[: min(st_next.bk, m - st_next.k)])
+    return (a, taus), pnl_next
+
+
+QR_OPS = StepOps(
+    name="qr",
+    init=lambda a: (a, jnp.zeros((min(a.shape),), a.dtype)),
+    factor=_factor,
+    update=_update,
+    finalize=lambda state: state,
+    tiles=_tiles,
+    pu=_pu,
+    # m < n inputs: the traversal ends once the rows are exhausted, and
+    # look-ahead must not pre-factor a panel that starts beyond row m.
+    stop=lambda state, st: st.k >= state[0].shape[0],
+    can_factor=lambda state, st: st.k < state[0].shape[0],
+    width=lambda a: a.shape[1],
+)
+
+
+# ---------------------------------------------------------------------------
+# Public drivers.
+# ---------------------------------------------------------------------------
 def qr_blocked(a: jnp.ndarray, b: BlockSpec = 128, *,
-               backend: Backend = JNP_BACKEND) -> tuple[jnp.ndarray, jnp.ndarray]:
+               backend: Backend = JNP_BACKEND,
+               panel_fn: Optional[Callable] = None,
+               ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Blocked GEQRF — the MTB analogue.  Returns (packed A, tau)."""
-    m, n = a.shape
-    taus = jnp.zeros((min(m, n),), a.dtype)
-    for st in panel_steps(n, b):
-        k, bk, k_next = st.k, st.bk, st.k_next
-        if k >= m:
-            break
-        packed, tau, p = _factor_panel(a[k:, k : k + bk])
-        a = a.at[k:, k : k + bk].set(packed)
-        taus = taus.at[k : k + bk].set(tau[: min(bk, m - k)])
-        if k_next < n:
-            a = a.at[k:, k_next:].set(
-                apply_qt_blocked(p, a[k:, k_next:], backend))
-    return a, taus
+    return pipeline.factorize(QR_OPS, a, b, variant="mtb", backend=backend,
+                              panel_fn=panel_fn)
 
 
 def qr_tiled(a: jnp.ndarray, b: BlockSpec = 128, *,
-             backend: Backend = JNP_BACKEND) -> tuple[jnp.ndarray, jnp.ndarray]:
+             backend: Backend = JNP_BACKEND,
+             panel_fn: Optional[Callable] = None,
+             ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """RTM analogue: trailing update fragmented into per-panel tasks."""
-    m, n = a.shape
-    taus = jnp.zeros((min(m, n),), a.dtype)
-    for st in panel_steps(n, b):
-        k, bk, k_next = st.k, st.bk, st.k_next
-        if k >= m:
-            break
-        packed, tau, p = _factor_panel(a[k:, k : k + bk])
-        a = a.at[k:, k : k + bk].set(packed)
-        taus = taus.at[k : k + bk].set(tau[: min(bk, m - k)])
-        for j in range(k_next, n, bk):         # one task per column panel
-            bj = min(bk, n - j)
-            a = a.at[k:, j : j + bj].set(
-                apply_qt_blocked(p, a[k:, j : j + bj], backend))
-    return a, taus
+    return pipeline.factorize(QR_OPS, a, b, variant="rtm", backend=backend,
+                              panel_fn=panel_fn)
 
 
+@pipeline.mark_depth_capable
 def qr_lookahead(
     a: jnp.ndarray,
     b: BlockSpec = 128,
     *,
     backend: Backend = JNP_BACKEND,
+    panel_fn: Optional[Callable] = None,
     fused_pu: Optional[Callable] = None,
+    depth: int = 1,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """GEQRF with static look-ahead (paper Listing 5).
+    """GEQRF with static look-ahead; ``depth`` panels in flight.
 
-    Iteration k (panel k already factored, reflectors ``p``):
+    Iteration k (panel k already factored, reflectors in the panel ctx):
       * ``PU(k+1)``   : apply ``Qᵀ_k`` to the next panel columns, factor them,
       * ``TU_right(k)``: apply ``Qᵀ_k`` to the remaining columns —
         data-independent of ``PU(k+1)``.
@@ -175,46 +250,9 @@ def qr_lookahead(
     that applies the block reflector and factors the result without leaving
     VMEM (LA_MB analogue).
     """
-    m, n = a.shape
-    taus = jnp.zeros((min(m, n),), a.dtype)
-    steps = list(panel_steps(n, b))
-
-    st0 = steps[0]
-    packed, tau, pnl = _factor_panel(a[:, : st0.bk])
-    a = a.at[:, : st0.bk].set(packed)
-    taus = taus.at[: st0.bk].set(tau[: min(st0.bk, m)])
-
-    for st in steps:
-        k, bk, k_next = st.k, st.bk, st.k_next
-        if k_next >= n or k >= m:
-            break
-        lcols, rcols = split_trailing(k_next, st.b_next, n)
-
-        # --- PU(k+1): update + factor the next panel ---------------------
-        if st.b_next > 0 and k_next < m:
-            if fused_pu is not None:
-                packed_n, tau_n = fused_pu(pnl.v, pnl.t, a[k:, lcols])
-                upd = packed_n  # fused kernel returns the updated+factored panel
-                a = a.at[k:, lcols].set(upd)
-                # re-derive reflectors for the *next* iteration
-                pkd = a[k_next:, lcols]
-                v_n = unpack_v(pkd, st.b_next)
-                pnl_next = _Panel(v_n, build_t_matrix(v_n, tau_n))
-            else:
-                upd = apply_qt_blocked(pnl, a[k:, lcols], backend)
-                packed_n, tau_n, pnl_next = _factor_panel(upd[bk:])
-                a = a.at[k:, lcols].set(upd.at[bk:].set(packed_n))
-            taus = taus.at[k_next : k_next + st.b_next].set(
-                tau_n[: min(st.b_next, m - k_next)])
-
-        # --- TU_right(k): independent of PU(k+1) -------------------------
-        if rcols.start < n:
-            a = a.at[k:, rcols].set(
-                apply_qt_blocked(pnl, a[k:, rcols], backend))
-
-        if st.b_next > 0 and k_next < m:
-            pnl = pnl_next
-    return a, taus
+    return pipeline.factorize(QR_OPS, a, b, variant="la", depth=depth,
+                              backend=backend, panel_fn=panel_fn,
+                              fused_pu=fused_pu)
 
 
 def form_q(a_packed: jnp.ndarray, taus: jnp.ndarray, b: BlockSpec = 128, *,

@@ -14,7 +14,6 @@ Two sources:
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import numpy as np
 

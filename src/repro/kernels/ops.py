@@ -15,9 +15,8 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 
-from repro.core.backend import Backend, gemm_jnp, trsm_jnp
+from repro.core.backend import Backend, trsm_jnp
 from repro.kernels import blis_gemm as _bg
 from repro.kernels import fused_panel_update as _fpu
 from repro.kernels import panel_lu as _plu
@@ -134,10 +133,27 @@ def fused_cholesky_panel_update(lrow, l21, panel):
                                             interpret=_INTERPRET)
 
 
-# resolved by repro.core.lookahead.get_variant("<dmf>", "la_mb")
+# resolved by repro.core.lookahead.get_variant("<dmf>", "la_mb") — composes
+# with any look-ahead depth ("la_mb2", ...): the engine fuses PU(k+1) and
+# issues the deeper narrow updates through the regular backend ops.
 FUSED_PU = {
     "lu": fused_lu_panel_update,
     "cholesky": fused_cholesky_panel_update,
+}
+
+# Pallas panel kernels in the per-DMF ``panel_fn=`` contract documented on
+# each ``STEP_OPS`` declaration (DESIGN.md §10).  Every scheduling variant
+# of every pipeline-backed driver threads ``panel_fn=`` through
+# ``StepOps.factor``, so these plug into mtb/rtm/la(depth=d) uniformly:
+#
+#     lu_tiled(a, 128, panel_fn=kops.PANEL_KERNELS["lu"])
+#
+# DMFs without a VMEM-resident panel kernel (cholesky/ldlt factor their
+# panel through backend TRSM already; gauss_jordan's diagonal inverse is
+# latency-trivial) simply have no entry.
+PANEL_KERNELS = {
+    "lu": lu_panel,
+    "qr": qr_panel,
 }
 
 

@@ -9,7 +9,6 @@ run in f32, matmuls accumulate f32 (MXU semantics).
 """
 from __future__ import annotations
 
-import dataclasses
 from functools import partial
 from typing import Optional
 

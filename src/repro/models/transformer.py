@@ -14,8 +14,6 @@ Cache model (decode):
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -11,7 +11,6 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from functools import partial
 from typing import Optional
 
 import jax

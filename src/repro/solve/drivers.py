@@ -4,7 +4,9 @@ Every driver accepts ``variant=`` (one of the scheduling strategies the
 paper evaluates — ``mtb``/``rtm``/``la``/``la_mb``, plus ``"tuned"`` which
 resolves the autotuned (variant, block schedule) pair from the
 :mod:`repro.tune` cache, all through
-:func:`repro.core.lookahead.get_variant`) and ``backend=`` (``"jnp"`` for
+:func:`repro.core.lookahead.get_variant`), ``depth=`` (look-ahead depth —
+``depth=2`` with ``variant="la"`` resolves the ``"la2"`` pipeline schedule,
+DESIGN.md §10) and ``backend=`` (``"jnp"`` for
 XLA-native BLAS, ``"pallas"`` for the BLIS-analogue kernels, or a
 :class:`~repro.core.backend.Backend` instance), so the look-ahead schedules
 and the Pallas BLAS flow through the factor *and* solve phases unchanged —
@@ -29,7 +31,7 @@ import jax.numpy as jnp
 
 from repro.core.backend import Backend, get_backend
 from repro.core.blocking import BlockSpec, normalize_block
-from repro.core.lookahead import get_variant
+from repro.core.lookahead import deepen, get_variant
 from repro.solve.factors import (CholeskyFactors, LDLTFactors, LUFactors,
                                  QRFactors)
 
@@ -49,36 +51,48 @@ def _resolve(backend: BackendLike) -> Backend:
 _static_block = normalize_block
 
 
+def _deepen(variant: str, depth: int) -> str:
+    """Fold ``depth=`` into the variant name (``("la", 2)`` → ``"la2"``).
+
+    ``depth=1`` is the identity for every variant; deeper look-ahead is a
+    property of the ``la``/``la_mb`` window, so ``depth>1`` with ``mtb`` /
+    ``rtm`` / ``tuned`` raises (``tuned`` carries its own depth in the
+    cached variant name).
+    """
+    return variant if depth == 1 else deepen(variant, depth)
+
+
 # ---------------------------------------------------------------------------
 # Factor steps — factor once, reuse the object for many solves.
 # ---------------------------------------------------------------------------
 def lu_factor(a: jnp.ndarray, block: BlockSpec = 128, *, variant: str = "la",
-              backend: BackendLike = "jnp") -> LUFactors:
+              depth: int = 1, backend: BackendLike = "jnp") -> LUFactors:
     be = _resolve(backend)
-    lu, ipiv = get_variant("lu", variant)(a, block, backend=be)
+    lu, ipiv = get_variant("lu", _deepen(variant, depth))(a, block, backend=be)
     return LUFactors.from_packed(lu, ipiv, block=_static_block(block),
                                  backend=be)
 
 
 def cholesky_factor(a: jnp.ndarray, block: BlockSpec = 128, *, variant: str = "la",
-                    backend: BackendLike = "jnp") -> CholeskyFactors:
+                    depth: int = 1, backend: BackendLike = "jnp") -> CholeskyFactors:
     be = _resolve(backend)
-    l = get_variant("cholesky", variant)(a, block, backend=be)
+    l = get_variant("cholesky", _deepen(variant, depth))(a, block, backend=be)
     return CholeskyFactors(l=l, block=_static_block(block), backend=be)
 
 
 def qr_factor(a: jnp.ndarray, block: BlockSpec = 128, *, variant: str = "la",
-              backend: BackendLike = "jnp") -> QRFactors:
+              depth: int = 1, backend: BackendLike = "jnp") -> QRFactors:
     be = _resolve(backend)
-    packed, taus = get_variant("qr", variant)(a, block, backend=be)
+    packed, taus = get_variant("qr", _deepen(variant, depth))(a, block,
+                                                             backend=be)
     return QRFactors(packed=packed, taus=taus,
                      block=_static_block(block), backend=be)
 
 
 def ldlt_factor(a: jnp.ndarray, block: BlockSpec = 128, *, variant: str = "la",
-                backend: BackendLike = "jnp") -> LDLTFactors:
+                depth: int = 1, backend: BackendLike = "jnp") -> LDLTFactors:
     be = _resolve(backend)
-    packed = get_variant("ldlt", variant)(a, block, backend=be)
+    packed = get_variant("ldlt", _deepen(variant, depth))(a, block, backend=be)
     return LDLTFactors(packed=packed, block=_static_block(block),
                        backend=be)
 
@@ -87,25 +101,32 @@ def ldlt_factor(a: jnp.ndarray, block: BlockSpec = 128, *, variant: str = "la",
 # One-shot drivers.
 # ---------------------------------------------------------------------------
 def gesv(a: jnp.ndarray, b: jnp.ndarray, block: BlockSpec = 128, *,
-         variant: str = "la", backend: BackendLike = "jnp") -> jnp.ndarray:
+         variant: str = "la", depth: int = 1,
+         backend: BackendLike = "jnp") -> jnp.ndarray:
     """Solve ``A·X = B`` for general square A (LU with partial pivoting)."""
-    return lu_factor(a, block, variant=variant, backend=backend).solve(b)
+    return lu_factor(a, block, variant=variant, depth=depth,
+                     backend=backend).solve(b)
 
 
 def posv(a: jnp.ndarray, b: jnp.ndarray, block: BlockSpec = 128, *,
-         variant: str = "la", backend: BackendLike = "jnp") -> jnp.ndarray:
+         variant: str = "la", depth: int = 1,
+         backend: BackendLike = "jnp") -> jnp.ndarray:
     """Solve ``A·X = B`` for symmetric positive-definite A (Cholesky)."""
-    return cholesky_factor(a, block, variant=variant, backend=backend).solve(b)
+    return cholesky_factor(a, block, variant=variant, depth=depth,
+                           backend=backend).solve(b)
 
 
 def gels(a: jnp.ndarray, b: jnp.ndarray, block: BlockSpec = 128, *,
-         variant: str = "la", backend: BackendLike = "jnp") -> jnp.ndarray:
+         variant: str = "la", depth: int = 1,
+         backend: BackendLike = "jnp") -> jnp.ndarray:
     """Least-squares ``argmin‖A·X − B‖₂`` for m ≥ n via Householder QR."""
-    return qr_factor(a, block, variant=variant, backend=backend).solve(b)
+    return qr_factor(a, block, variant=variant, depth=depth,
+                     backend=backend).solve(b)
 
 
 def getri(a: jnp.ndarray, block: BlockSpec = 128, *, variant: str = "la",
-          backend: BackendLike = "jnp", method: str = "lu") -> jnp.ndarray:
+          depth: int = 1, backend: BackendLike = "jnp",
+          method: str = "lu") -> jnp.ndarray:
     """Matrix inverse.
 
     ``method="lu"`` (default, LAPACK GETRF+GETRI semantics): factor with
@@ -115,22 +136,25 @@ def getri(a: jnp.ndarray, block: BlockSpec = 128, *, variant: str = "la",
     SPD/diagonally-dominant inputs where the GJE look-ahead study applies.
     """
     if method == "lu":
-        return lu_factor(a, block, variant=variant, backend=backend).inverse()
+        return lu_factor(a, block, variant=variant, depth=depth,
+                         backend=backend).inverse()
     if method == "gj":
         be = _resolve(backend)
-        return get_variant("gauss_jordan", variant)(a, block, backend=be)
+        return get_variant("gauss_jordan", _deepen(variant, depth))(
+            a, block, backend=be)
     raise ValueError(f"method must be 'lu' or 'gj', got {method!r}")
 
 
 def gecon(a: jnp.ndarray, block: BlockSpec = 128, *, variant: str = "la",
-          backend: BackendLike = "jnp", iters: int = 5) -> jnp.ndarray:
+          depth: int = 1, backend: BackendLike = "jnp",
+          iters: int = 5) -> jnp.ndarray:
     """Reciprocal 1-norm condition estimate ``1 / (‖A‖₁·est(‖A⁻¹‖₁))``.
 
     Hager–Higham power iteration on the 1-norm (the LACON kernel behind
     LAPACK's GECON): each step costs one solve with A and one with Aᵀ from
     the *same* LU factors — the canonical factor-once/solve-many consumer.
     """
-    facs = lu_factor(a, block, variant=variant, backend=backend)
+    facs = lu_factor(a, block, variant=variant, depth=depth, backend=backend)
     n = facs.n
     anorm = jnp.max(jnp.sum(jnp.abs(a), axis=0))
 

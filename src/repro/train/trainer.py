@@ -11,8 +11,6 @@ f32 and is sharded like the params (ZeRO-style via the same rules).
 from __future__ import annotations
 
 import dataclasses
-import time
-from functools import partial
 from typing import Any, NamedTuple, Optional
 
 import jax

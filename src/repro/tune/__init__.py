@@ -5,9 +5,11 @@ BLIS micro-kernel, §6.1) and shrinks it on the fly via early termination
 (§5).  This subsystem replaces both hand decisions with a model-seeded
 empirical search per ``(dmf, n, dtype, backend)``:
 
-* :func:`search` — sweep (variant × block size × uniform/tail schedule),
-  pruned by the analytical cost model, measured with the shared benchmark
-  timer, persisted in the cache;
+* :func:`search` — sweep (variant × look-ahead depth × block size ×
+  uniform/tail schedule), pruned by the analytical cost model, measured
+  with the shared benchmark timer, persisted in the cache (internals in
+  :mod:`repro.tune.sweep`; ``repro.tune.search`` is a deprecated alias of
+  that module, renamed so this *function* no longer shadows it);
 * :func:`tuned` — read-only cache lookup; the hook behind
   ``get_variant(dmf, "tuned")`` and ``variant="tuned"`` in ``repro.solve``;
 * :class:`TuneCache` / :class:`TuneConfig` — the JSON-on-disk record with
@@ -19,8 +21,8 @@ from repro.tune import model
 from repro.tune.cache import (TuneCache, TuneConfig, cache_key, default_cache,
                               set_default_cache, tuned)
 from repro.tune.schedule import is_uniform, tail_schedule, uniform_schedule
-from repro.tune.search import (BASELINE_BLOCK, BASELINE_VARIANT,
-                               DEFAULT_BLOCKS, Candidate, search)
+from repro.tune.sweep import (BASELINE_BLOCK, BASELINE_VARIANT,
+                              DEFAULT_BLOCKS, Candidate, search)
 
 __all__ = [
     "model",

@@ -49,10 +49,13 @@ class TuneConfig:
     shape: Tuple[int, ...]
     dtype: str                       # canonical numpy name, e.g. "float32"
     backend: str                     # backend the measurement ran on
-    variant: str                     # concrete variant (never "tuned")
+    variant: str                     # concrete variant (never "tuned");
+    #                                  depth-suffixed look-ahead names
+    #                                  ("la2") are valid and dispatchable
     schedule: Tuple[int, ...]        # per-iteration block widths
     seconds: float                   # measured wall-clock of the winner
     baseline_seconds: float          # measured fixed-b la baseline
+    depth: int = 1                   # look-ahead depth of the winner
     from_cache: bool = False         # True when returned without measuring
 
     def __post_init__(self):
@@ -68,11 +71,21 @@ class TuneConfig:
 
     @classmethod
     def from_json(cls, d: dict, *, from_cache: bool = False) -> "TuneConfig":
+        # pre-ISSUE-3 cache entries have no "depth" key: every variant then
+        # was depth-1, and depth-suffixed variant names did not exist — so
+        # deriving the depth from the variant name migrates both old and new
+        # schemas (a hand-edited mismatch resolves in the name's favour,
+        # since dispatch goes through the variant string).
+        from repro.core.lookahead import parse_variant
+
+        depth = d.get("depth", None)
+        if depth is None:
+            depth = parse_variant(d["variant"])[1]
         return cls(dmf=d["dmf"], shape=tuple(d["shape"]), dtype=d["dtype"],
                    backend=d["backend"], variant=d["variant"],
                    schedule=tuple(d["schedule"]), seconds=d["seconds"],
                    baseline_seconds=d["baseline_seconds"],
-                   from_cache=from_cache)
+                   depth=int(depth), from_cache=from_cache)
 
 
 def cache_key(dmf: str, shape: ShapeLike, dtype, backend: str) -> str:
@@ -232,7 +245,7 @@ def tuned(dmf: str, shape: ShapeLike, *, dtype=jnp.float32,
 
     This is the read-only dispatch hook behind
     ``get_variant(dmf, "tuned")`` — it never triggers a measurement; run
-    :func:`repro.tune.search` to populate the cache.
+    :func:`repro.tune.sweep.search` to populate the cache.
     """
     cache = cache if cache is not None else default_cache()
     return cache.get(cache_key(dmf, shape, dtype, backend))

@@ -117,10 +117,13 @@ def predict(dmf: str, n: int, dtype, variant: str, schedule: BlockSpec,
     uniform-bandwidth rule, checked by the same core helper the drivers
     use), so :func:`rank` can sort them last.
     """
+    from repro.core.lookahead import parse_variant
+
     if dmf == "band_reduction":
         from repro.core.band_reduction import check_uniform_tiling
 
         check_uniform_tiling(n, schedule)
+    base, depth = parse_variant(variant)
     peak = _peak_flops(dtype)
     gemm_eff = GEMM_EFF.get(backend, 0.5)
     total = 0.0
@@ -128,11 +131,15 @@ def predict(dmf: str, n: int, dtype, variant: str, schedule: BlockSpec,
         pf_fl, tu_fl, tu_by = step_costs(dmf, n, st.k, st.bk, dtype)
         pf_t = pf_fl / (peak * PANEL_EFF)
         tu_t = max(tu_fl / (peak * gemm_eff), tu_by / HBM_BW)
-        if variant in ("la", "la_mb", "tuned"):
-            # look-ahead: the panel of k+1 hides under TU_right(k)
-            step_t = max(pf_t, tu_t)
-            if variant == "la_mb":
-                step_t = max(0.8 * pf_t, tu_t)       # fused PU, VMEM-resident
+        if base in ("la", "la_mb", "tuned"):
+            # look-ahead: the panel of k+1 hides under TU_right(k); a
+            # depth-d window hides up to d panels under one bulk update, so
+            # the panel term amortizes with depth (diminishing: the narrow
+            # per-panel updates it buys are not free)
+            step_t = max(pf_t / (0.5 * (1 + depth)), tu_t)
+            if base == "la_mb":
+                step_t = max(0.8 * pf_t / (0.5 * (1 + depth)), tu_t)
+                #                                    ^ fused PU, VMEM-resident
         elif variant == "rtm":
             r = n - st.k_next
             ntasks = max(1, -(-r // st.bk)) ** 2
@@ -148,7 +155,7 @@ def rank(dmf: str, n: int, dtype,
     """Candidates sorted by modeled time (ascending).
 
     Each candidate needs ``.variant``, ``.schedule``, ``.backend``
-    attributes (see :class:`repro.tune.search.Candidate`); candidates whose
+    attributes (see :class:`repro.tune.sweep.Candidate`); candidates whose
     schedule :func:`predict` rejects as invalid for the DMF (band
     reduction's uniform-bandwidth rule) sort last rather than raising.
     """

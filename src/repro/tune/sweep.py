@@ -1,0 +1,225 @@
+"""Model-seeded empirical search over (variant, depth, schedule, backend).
+
+(This module was ``repro.tune.search`` before ISSUE 3; it is named
+``sweep`` so the :func:`search` *function* re-exported on the package no
+longer shadows the module — internals are monkeypatchable as plain
+``repro.tune.sweep`` attributes.  ``repro.tune.search`` remains importable
+as a deprecation shim.)
+
+The sweep for one ``(dmf, n, dtype)`` case:
+
+1. enumerate candidates: every requested scheduling variant × block size ×
+   backend, each block size contributing both its uniform schedule and the
+   decreasing-``b`` tail schedule (:func:`repro.tune.schedule.tail_schedule`
+   — the paper's §5 early-termination analogue).  Since the variant space
+   includes the depth-suffixed look-ahead names (``"la2"`` from
+   ``list_variants``, or any ``"la<d>"`` passed explicitly), look-ahead
+   depth is swept like any other knob and recorded in the cache entry;
+2. rank them with the analytical model (:mod:`repro.tune.model`, seeded
+   from the roofline constants) and keep the top-``k`` — only those are
+   measured, per the co-design methodology in PAPERS.md;
+3. measure the survivors **plus the fixed-``b=128`` ``la`` baseline** with
+   the shared benchmark timer (``benchmarks/common.py``), so the returned
+   winner is never slower than the untuned default on this machine;
+4. persist the winner in the :class:`~repro.tune.cache.TuneCache` — the
+   next call with the same key returns it without re-measuring
+   (``from_cache=True``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.backend import get_backend
+from repro.core.blocking import expand_schedule
+from repro.core.lookahead import list_variants, parse_variant
+from repro.tune import model
+from repro.tune.cache import TuneCache, TuneConfig, cache_key, default_cache
+from repro.tune.schedule import is_uniform, tail_schedule
+
+__all__ = ["Candidate", "search", "DEFAULT_BLOCKS", "BASELINE_BLOCK",
+           "BASELINE_VARIANT"]
+
+DEFAULT_BLOCKS: Tuple[int, ...] = (32, 48, 64, 96, 128, 192, 256)
+BASELINE_BLOCK = 128          # the repo's hardcoded default at every call site
+BASELINE_VARIANT = "la"
+
+#: DMFs whose unpivoted algorithms need an SPD / diagonally dominant input.
+_SPD_DMFS = ("cholesky", "ldlt", "gauss_jordan")
+
+
+@dataclasses.dataclass(frozen=True)
+class Candidate:
+    variant: str
+    schedule: Tuple[int, ...]
+    backend: str
+
+    def label(self) -> str:
+        b0 = self.schedule[0]
+        tail = "uniform" if is_uniform(self.schedule) else "tail"
+        return f"{self.variant}/b{b0}/{tail}/{self.backend}"
+
+
+def _test_matrix(dmf: str, n: int, dtype, seed: int) -> jnp.ndarray:
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((n, n)).astype(jnp.dtype(dtype).name)
+    if dmf in _SPD_DMFS:
+        a = a @ a.T + n * np.eye(n, dtype=a.dtype)
+    return jnp.asarray(a)
+
+
+def _time_fn(fn, *args, warmup: int = 1, repeats: int = 3) -> float:
+    """The shared benchmark timer; local fallback mirrors it exactly when the
+    ``benchmarks`` package isn't importable (installed-package use)."""
+    try:
+        from benchmarks.common import time_fn
+        return time_fn(fn, *args, warmup=warmup, repeats=repeats)
+    except ImportError:
+        import time
+        for _ in range(warmup):
+            jax.block_until_ready(fn(*args))
+        times = []
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(*args))
+            times.append(time.perf_counter() - t0)
+        return float(np.median(times))
+
+
+def _measure(dmf: str, cand: Candidate, a: jnp.ndarray, *,
+             warmup: int, repeats: int) -> float:
+    """Median seconds for one candidate (jit-compiled, block_until_ready)."""
+    from repro.core.lookahead import get_variant
+
+    fn = get_variant(dmf, cand.variant)
+    be = get_backend(cand.backend)
+    timed = jax.jit(lambda x: fn(x, cand.schedule, backend=be))
+    return _time_fn(timed, a, warmup=warmup, repeats=repeats)
+
+
+def _candidates(dmf: str, n: int, dtype, blocks: Sequence[int],
+                variants: Optional[Sequence[str]],
+                backends: Sequence[str]) -> list:
+    from repro.core.lookahead import get_variant
+
+    variants = list(variants) if variants is not None \
+        else [v for v in list_variants(dmf) if v != "tuned"]
+    # the guards apply to explicit variant lists too (list_variants is the
+    # natural way to build one, and it includes "tuned"):
+    if "tuned" in variants:               # not a measurable variant
+        warnings.warn("tune: dropping 'tuned' from the candidate variants")
+        variants.remove("tuned")
+    for v in [v for v in variants if parse_variant(v)[0] == "la_mb"]:
+        # for DMFs without a fused kernel la_mb *is* la — don't measure twice
+        if get_variant(dmf, "la_mb") is get_variant(dmf, "la"):
+            variants.remove(v)
+        # the fused la_mb kernels accumulate in f32: a win on timing noise
+        # would silently degrade f64 drivers to f32 accuracy once cached
+        elif jnp.dtype(dtype).itemsize > 4:
+            warnings.warn(f"tune: dropping {v!r} (f32 accumulation) from a "
+                          "float64 sweep")
+            variants.remove(v)
+    out = []
+    for be in backends:
+        for v in variants:
+            depth = parse_variant(v)[1]
+            for b in blocks:
+                if b > n:
+                    continue
+                scheds = {expand_schedule(n, b), tail_schedule(n, b)}
+                for s in scheds:
+                    # a depth-d window needs > d panels to differ from the
+                    # shallower schedule — don't measure duplicates
+                    if depth > 1 and len(s) <= depth:
+                        continue
+                    out.append(Candidate(variant=v, schedule=s, backend=be))
+    return out
+
+
+def search(
+    dmf: str,
+    n: int,
+    dtype=jnp.float32,
+    *,
+    blocks: Sequence[int] = DEFAULT_BLOCKS,
+    variants: Optional[Sequence[str]] = None,
+    backends: Sequence[str] = ("jnp",),
+    top_k: int = 3,
+    warmup: int = 1,
+    repeats: int = 3,
+    cache: Optional[TuneCache] = None,
+    force: bool = False,
+    seed: int = 0,
+    verbose: bool = False,
+) -> TuneConfig:
+    """Tune ``dmf`` at size ``n`` and persist the winner (module doc).
+
+    Returns the cached entry immediately (``from_cache=True``) unless the
+    key is cold or ``force=True``.  The measured set always contains the
+    fixed ``b=128`` ``la`` baseline, so ``result.seconds <=
+    result.baseline_seconds`` on the machine that ran the search.
+    """
+    from repro.core.lookahead import TUNABLE
+
+    if dmf not in TUNABLE:
+        raise ValueError(
+            f"{dmf!r} is not tunable: its block size defines the output "
+            f"(band reduction's w is the bandwidth), so candidates with "
+            f"different blocks compute different results")
+    # NB: `cache or default_cache()` would be wrong — an empty TuneCache has
+    # len() == 0 and is falsy.
+    cache = cache if cache is not None else default_cache()
+    hits = {be: (None if force else cache.get(cache_key(dmf, n, dtype, be)))
+            for be in backends}
+    cold = [be for be in backends if hits[be] is None]
+    if not cold:
+        return hits[backends[0]]
+
+    a = _test_matrix(dmf, n, dtype, seed)
+    # rank and slice per backend — a pooled top-k would be monopolized by the
+    # fastest-modeled backend, leaving the others with only their baseline
+    chosen, baselines = [], {}
+    for be in cold:
+        mine = _candidates(dmf, n, dtype, blocks, variants, (be,))
+        chosen += model.rank(dmf, n, dtype, mine)[: max(top_k, 1)]
+        baselines[be] = Candidate(
+            variant=BASELINE_VARIANT,
+            schedule=expand_schedule(n, min(BASELINE_BLOCK, n)), backend=be)
+    chosen += [b for b in baselines.values() if b not in chosen]
+
+    timings = {}
+    for cand in chosen:
+        try:
+            timings[cand] = _measure(dmf, cand, a, warmup=warmup,
+                                     repeats=repeats)
+        except ValueError as e:
+            # a schedule this DMF rejects (band reduction's uniformity rule);
+            # anything else — a genuinely broken variant — must propagate
+            warnings.warn(f"tune: skipped {cand.label()}: {e}")
+            continue
+        if verbose:
+            print(f"tune: {cand.label()}: {timings[cand] * 1e3:.2f} ms")
+    if not timings:
+        raise RuntimeError(f"no tuning candidate succeeded for {dmf} n={n}")
+
+    # one entry per cold backend: tuned() dispatches on the *caller's*
+    # backend, so each key must record the best candidate measured there
+    for be in cold:
+        mine = {c: t for c, t in timings.items() if c.backend == be}
+        if not mine:
+            continue
+        best = min(mine, key=mine.get)
+        hits[be] = TuneConfig(
+            dmf=dmf, shape=(n, n), dtype=jnp.dtype(dtype).name,
+            backend=be, variant=best.variant, schedule=best.schedule,
+            depth=parse_variant(best.variant)[1],
+            seconds=mine[best],
+            baseline_seconds=mine.get(baselines[be], mine[best]))
+        cache.put(cache_key(dmf, n, dtype, be), hits[be])
+    result = next(h for h in (hits[be] for be in backends) if h is not None)
+    return result

@@ -1,8 +1,24 @@
 import os
 import sys
 
+import pytest
+
 # Make `import repro` work regardless of how pytest is invoked.
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 # NOTE: no XLA_FLAGS here on purpose — smoke tests and benches must see the
 # real single CPU device; only launch/dryrun.py forces 512 host devices.
+
+#: Size cap for tests that execute Pallas kernels in ``interpret=True`` mode
+#: (the kernel body runs eagerly in Python on CPU — correct but orders of
+#: magnitude slower than compiled XLA, so full factorizations through the
+#: Pallas backend must stay tiny).  Shared so every test module sizes its
+#: pallas-path cases the same way; direct single-kernel validation tests may
+#: exceed it per-shape, full DMF sweeps must not.
+PALLAS_MAX_N = 32
+
+
+@pytest.fixture
+def pallas_n() -> int:
+    """Matrix size for pallas-interpret factorization tests (n ≤ 32)."""
+    return PALLAS_MAX_N

@@ -4,7 +4,6 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import band_reduction as B
 from repro.core import cholesky as C
 from repro.core import gauss_jordan as G
 from repro.core import ldlt as D

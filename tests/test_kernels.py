@@ -1,5 +1,4 @@
 """Pallas kernel sweeps vs the pure-jnp oracles (interpret=True on CPU)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -1,7 +1,6 @@
 """Roofline instrumentation tests: trip-count correction + collective parse."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.launch.hlo_accounting import analyze_hlo
 

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from conftest import PALLAS_MAX_N
 from repro.core import expand_schedule, get_variant, list_variants
 from repro.core import lu as L
 from repro.core.blocking import max_width, num_panels, panel_steps
@@ -27,6 +28,10 @@ jax.config.update("jax_enable_x64", True)
 N, B = 100, 32                      # ragged: 100 % 32 != 0
 SCHEDULE = (48, 32, 16, 4)          # non-uniform, sums to 100
 BAND_N = 96                         # band: bandwidth is uniform by contract
+# la_mb on lu/cholesky runs the fused Pallas kernels in interpret mode —
+# the shared size cap keeps those cases tractable (conftest.PALLAS_MAX_N)
+PALLAS_SCHEDULE = (16, 8, 4, 4)     # non-uniform, sums to PALLAS_MAX_N
+PALLAS_DMFS = ("lu", "cholesky")    # DMFs whose la_mb has a fused kernel
 
 TOL = 1e-10
 TOL_F32 = 1e-4                      # la_mb fused kernels accumulate in f32
@@ -91,10 +96,12 @@ PAIRS = [(dmf, v) for dmf in DMFS
          for v in list_variants(dmf) if v != "tuned"]
 
 
-def _case(dmf):
+def _case(dmf, variant="mtb"):
     """(n, scalar b, non-uniform schedule)."""
     if dmf == "band_reduction":
         return BAND_N, 32, SCHEDULE
+    if variant == "la_mb" and dmf in PALLAS_DMFS:
+        return PALLAS_MAX_N, 12, PALLAS_SCHEDULE  # ragged: 32 % 12 != 0
     return N, B, SCHEDULE
 
 
@@ -104,7 +111,7 @@ def _tol(variant):
 
 @pytest.mark.parametrize("dmf,variant", PAIRS)
 def test_expanded_schedule_matches_scalar_bitwise(dmf, variant):
-    n, b, _ = _case(dmf)
+    n, b, _ = _case(dmf, variant)
     gen, _ = DMFS[dmf]
     a = gen(n, seed=7 + n)
     fn = get_variant(dmf, variant)
@@ -117,7 +124,7 @@ def test_expanded_schedule_matches_scalar_bitwise(dmf, variant):
 
 @pytest.mark.parametrize("dmf,variant", PAIRS)
 def test_nonuniform_schedule_residual(dmf, variant):
-    n, _, sched = _case(dmf)
+    n, _, sched = _case(dmf, variant)
     gen, check = DMFS[dmf]
     a = gen(n, seed=11 + n)
     if dmf == "band_reduction":
@@ -132,7 +139,7 @@ def test_nonuniform_schedule_residual(dmf, variant):
 @pytest.mark.parametrize("dmf,variant", PAIRS)
 def test_ragged_scalar_b(dmf, variant):
     """n not divisible by b — the clipped-last-panel path, every variant."""
-    n, b, _ = _case(dmf)
+    n, b, _ = _case(dmf, variant)
     if dmf == "band_reduction":
         pytest.skip("band reduction requires exact tiling by construction")
     gen, check = DMFS[dmf]

@@ -5,7 +5,6 @@ import tempfile
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_config, reduced_config
 from repro.data.pipeline import SyntheticTask

@@ -13,8 +13,6 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-import importlib
-
 from repro import tune
 from repro.core import expand_schedule, get_variant, list_variants
 from repro.core import lu as L
@@ -24,7 +22,7 @@ jax.config.update("jax_enable_x64", True)
 
 # the search() function shadows the submodule on the package — resolve the
 # module itself for monkeypatching
-search_mod = importlib.import_module("repro.tune.search")
+from repro.tune import sweep as search_mod  # plain import since the rename
 
 N = 64
 KW = dict(blocks=(16, 32), top_k=2, repeats=1)   # small, fast sweep
@@ -270,7 +268,9 @@ def test_gesv_tuned_end_to_end(as_default):
 # lookahead registry satellites
 # ---------------------------------------------------------------------------
 def test_list_variants_reports_only_available():
-    assert list_variants("lu") == ("mtb", "rtm", "la", "la_mb", "tuned")
+    assert list_variants("lu") == ("mtb", "rtm", "la", "la2", "la_mb",
+                                   "tuned")
+    # band reduction keeps the bespoke driver: no depth-d representative
     assert list_variants("band_reduction") == ("mtb", "la", "la_mb")
     for dmf in ("ldlt", "gauss_jordan", "band_reduction"):
         assert "rtm" not in list_variants(dmf)
@@ -355,3 +355,68 @@ def test_la_mb_forwards_keyword_b():
     # schedules flow through the la_mb wrapper too
     sched_fac, _ = fn(a, b=expand_schedule(N, 16))
     np.testing.assert_array_equal(np.asarray(sched_fac), np.asarray(kw_fac))
+
+
+# ---------------------------------------------------------------------------
+# ISSUE 3: look-ahead depth in the sweep space + cache schema migration,
+# and the search-module rename (repro.tune.sweep, shim for .search).
+# ---------------------------------------------------------------------------
+def test_candidates_include_depth_variants():
+    cands = search_mod._candidates("lu", N, np.float32, (16,), None, ("jnp",))
+    assert any(c.variant == "la2" for c in cands)
+    # explicit deeper request flows through too
+    deep = search_mod._candidates("lu", N, np.float32, (16,), ("la3",),
+                                  ("jnp",))
+    assert deep and all(c.variant == "la3" for c in deep)
+    # a depth-d window needs > d panels: no la2 candidate for a one-panel
+    # schedule (b == n)
+    one = search_mod._candidates("lu", 16, np.float32, (16,), ("la2",),
+                                 ("jnp",))
+    assert one == []
+
+
+def test_search_records_depth_and_dispatches_it(cache, monkeypatch):
+    # force a depth-2 winner, then check the cached entry round-trips and
+    # "tuned" dispatch runs it
+    monkeypatch.setattr(
+        search_mod, "_measure",
+        lambda dmf, c, a, **k: 1e-4 if c.variant == "la2" else 1e-2)
+    cfg = tune.search("lu", N, variants=("la", "la2"), cache=cache, **KW)
+    assert cfg.variant == "la2" and cfg.depth == 2
+    hit = tune.TuneCache(cache.path).get(
+        tune.cache_key("lu", N, "float32", "jnp"))
+    assert hit.depth == 2 and hit.variant == "la2"
+    a = _rand(N, seed=3)
+    old = tune.set_default_cache(cache)
+    try:
+        fac, piv = get_variant("lu", "tuned")(a, 32)
+    finally:
+        tune.set_default_cache(old)
+    ref, _ = get_variant("lu", "la2")(a, hit.schedule)
+    np.testing.assert_array_equal(np.asarray(fac), np.asarray(ref))
+
+
+def test_config_json_migrates_pre_depth_entries():
+    entry = _cfg().to_json()
+    assert entry["depth"] == 1
+    del entry["depth"]                      # a pre-ISSUE-3 cache file
+    assert tune.TuneConfig.from_json(entry).depth == 1
+    entry["variant"] = "la2"                # name carries the depth
+    assert tune.TuneConfig.from_json(entry).depth == 2
+
+
+def test_search_module_rename_and_shim():
+    import importlib
+    import sys
+
+    assert search_mod.__name__ == "repro.tune.sweep"
+    assert callable(tune.search) and tune.search is search_mod.search
+    sys.modules.pop("repro.tune.search", None)
+    with pytest.warns(DeprecationWarning):
+        shim = importlib.import_module("repro.tune.search")
+    # the shim forwards attributes and is itself callable (so code that
+    # imported the module keeps working, and so does `tune.search(...)`
+    # even though the import rebinds the package attribute)
+    assert shim.search is search_mod.search
+    assert shim._measure is search_mod._measure
+    assert callable(shim)
