@@ -5,10 +5,14 @@ micro-kernel on Haswell.  The same trade-off exists here: small b → more
 panel (latency-bound) iterations; large b → panel cost grows quadratically
 and the trailing update shrinks.  Swept on LU-LA wall-clock.
 
-Two extra row groups (ISSUE 3):
+Extra row groups:
 
-* the **depth sweep** — LU-LA at fixed b with ``depth`` ∈ {1, 2, 3} panels
-  in flight (the generic engine's ``la<d>`` variants, DESIGN.md §10);
+* the **depth sweep** (ISSUE 3) — LU-LA at fixed b with ``depth`` ∈
+  {1, 2, 3} panels in flight (the generic engine's ``la<d>`` variants,
+  DESIGN.md §10);
+* the **new-DMF rows** (ISSUE 4) — QRCP (GEQP3) and Hessenberg (GEHRD)
+  under their mtb schedule at a reduced size (their panels are GEMV-heavy,
+  and the unrolled trace grows with every panel column — DESIGN.md §11);
 * the ``repro.tune`` comparison — the autotuned (variant, depth, schedule)
   for this (dmf, n) — searched on first run, served from the persistent
   cache afterwards — against the fixed-``b`` sweep above.
@@ -20,9 +24,16 @@ import jax
 from benchmarks.common import emit, gflops, random_matrix, time_fn
 from repro.core.lookahead import get_variant
 
+#: flops(n) for the new-DMF rows (GEQP3 ≈ GEQRF; GEHRD per LAPACK).
+_NEW_DMF_FLOPS = {
+    "qrcp": lambda n: 4.0 * n ** 3 / 3.0,
+    "hessenberg": lambda n: 10.0 * n ** 3 / 3.0,
+}
+
 
 def run(n: int = 1024, blocks=(64, 128, 192, 256, 384), tuned: bool = True,
-        depths=(1, 2, 3), depth_block: int = 128):
+        depths=(1, 2, 3), depth_block: int = 128, new_dmf_n: int = 192,
+        new_dmf_block: int = 64):
     rows = []
     a = random_matrix(n, 6)
     flops = 2.0 * n ** 3 / 3.0
@@ -37,6 +48,13 @@ def run(n: int = 1024, blocks=(64, 128, 192, 256, 384), tuned: bool = True,
         t = time_fn(fn, a)
         rows.append(emit(f"lu_la_depthsweep_n{n}_b{depth_block}_d{d}", t,
                          f"{gflops(flops, t):.2f}GFLOPS"))
+    nn = min(n, new_dmf_n)
+    an = random_matrix(nn, 7)
+    for dmf, fl in _NEW_DMF_FLOPS.items():
+        fn = jax.jit(lambda x, d=dmf: get_variant(d, "mtb")(x, new_dmf_block)[0])
+        t = time_fn(fn, an)
+        rows.append(emit(f"{dmf}_mtb_n{nn}_b{new_dmf_block}", t,
+                         f"{gflops(fl(nn), t):.2f}GFLOPS"))
     if tuned:
         from repro import tune
 

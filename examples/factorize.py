@@ -7,8 +7,10 @@ LU / QR / Cholesky on this machine's CPU backend and validates that all
 variants produce identical results (the paper's key numerics claim).
 
 Then drives the solve layer (DESIGN.md §8): gesv/posv round trips, QR least
-squares, and the factor-once/solve-many amortization that motivates the
-``repro.solve`` factor objects.
+squares, the factor-once/solve-many amortization that motivates the
+``repro.solve`` factor objects, a rank-revealing QRCP (geqp3) demo, and a
+Hessenberg→eigenvalue pipeline (gehrd) — the two StepOps DMFs added in
+ISSUE 4 (DESIGN.md §11).
 """
 import argparse
 import time
@@ -18,7 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.lookahead import get_variant
-from repro.solve import gels, gesv, lu_factor, posv
+from repro.solve import gehrd, gels, geqp3, gesv, lu_factor, posv
 
 FLOPS = {"lu": lambda n: 2 * n**3 / 3, "qr": lambda n: 4 * n**3 / 3,
          "cholesky": lambda n: n**3 / 3}
@@ -81,6 +83,47 @@ def main():
     per_solve = (time.perf_counter() - t0) / 5
     print(f"  factor-once/solve-many: {per_solve*1e3:8.1f} ms per re-solve "
           f"(factorization amortized away)")
+
+    # ---- rank-revealing QRCP: geqp3 + pivoted gels ------------------------
+    # geqp3's panel is GEMV-heavy and runs one eager pivot step per column
+    # (ROADMAP: fori_loop panel) — keep the demo size modest
+    nq = min(args.n, 128)
+    true_rank = max(4, nq // 8)
+    g1 = rng.standard_normal((nq, true_rank)).astype(np.float32)
+    g2 = rng.standard_normal((true_rank, nq)).astype(np.float32)
+    lowrank = jnp.asarray(g1 @ g2)
+    print(f"--- geqp3 rank-revealing (n={nq}, true rank {true_rank}) ---")
+    facs = geqp3(lowrank, min(args.b, 64))
+    d = np.abs(np.asarray(jnp.diagonal(facs.packed)))
+    print(f"  |diag R|: r_00 {d[0]:.2e}   r at rank {d[true_rank - 1]:.2e}   "
+          f"past rank {d[true_rank]:.2e}")
+    print(f"  estimated rank (rcond=1e-5): {int(facs.rank(rcond=1e-5))}")
+    rhs_q = rhs[:nq]
+    xq = gels(lowrank, rhs_q, min(args.b, 64), pivot=True, rcond=1e-5)
+    res = float(jnp.linalg.norm(lowrank @ xq - rhs_q)
+                / jnp.linalg.norm(rhs_q))
+    print(f"  pivoted gels on the rank-deficient system: rel-residual "
+          f"{res:.3f} with ‖x‖ = {float(jnp.linalg.norm(xq)):.2e} "
+          f"(unpivoted QR would blow the solution up)")
+
+    # ---- Hessenberg → eigenvalue pipeline: gehrd --------------------------
+    nh = min(args.n, 128)                  # same eager-panel caveat as geqp3
+    ah = jnp.asarray(rng.standard_normal((nh, nh)).astype(np.float32))
+    print(f"--- gehrd → eigenvalues (n={nh}) ---")
+    t0 = time.perf_counter()
+    hf = gehrd(ah, min(args.b, 64))
+    jax.block_until_ready(hf.packed)
+    t_red = time.perf_counter() - t0
+    h = hf.h
+    sub = float(jnp.abs(jnp.tril(h, -2)).max())
+    ev_h = np.sort_complex(np.linalg.eigvals(np.asarray(h)))
+    ev_a = np.sort_complex(np.linalg.eigvals(np.asarray(ah)))
+    print(f"  reduction: {t_red*1e3:8.1f} ms   below-subdiagonal max {sub:.1e}")
+    print(f"  spectrum drift |eig(H) − eig(A)|_max = "
+          f"{float(np.abs(ev_h - ev_a).max()):.2e} (similarity preserved)")
+    q = hf.q()
+    rec = float(jnp.linalg.norm(ah - q @ h @ q.T) / jnp.linalg.norm(ah))
+    print(f"  ‖A − Q·H·Qᵀ‖/‖A‖ = {rec:.2e}")
 
 
 if __name__ == "__main__":

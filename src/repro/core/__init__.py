@@ -4,11 +4,13 @@ See DESIGN.md §1–4.  Public surface:
 
 * factorizations: :mod:`repro.core.lu`, :mod:`repro.core.cholesky`,
   :mod:`repro.core.qr`, :mod:`repro.core.ldlt`,
-  :mod:`repro.core.gauss_jordan`, :mod:`repro.core.band_reduction` —
+  :mod:`repro.core.gauss_jordan`, :mod:`repro.core.band_reduction`,
+  :mod:`repro.core.qrcp`, :mod:`repro.core.hessenberg` —
   each a :class:`~repro.core.pipeline.StepOps` declaration (band reduction
   excepted) scheduled by the generic engine in :mod:`repro.core.pipeline`
 * scheduling variants: :func:`repro.core.lookahead.get_variant`
-  (``mtb``/``rtm``/``la``/``la_mb``, depth-suffixed ``la2``/``la3`` …)
+  (``mtb``/``rtm``/``la``/``la_mb``, depth-suffixed ``la2``/``la3`` …;
+  qrcp/hessenberg are look-ahead-excluded by policy, DESIGN.md §11)
 * distributed (pod-scale) versions: :mod:`repro.core.distributed`
 """
 from repro.core.backend import Backend, JNP_BACKEND, get_backend

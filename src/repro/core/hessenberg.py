@@ -1,0 +1,183 @@
+"""Blocked Hessenberg reduction (GEHRD semantics) — a two-sided StepOps DMF.
+
+Computes ``H = Qᵀ·A·Q`` with H upper Hessenberg (zero below the first
+subdiagonal) and ``Q = H_0·H_1·…`` a product of Householder reflectors —
+the finite first stage of the nonsymmetric eigenvalue pipeline, and the
+first *two-sided* consumer of the generic StepOps engine.  Unlike band
+reduction (two coupled panels per iteration, bespoke driver — DESIGN.md
+§10) the Hessenberg iteration factors a **single** panel, so it fits the
+one-panel StepOps contract as declared: the two-sidedness shows up in the
+*rows* the trailing update touches (all of them — the right transform
+``A·Q`` reaches above the panel), not in extra hooks.  Columns left of the
+panel are invariant (they are already reduced: zero below the subdiagonal,
+and ``Qᵀ`` annihilates nothing there), which is why GJE's ``update_left``
+hook is not needed — see DESIGN.md §11.
+
+Panel factorization follows xLAHR2: for panel column ``kj`` the fully
+updated column is
+
+    c = (I − V·Tᵀ·Vᵀ)·(a₀[:, kj] − W·T·V[kj, :]ᵀ),      W = A₀·V
+
+(right update via the running ``W = A₀·V``, then the left compact-WY
+apply), after which the reflector zeroing ``c[kj+2:]`` is generated.  The
+per-column GEMV ``A₀·v_j`` reads the *whole* trailing block — which is why
+this DMF, like QRCP, refuses look-ahead: ``PF(k+1)`` is data-dependent on
+``TU_k^R`` and pre-factoring would read stale bulk columns
+(:data:`StepOps.la_unsafe`, DESIGN.md §11).  Available schedules: ``mtb``
+and ``rtm``.
+
+Packed format mirrors GEHRD: H on/above the first subdiagonal, reflector
+``v_j`` below it in column ``j`` (implicit ``v[j+1] = 1``);
+:func:`form_q_hess` rebuilds Q, :func:`unpack_hessenberg` extracts H.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.core import pipeline
+from repro.core.backend import Backend, JNP_BACKEND
+from repro.core.blocking import BlockSpec, panel_steps
+from repro.core.pipeline import StepOps
+from repro.core.qr import build_t_matrix, householder_vector
+
+__all__ = ["hessenberg_blocked", "hessenberg_tiled", "unpack_hessenberg",
+           "form_q_hess", "HESSENBERG_OPS"]
+
+
+class _HessCtx(NamedTuple):
+    v: jnp.ndarray            # n × bk reflectors (rows ≤ k+j+1 zero in col j)
+    t: jnp.ndarray            # bk × bk upper-triangular LARFT factor
+    y: jnp.ndarray            # n × bk   Y = A₀·V·T (the right-update GEMM arg)
+
+
+def _init(a):
+    if a.ndim != 2 or a.shape[0] != a.shape[1]:
+        raise ValueError(
+            f"Hessenberg reduction is a similarity transform and needs a "
+            f"square matrix, got shape {a.shape}")
+    return a, jnp.zeros((a.shape[0],), a.dtype)
+
+
+def _factor(state, st, backend, panel_fn):
+    # PF(k), xLAHR2 style.  ``panel_fn`` optionally replaces the reflector
+    # generator (``householder_vector(x, j) -> (v, tau, beta)``).
+    a, taus = state
+    n = a.shape[0]
+    k, bk = st.k, st.bk
+    hh = panel_fn or householder_vector
+    rows = jnp.arange(n)
+
+    v = jnp.zeros((n, bk), a.dtype)
+    t = jnp.zeros((bk, bk), a.dtype)
+    w = jnp.zeros((n, bk), a.dtype)       # W = A₀·V, built one GEMV per col
+    tau_p = jnp.zeros((bk,), a.dtype)
+
+    for j in range(bk):
+        kj = k + j
+        col = a[:, kj]
+        # right update: col −= W·(T·V[kj, :j]ᵀ)  (= (A₀·V·T·Vᵀ)[:, kj])
+        col = col - w[:, :j] @ (t[:j, :j] @ v[kj, :j])
+        # left update: col −= V·Tᵀ·(Vᵀ·col)
+        col = col - v[:, :j] @ (t[:j, :j].T @ (v[:, :j].T @ col))
+        col = col.astype(a.dtype)
+        if kj < n - 2:                    # rows kj+2: exist — reduce them
+            vj, tau_j, beta = hh(col, kj + 1)
+            a = a.at[:, kj].set(
+                jnp.where(rows > kj + 1, vj, col).at[kj + 1].set(beta)
+                .astype(a.dtype))
+            v = v.at[:, j].set(vj)
+            tau_p = tau_p.at[j].set(tau_j)
+            # T column j (LARFT forward columnwise)
+            tcol = -tau_j * (t[:j, :j] @ (v[:, :j].T @ vj))
+            t = t.at[:j, j].set(tcol.astype(a.dtype)).at[j, j].set(tau_j)
+            # W column j = A₀·v_j — reads only columns ≥ kj+1, which are
+            # still untouched at this point of the panel sweep
+            w = w.at[:, j].set((a @ vj).astype(a.dtype))
+        else:                             # trailing 2×2 block: H already
+            a = a.at[:, kj].set(col)
+
+    taus = taus.at[k : k + bk].set(tau_p)
+    y = (w @ t).astype(a.dtype)           # Y = A₀·V·T, one GEMM per panel
+    return (a, taus), _HessCtx(v, t, y)
+
+
+def _update(state, ctx, st, c0, c1, backend):
+    # TU_k on columns [c0, c1): right then left transform.  The right
+    # update touches *all* rows (A·Q reaches above the panel) — the
+    # two-sided part; the left compact-WY apply touches rows k+1:.
+    a, taus = state
+    k = st.k
+    cols = backend.update(a[:, c0:c1], ctx.y, ctx.v[c0:c1, :].T)
+    low = cols[k + 1 :, :]
+    z = backend.gemm(ctx.t.T, backend.gemm(ctx.v[k + 1 :, :].T, low))
+    cols = cols.at[k + 1 :, :].set(
+        (low - backend.gemm(ctx.v[k + 1 :, :], z)).astype(a.dtype))
+    return a.at[:, c0:c1].set(cols), taus
+
+
+def _tiles(state, ctx, st, backend):
+    # RTM: one two-sided update task per trailing column panel.
+    n = state[0].shape[0]
+    for j in range(st.k_next, n, st.bk):
+        state = _update(state, ctx, st, j, min(j + st.bk, n), backend)
+    return state
+
+
+HESSENBERG_OPS = StepOps(
+    name="hessenberg",
+    init=_init,
+    factor=_factor,
+    update=_update,
+    finalize=lambda state: state,
+    tiles=_tiles,
+    la_unsafe="GEHRD's panel builds W = A₀·v with GEMVs over the whole "
+              "trailing block, so PF(k+1) is data-dependent on TU_k^R — "
+              "pre-factoring would read stale bulk columns (DESIGN.md §11)",
+)
+
+
+# ---------------------------------------------------------------------------
+# Packed-format helpers (ORGHR analogues).
+# ---------------------------------------------------------------------------
+def unpack_hessenberg(packed: jnp.ndarray) -> jnp.ndarray:
+    """Extract H (exactly zero below the first subdiagonal)."""
+    return jnp.triu(packed, -1)
+
+
+def form_q_hess(packed: jnp.ndarray, taus: jnp.ndarray, b: BlockSpec = 128,
+                *, backend: Backend = JNP_BACKEND) -> jnp.ndarray:
+    """Form Q explicitly from GEHRD output (``A = Q·H·Qᵀ``)."""
+    n = packed.shape[0]
+    q = jnp.eye(n, dtype=packed.dtype)
+    rows = jnp.arange(n)
+    for st in reversed(list(panel_steps(n, b))):
+        k, bk = st.k, st.bk
+        v = jnp.zeros((n, bk), packed.dtype)
+        for j in range(bk):
+            kj = k + j
+            if kj < n - 2:
+                vj = jnp.where(rows > kj + 1, packed[:, kj], 0.0)
+                v = v.at[:, j].set(vj.at[kj + 1].set(1.0)
+                                   .astype(packed.dtype))
+        t = build_t_matrix(v, taus[k : k + bk])
+        wq = backend.gemm(t, backend.gemm(v.T, q))
+        q = q - backend.gemm(v, wq)
+    return q
+
+
+# ---------------------------------------------------------------------------
+# Public drivers (the make_variant registration path, DESIGN.md §10).
+# ---------------------------------------------------------------------------
+hessenberg_blocked = pipeline.make_variant(HESSENBERG_OPS, "mtb")
+hessenberg_blocked.__doc__ = """Blocked GEHRD (MTB).  Returns (packed, taus).
+
+``packed`` holds H on/above the first subdiagonal and the reflectors below;
+``unpack_hessenberg``/``form_q_hess`` recover ``(H, Q)``.
+"""
+
+hessenberg_tiled = pipeline.make_variant(HESSENBERG_OPS, "rtm")
+hessenberg_tiled.__doc__ = """GEHRD with the two-sided trailing update
+fragmented into per-column-panel tasks (RTM).  Same output as
+:func:`hessenberg_blocked`."""

@@ -15,7 +15,10 @@ scheduled by the generic engine (DESIGN.md §10), look-ahead **depth** is a
 variant parameter: ``"la<d>"`` / ``"la_mb<d>"`` resolve to the same driver
 with ``depth=d`` (d panels in flight, the paper's §5 generalization).
 ``"la"`` ≡ ``"la1"``.  Band reduction keeps its bespoke two-panel driver
-and stays depth-1 — deeper names raise ``KeyError`` for it.
+and stays depth-1 — deeper names raise ``KeyError`` for it.  QRCP and
+Hessenberg expose **no** look-ahead variant at all (their panels read
+trailing data beyond the panel columns — :data:`LOOKAHEAD_EXCLUDED`,
+DESIGN.md §11): ``"la"``/``"la_mb"`` raise ``KeyError`` with the policy.
 
 On TPU the variants differ in *dataflow structure* rather than thread
 mapping (DESIGN.md §2): MTB = one barrier-separated panel/update pair per
@@ -29,7 +32,8 @@ from __future__ import annotations
 import re
 from typing import Callable, Dict, Tuple
 
-from repro.core import band_reduction, cholesky, gauss_jordan, ldlt, lu, qr
+from repro.core import (band_reduction, cholesky, gauss_jordan, hessenberg,
+                        ldlt, lu, qr, qrcp)
 from repro.core.pipeline import supports_depth
 
 # variant base name -> per-DMF callable
@@ -61,6 +65,25 @@ _REGISTRY: Dict[str, Dict[str, Callable]] = {
         "mtb": band_reduction.band_reduction_blocked,
         "la": band_reduction.band_reduction_lookahead,
     },
+    # Look-ahead-excluded DMFs (no "la" row by policy, not by omission):
+    # their StepOps declarations carry `la_unsafe` and the reasons live in
+    # LOOKAHEAD_EXCLUDED below (DESIGN.md §11).
+    "qrcp": {
+        "mtb": qrcp.qrcp_blocked,
+        "rtm": qrcp.qrcp_tiled,
+    },
+    "hessenberg": {
+        "mtb": hessenberg.hessenberg_blocked,
+        "rtm": hessenberg.hessenberg_tiled,
+    },
+}
+
+#: Why a DMF has no look-ahead variant — the paper's caveat cases, enforced
+#: at the engine level via :attr:`StepOps.la_unsafe` and surfaced here so
+#: ``get_variant(dmf, "la")`` fails with the policy, not a bare KeyError.
+LOOKAHEAD_EXCLUDED: Dict[str, str] = {
+    "qrcp": qrcp.QRCP_OPS.la_unsafe,
+    "hessenberg": hessenberg.HESSENBERG_OPS.la_unsafe,
 }
 
 VARIANTS = ("mtb", "rtm", "la", "la_mb")
@@ -222,6 +245,11 @@ def get_variant(dmf: str, variant: str) -> Callable:
         raise KeyError(f"unknown DMF {dmf!r}; expected one of {FACTORIZATIONS}")
     table = _REGISTRY[dmf]
     base, depth = parse_variant(variant)
+    if base in ("la", "la_mb") and dmf in LOOKAHEAD_EXCLUDED:
+        raise KeyError(
+            f"variant {variant!r} not available for {dmf!r}: look-ahead is "
+            f"excluded by policy — {LOOKAHEAD_EXCLUDED[dmf]}; "
+            f"have {list_variants(dmf)}")
     if base == "la_mb":
         return _make_la_mb(dmf, table["la"], depth)
     if base == "tuned":

@@ -1,4 +1,4 @@
-"""The generic static look-ahead engine — one loop, six DMFs, depth-d.
+"""The generic static look-ahead engine — one loop, eight DMFs, depth-d.
 
 The paper's central claim (§4–§5) is that static look-ahead is *algorithm
 independent*: the MTB / RTM / LA schedules are properties of the panel
@@ -107,6 +107,12 @@ class StepOps:
       factorable (same QR row-exhaustion rule, consulted by look-ahead
       before pre-factoring the next panel).
     * ``width(a) -> int`` — traversal width (``a.shape[1]`` for QR).
+    * ``la_unsafe`` — a *reason string* declaring that this DMF's ``factor``
+      reads trailing data beyond the panel columns (QRCP's global pivot
+      norms, Hessenberg's ``A₀·v`` GEMVs), so pre-factoring ``PF(k+1)``
+      ahead of ``TU_k^R`` would compute a **different factorization**, not
+      a different schedule.  The engine refuses ``variant="la"`` for such a
+      declaration and surfaces the reason (DESIGN.md §11).
     """
 
     name: str
@@ -123,6 +129,7 @@ class StepOps:
     stop: Optional[Callable[[State, PanelStep], bool]] = None
     can_factor: Optional[Callable[[State, PanelStep], bool]] = None
     width: Callable[[jnp.ndarray], int] = lambda a: a.shape[0]
+    la_unsafe: Optional[str] = None
 
     def _stop(self, state: State, st: PanelStep) -> bool:
         return self.stop is not None and self.stop(state, st)
@@ -163,6 +170,10 @@ def factorize(
             raise ValueError(f"{ops.name!r} has no RTM (tiled) fragmentation")
         return _run_rtm(ops, a, b, backend, panel_fn)
     if variant == "la":
+        if ops.la_unsafe is not None:
+            raise ValueError(
+                f"{ops.name!r} cannot be scheduled with look-ahead: "
+                f"{ops.la_unsafe}")
         if depth < 1:
             raise ValueError(f"look-ahead depth must be >= 1, got {depth}")
         return _run_la(ops, a, b, depth, backend, panel_fn, fused_pu)
@@ -291,9 +302,15 @@ def supports_depth(fn: Callable) -> bool:
 def make_variant(ops: StepOps, variant: str, **fixed) -> Callable:
     """A standalone ``(a, b=128, **kw)`` driver for one scheduling variant.
 
-    Convenience for registering *new* StepOps-based DMFs (ROADMAP: QR with
-    column pivoting, blocked Hessenberg) without writing wrapper boilerplate.
+    Convenience for registering *new* StepOps-based DMFs (QR with column
+    pivoting, blocked Hessenberg) without writing wrapper boilerplate.
+    Refuses to build an ``"la"`` driver for a declaration that marked
+    itself ``la_unsafe`` — the call would only ever raise.
     """
+    if variant == "la" and ops.la_unsafe is not None:
+        raise ValueError(
+            f"cannot build an 'la' driver for {ops.name!r}: {ops.la_unsafe}")
+
     def driver(a, b: BlockSpec = 128, **kw):
         return factorize(ops, a, b, variant=variant, **{**fixed, **kw})
 

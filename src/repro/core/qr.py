@@ -28,6 +28,7 @@ from repro.core.pipeline import StepOps
 
 __all__ = [
     "qr_unblocked",
+    "householder_vector",
     "build_t_matrix",
     "qr_blocked",
     "qr_tiled",
@@ -37,6 +38,31 @@ __all__ = [
     "form_q",
     "QR_OPS",
 ]
+
+
+def householder_vector(x: jnp.ndarray, j: int
+                       ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Reflector ``H = I − tau·v·vᵀ`` zeroing ``x[j+1:]``, with ``v[j] = 1``.
+
+    The standalone spelling of the step inside :func:`qr_unblocked` (same
+    sign convention, same degenerate-column guard), shared by the DMFs whose
+    panels interleave reflector generation with other work — QRCP's pivot
+    tracking (:mod:`repro.core.qrcp`) and Hessenberg's two-sided column
+    updates (:mod:`repro.core.hessenberg`).  Returns ``(v, tau, beta)``:
+    ``v`` masked to rows ``>= j``, ``beta`` the new ``x[j]`` value.
+    """
+    rows = jnp.arange(x.shape[0])
+    xm = jnp.where(rows >= j, x, 0.0).astype(x.dtype)
+    alpha = x[j]
+    xnorm = jnp.sqrt(jnp.sum(xm * xm))
+    sign = jnp.where(alpha >= 0, 1.0, -1.0).astype(x.dtype)
+    beta = -sign * xnorm
+    safe = xnorm > 0                     # degenerate column: H = I, tau = 0
+    tau = jnp.where(safe, (beta - alpha) / beta, 0.0).astype(x.dtype)
+    denom = jnp.where(safe, alpha - beta, 1.0)
+    v = jnp.where(rows > j, xm / denom, 0.0).astype(x.dtype)
+    v = v.at[j].set(1.0)
+    return v, tau, jnp.where(safe, beta, alpha).astype(x.dtype)
 
 
 def qr_unblocked(panel: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
@@ -264,7 +290,14 @@ def form_q(a_packed: jnp.ndarray, taus: jnp.ndarray, b: BlockSpec = 128, *,
     for st in reversed(steps):
         k, bk = st.k, st.bk
         v = unpack_v(a_packed[k:, k : k + bk], bk)
-        t = build_t_matrix(v, taus[k : k + bk])
+        tau = taus[k : k + bk]
+        if tau.shape[0] < bk:
+            # wide m < n: the panel straddles row m — only m−k reflectors
+            # exist; pad with tau = 0 (identity) for the phantom columns,
+            # whose unpacked v columns are zero anyway
+            tau = jnp.concatenate(
+                [tau, jnp.zeros((bk - tau.shape[0],), tau.dtype)])
+        t = build_t_matrix(v, tau)
         # Q <- (I − V·T·Vᵀ) · Q  restricted to rows k:
         w = backend.gemm(t, backend.gemm(v.T, q[k:, :]))
         q = q.at[k:, :].set(q[k:, :] - backend.gemm(v, w))

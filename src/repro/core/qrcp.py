@@ -1,0 +1,188 @@
+"""QR with column pivoting (GEQP3 semantics) — the paper's caveat DMF.
+
+The factorization computes ``A·P = Q·R`` where ``P`` greedily moves the
+trailing column of largest partial norm into pivot position at every step —
+the rank-revealing property LAPACK's GEQP3 provides and plain GEQRF does
+not.  The panel follows xLAQPS: within a panel only the *pivot rows* of the
+trailing matrix are updated eagerly (one row per reflector, enough to
+downdate the column norms exactly), while the block update of the rows
+below the panel is deferred to the engine's trailing-update hook as the
+single GEMM ``A₂ ← A₂ − V₂·Fᵀ`` — the same BLAS-3 split every other
+StepOps DMF feeds the scheduler.
+
+Declared as :data:`QRCP_OPS` and scheduled by :mod:`repro.core.pipeline` —
+but **mtb/rtm only**.  This is the paper's look-ahead caveat made explicit
+(DESIGN.md §11): the pivot choice for panel k+1 reads the downdated norms
+of *every* trailing column after update k, so pre-factoring panel k+1 ahead
+of the bulk ``TU_k^R`` (what ``la`` does) would commit pivots computed from
+stale norms — a different (wrong) factorization, not a different schedule.
+:data:`StepOps.la_unsafe` carries that reason to the engine, which refuses
+``variant="la"`` outright, and ``repro.core.lookahead`` never advertises a
+look-ahead variant for this DMF.
+
+Column interchanges swap *full* columns, but the rows **above** the panel
+(the already-computed R rows of trailing columns) are swapped lazily by the
+``swap`` hook — the column analogue of LU's deferred ``laswp``.
+
+``jpvt`` output follows the permutation-vector convention:
+``a[:, jpvt] == Q·R`` (``jpvt[j]`` is the original index of the column the
+factorization placed at position ``j``).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import pipeline
+from repro.core.pipeline import StepOps
+from repro.core.qr import householder_vector
+
+__all__ = ["qrcp_blocked", "qrcp_tiled", "QRCP_OPS"]
+
+
+class _QRCPCtx(NamedTuple):
+    v: jnp.ndarray            # (m−k) × steps reflectors, unit diagonal
+    f: jnp.ndarray            # (n−k) × steps   F = B₀ᵀ·V·T  (xLAQPS)
+    piv: jnp.ndarray          # panel-relative column interchanges
+
+
+def _init(a):
+    taus = jnp.zeros((min(a.shape),), a.dtype)
+    jpvt = jnp.arange(a.shape[1], dtype=jnp.int32)
+    return a, (taus, jpvt)
+
+
+def _swap_perm(cols: jnp.ndarray, j, p) -> jnp.ndarray:
+    """Index vector interchanging ``j`` and ``p`` (``j == p`` and traced
+    indices safe) — gathered through ``jnp.take`` at both swap sites."""
+    return cols.at[j].set(p).at[p].set(j)
+
+
+def _factor(state, st, backend, panel_fn):
+    # PF(k), xLAQPS style.  ``panel_fn`` optionally replaces the reflector
+    # generator (the ``householder_vector(x, j) -> (v, tau, beta)``
+    # contract); pivot selection and norm tracking stay in the driver —
+    # they are what make GEQP3 GEQP3.
+    a, (taus, jpvt) = state
+    m, n = a.shape
+    k, bk = st.k, st.bk
+    r, c = m - k, n - k
+    steps = min(bk, r)
+    hh = panel_fn or householder_vector
+
+    b = a[k:, k:]                         # trailing block, fully updated
+    v = jnp.zeros((r, steps), a.dtype)
+    f = jnp.zeros((c, steps), a.dtype)
+    tau_p = jnp.zeros((steps,), a.dtype)
+    piv = jnp.zeros((steps,), jnp.int32)
+    # squared partial norms, recomputed per panel from the updated trailing
+    # block (sidesteps LAPACK's cross-panel downdate-drift machinery)
+    vn = jnp.sum(b * b, axis=0)
+    rows = jnp.arange(r)
+    cols = jnp.arange(c)
+
+    for j in range(steps):
+        # --- greedy pivot: largest remaining partial norm ----------------
+        p = jnp.argmax(jnp.where(cols >= j, vn, -jnp.inf)).astype(jnp.int32)
+        piv = piv.at[j].set(p)
+        permv = _swap_perm(cols, j, p)
+        b = jnp.take(b, permv, axis=1)
+        f = jnp.take(f, permv, axis=0)
+        vn = jnp.take(vn, permv)
+        jpvt = jpvt.at[k:].set(jnp.take(jpvt[k:], permv))
+        # --- bring column j current: rows j: get reflectors 0..j−1 -------
+        # (rows < j were completed by the pivot-row updates below)
+        upd = v[:, :j] @ f[j, :j]
+        colj = (b[:, j] - jnp.where(rows >= j, upd, 0.0)).astype(a.dtype)
+        # --- reflector j --------------------------------------------------
+        vj, tau_j, beta = hh(colj, j)
+        v = v.at[:, j].set(vj)
+        tau_p = tau_p.at[j].set(tau_j)
+        newcol = jnp.where(rows > j, vj, colj).at[j].set(beta)
+        b = b.at[:, j].set(newcol.astype(a.dtype))
+        # --- F(:, j) = tau·(B₀ᵀ·v − F·(Vᵀ·v))  (xLAQPS incremental F) ----
+        w = b.T @ vj - f[:, :j] @ (v[:, :j].T @ vj)
+        f = f.at[:, j].set((tau_j * w).astype(a.dtype))
+        # --- pivot row j of every trailing column (completes row j) ------
+        rowj = b[j, :] - v[j, : j + 1] @ f[:, : j + 1].T
+        b = b.at[j, :].set(jnp.where(cols > j, rowj, b[j, :]).astype(a.dtype))
+        # --- exact norm downdate: ‖B[j+1:, i]‖² = ‖B[j:, i]‖² − B[j,i]² --
+        vn = jnp.where(cols > j, jnp.maximum(vn - b[j, :] ** 2, 0.0), 0.0)
+
+    a = a.at[k:, k:].set(b)
+    taus = taus.at[k : k + steps].set(tau_p)
+    return (a, (taus, jpvt)), _QRCPCtx(v, f, piv)
+
+
+def _swap(state, ctx, st, backend):
+    # Panel-k column interchanges replayed on the R rows *above* the panel —
+    # the column analogue of LU's laswp hook (rows k: were swapped in-panel).
+    a, aux = state
+    k = st.k
+    if k == 0:
+        return state
+    cols = jnp.arange(a.shape[1] - k)
+
+    def body(j, top):
+        return jnp.take(top, _swap_perm(cols, j, ctx.piv[j]), axis=1)
+
+    top = lax.fori_loop(0, ctx.piv.shape[0], body, a[:k, k:])
+    return a.at[:k, k:].set(top), aux
+
+
+def _update(state, ctx, st, c0, c1, backend):
+    # TU_k on columns [c0, c1): the deferred A₂ ← A₂ − V₂·Fᵀ GEMM.  Rows
+    # k .. k+steps−1 were completed by the in-panel pivot-row updates.
+    a, aux = state
+    steps = ctx.v.shape[1]
+    r0 = st.k + steps
+    if r0 >= a.shape[0] or c1 <= c0:
+        return state
+    a = a.at[r0:, c0:c1].set(
+        backend.update(a[r0:, c0:c1], ctx.v[steps:, :],
+                       ctx.f[c0 - st.k : c1 - st.k, :].T))
+    return (a, aux)
+
+
+def _tiles(state, ctx, st, backend):
+    # RTM: one deferred-update task per trailing column panel.
+    n = state[0].shape[1]
+    for j in range(st.k_next, n, st.bk):
+        state = _update(state, ctx, st, j, min(j + st.bk, n), backend)
+    return state
+
+
+QRCP_OPS = StepOps(
+    name="qrcp",
+    init=_init,
+    factor=_factor,
+    update=_update,
+    finalize=lambda state: (state[0], state[1][0], state[1][1]),
+    swap=_swap,
+    tiles=_tiles,
+    # m < n inputs: factorable panels end once the rows are exhausted; the
+    # in-panel pivot-row updates complete R for the columns beyond them.
+    stop=lambda state, st: st.k >= state[0].shape[0],
+    can_factor=lambda state, st: st.k < state[0].shape[0],
+    width=lambda a: a.shape[1],
+    la_unsafe="GEQP3's greedy pivot reads the downdated norms of every "
+              "trailing column after TU_k, so PF(k+1) ahead of TU_k^R "
+              "would commit pivots from stale norms (DESIGN.md §11)",
+)
+
+
+# ---------------------------------------------------------------------------
+# Public drivers (the make_variant registration path, DESIGN.md §10).
+# ---------------------------------------------------------------------------
+qrcp_blocked = pipeline.make_variant(QRCP_OPS, "mtb")
+qrcp_blocked.__doc__ = """Blocked GEQP3 (MTB).  Returns (packed, taus, jpvt).
+
+``packed`` holds R on/above the diagonal and the Householder vectors below
+(QR packing — :func:`repro.core.qr.form_q` applies); ``a[:, jpvt] == Q·R``.
+"""
+
+qrcp_tiled = pipeline.make_variant(QRCP_OPS, "rtm")
+qrcp_tiled.__doc__ = """GEQP3 with the deferred trailing update fragmented
+into per-column-panel tasks (RTM).  Same output as :func:`qrcp_blocked`."""

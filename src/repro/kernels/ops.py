@@ -150,7 +150,11 @@ FUSED_PU = {
 #
 # DMFs without a VMEM-resident panel kernel (cholesky/ldlt factor their
 # panel through backend TRSM already; gauss_jordan's diagonal inverse is
-# latency-trivial) simply have no entry.
+# latency-trivial) simply have no entry.  qrcp/hessenberg also have none:
+# their ``panel_fn`` contract is the single-column reflector generator
+# (``repro.core.qr.householder_vector``) because pivot/norm tracking (QRCP)
+# and the per-column A₀·v GEMVs (GEHRD) interleave with reflector
+# generation and cannot live in one panel-resident kernel.
 PANEL_KERNELS = {
     "lu": lu_panel,
     "qr": qr_panel,

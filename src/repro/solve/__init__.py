@@ -9,22 +9,28 @@ package is that road (DESIGN.md §8).  Layers:
 * :mod:`repro.solve.triangular` — blocked multi-RHS substitution with the
   look-ahead split applied to the solve phase,
 * :mod:`repro.solve.drivers`    — ``gesv``/``posv``/``gels``/``getri``/
-  ``gecon`` with the variant/backend contract,
+  ``gecon`` plus the factor steps ``geqp3`` (rank-revealing pivoted QR)
+  and ``gehrd`` (Hessenberg similarity transform), all with the
+  variant/backend contract,
 * :mod:`repro.solve.batched`    — ``vmap``-batched execution for the
   many-small-systems serving scenario.
 """
 from repro.solve.batched import (cholesky_factor_batched, gesv_batched,
                                  lu_factor_batched, posv_batched,
                                  solve_batched)
-from repro.solve.drivers import (cholesky_factor, gecon, gels, gesv, getri,
-                                 ldlt_factor, lu_factor, posv, qr_factor)
-from repro.solve.factors import (CholeskyFactors, LDLTFactors, LUFactors,
+from repro.solve.drivers import (cholesky_factor, gecon, gehrd, gels, geqp3,
+                                 gesv, getri, ldlt_factor, lu_factor, posv,
+                                 qr_factor)
+from repro.solve.factors import (CholeskyFactors, HessenbergFactors,
+                                 LDLTFactors, LUFactors, QRCPFactors,
                                  QRFactors)
 from repro.solve.triangular import lu_solve_packed, trsm_blocked
 
 __all__ = [
     "LUFactors", "CholeskyFactors", "QRFactors", "LDLTFactors",
+    "QRCPFactors", "HessenbergFactors",
     "lu_factor", "cholesky_factor", "qr_factor", "ldlt_factor",
+    "geqp3", "gehrd",
     "gesv", "posv", "gels", "getri", "gecon",
     "gesv_batched", "posv_batched", "lu_factor_batched",
     "cholesky_factor_batched", "solve_batched",

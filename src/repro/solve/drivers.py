@@ -32,11 +32,13 @@ import jax.numpy as jnp
 from repro.core.backend import Backend, get_backend
 from repro.core.blocking import BlockSpec, normalize_block
 from repro.core.lookahead import deepen, get_variant
-from repro.solve.factors import (CholeskyFactors, LDLTFactors, LUFactors,
+from repro.solve.factors import (CholeskyFactors, HessenbergFactors,
+                                 LDLTFactors, LUFactors, QRCPFactors,
                                  QRFactors)
 
 __all__ = [
     "lu_factor", "cholesky_factor", "qr_factor", "ldlt_factor",
+    "geqp3", "gehrd",
     "gesv", "posv", "gels", "getri", "gecon",
 ]
 
@@ -97,6 +99,36 @@ def ldlt_factor(a: jnp.ndarray, block: BlockSpec = 128, *, variant: str = "la",
                        backend=be)
 
 
+def geqp3(a: jnp.ndarray, block: BlockSpec = 128, *, variant: str = "mtb",
+          backend: BackendLike = "jnp") -> QRCPFactors:
+    """Column-pivoted QR factor step (LAPACK GEQP3 → :class:`QRCPFactors`).
+
+    Note the default ``variant="mtb"`` and the *absence* of ``depth=``:
+    QRCP is look-ahead-excluded by policy (the pivot choice depends on the
+    fully updated trailing norms — DESIGN.md §11), so only ``mtb``/``rtm``/
+    ``tuned`` resolve.
+    """
+    be = _resolve(backend)
+    packed, taus, jpvt = get_variant("qrcp", variant)(a, block, backend=be)
+    return QRCPFactors(packed=packed, taus=taus, jpvt=jpvt,
+                       block=_static_block(block), backend=be)
+
+
+def gehrd(a: jnp.ndarray, block: BlockSpec = 128, *, variant: str = "mtb",
+          backend: BackendLike = "jnp") -> HessenbergFactors:
+    """Hessenberg reduction step (LAPACK GEHRD → :class:`HessenbergFactors`).
+
+    Returns the similarity-transform object carrying ``(H, Q)`` with
+    ``A = Q·H·Qᵀ``.  Like :func:`geqp3` this defaults to ``variant="mtb"``
+    — GEHRD's panel is data-dependent on the full trailing update, so no
+    look-ahead variant exists (DESIGN.md §11).
+    """
+    be = _resolve(backend)
+    packed, taus = get_variant("hessenberg", variant)(a, block, backend=be)
+    return HessenbergFactors(packed=packed, taus=taus,
+                             block=_static_block(block), backend=be)
+
+
 # ---------------------------------------------------------------------------
 # One-shot drivers.
 # ---------------------------------------------------------------------------
@@ -118,8 +150,27 @@ def posv(a: jnp.ndarray, b: jnp.ndarray, block: BlockSpec = 128, *,
 
 def gels(a: jnp.ndarray, b: jnp.ndarray, block: BlockSpec = 128, *,
          variant: str = "la", depth: int = 1,
-         backend: BackendLike = "jnp") -> jnp.ndarray:
-    """Least-squares ``argmin‖A·X − B‖₂`` for m ≥ n via Householder QR."""
+         backend: BackendLike = "jnp", pivot: bool = False,
+         rcond=None) -> jnp.ndarray:
+    """Least-squares ``argmin‖A·X − B‖₂`` for m ≥ n via Householder QR.
+
+    ``pivot=True`` routes through the column-pivoted factorization
+    (:func:`geqp3`) and returns the rank-truncated basic solution — the
+    GELSY path for rank-deficient systems, with ``rcond`` controlling the
+    rank cutoff.  Because QRCP has no look-ahead variant (DESIGN.md §11),
+    the default ``variant="la"`` is mapped to ``"mtb"`` on this path; an
+    explicitly requested variant is passed through unchanged.
+    """
+    if pivot:
+        qv = "mtb" if (variant, depth) == ("la", 1) else _deepen(variant,
+                                                                 depth)
+        return geqp3(a, block, variant=qv, backend=backend).solve(
+            b, rcond=rcond)
+    if rcond is not None:
+        # silently dropping the rank cutoff would hand back the exploded
+        # unpivoted solution rcond was meant to guard against
+        raise ValueError("rcond requires pivot=True (rank truncation needs "
+                         "the column-pivoted factorization)")
     return qr_factor(a, block, variant=variant, depth=depth,
                      backend=backend).solve(b)
 

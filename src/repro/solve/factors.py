@@ -20,6 +20,7 @@ import functools
 import jax.numpy as jnp
 
 from repro.core.backend import Backend, JNP_BACKEND
+from repro.core.hessenberg import form_q_hess, unpack_hessenberg
 from repro.core.ldlt import unpack_ldlt
 from repro.core.lu import permutation_from_pivots
 from repro.core.pytree import register_factors_pytree
@@ -27,7 +28,8 @@ from repro.core.qr import build_t_matrix, unpack_v
 from repro.core.blocking import panel_steps
 from repro.solve.triangular import lu_solve_packed, trsm_blocked
 
-__all__ = ["LUFactors", "CholeskyFactors", "QRFactors", "LDLTFactors"]
+__all__ = ["LUFactors", "CholeskyFactors", "QRFactors", "LDLTFactors",
+           "QRCPFactors", "HessenbergFactors"]
 
 
 def _as_matrix(b: jnp.ndarray) -> tuple[jnp.ndarray, bool]:
@@ -229,3 +231,120 @@ class LDLTFactors:
 
     def inverse(self) -> jnp.ndarray:
         return self.solve(jnp.eye(self.n, dtype=self.packed.dtype))
+
+
+@functools.partial(register_factors_pytree,
+                   data_fields=("packed", "taus", "jpvt"),
+                   meta_fields=("block", "backend"))
+@dataclasses.dataclass(frozen=True)
+class QRCPFactors:
+    """GEQP3 output: ``A[:, jpvt] = Q·R`` with greedy column pivoting.
+
+    The pivoting makes R rank-revealing — ``|r_jj|`` is non-increasing, so
+    :meth:`rank` reads the numerical rank off the diagonal and
+    :meth:`solve` returns the rank-truncated basic least-squares solution
+    (GELSY semantics) instead of amplifying noise through a singular
+    trailing block the way unpivoted :class:`QRFactors` would.
+    """
+
+    packed: jnp.ndarray
+    taus: jnp.ndarray
+    jpvt: jnp.ndarray
+    block: int = 128
+    backend: Backend = JNP_BACKEND
+
+    @property
+    def m(self) -> int:
+        return self.packed.shape[0]
+
+    @property
+    def n(self) -> int:
+        return self.packed.shape[1]
+
+    def _qr(self) -> QRFactors:
+        # the packed/taus layout is exactly GEQRF's — reuse its Qᵀ apply
+        return QRFactors(packed=self.packed, taus=self.taus,
+                         block=self.block, backend=self.backend)
+
+    def apply_qt(self, c: jnp.ndarray) -> jnp.ndarray:
+        return self._qr().apply_qt(c)
+
+    def rank(self, rcond=None) -> jnp.ndarray:
+        """Numerical rank: #{j : |r_jj| > rcond·|r_00|} (traced int)."""
+        d = jnp.abs(jnp.diagonal(self.packed))
+        if rcond is None:
+            rcond = max(self.m, self.n) * jnp.finfo(self.packed.dtype).eps
+        return jnp.sum(d > rcond * d[0]).astype(jnp.int32)
+
+    def solve(self, b: jnp.ndarray, *, rcond=None) -> jnp.ndarray:
+        """Rank-truncated basic solution of ``min‖A·X − B‖₂`` (m ≥ n).
+
+        Columns beyond :meth:`rank` are masked out of the triangular solve
+        (their diagonal is replaced by 1 and their coupling zeroed), so the
+        solution is well-defined on rank-deficient systems — jit-friendly:
+        the truncation is a mask, not a dynamic slice.
+        """
+        if self.m < self.n:
+            raise ValueError("QRCPFactors.solve requires m >= n "
+                             "(underdetermined systems need LQ)")
+        b, was_vec = _as_matrix(b)
+        n = self.n
+        r = self.rank(rcond)
+        keep = jnp.arange(n) < r
+        qtb = jnp.where(keep[:, None], self.apply_qt(b)[:n], 0.0)
+        rmat = jnp.triu(self.packed[:n])
+        mask2 = keep[:, None] & keep[None, :]
+        eye = jnp.eye(n, dtype=rmat.dtype)
+        rmod = jnp.where(mask2, rmat, eye)
+        y = trsm_blocked(rmod, qtb.astype(b.dtype), lower=False,
+                         block=self.block, backend=self.backend)
+        # undo the column pivoting: x[jpvt[j]] = y[j]
+        x = jnp.zeros_like(y).at[self.jpvt].set(y)
+        return x[:, 0] if was_vec else x
+
+
+@functools.partial(register_factors_pytree,
+                   data_fields=("packed", "taus"),
+                   meta_fields=("block", "backend"))
+@dataclasses.dataclass(frozen=True)
+class HessenbergFactors:
+    """GEHRD output: the similarity transform ``A = Q·H·Qᵀ``.
+
+    ``packed`` carries H on/above the first subdiagonal and the reflectors
+    below it; :attr:`h` and :meth:`q` recover the ``(H, Q)`` pair, and
+    :meth:`eigvals` runs the downstream eigenvalue stage on the reduced
+    form (same spectrum as A — the point of the reduction).
+    """
+
+    packed: jnp.ndarray
+    taus: jnp.ndarray
+    block: int = 128
+    backend: Backend = JNP_BACKEND
+
+    @property
+    def n(self) -> int:
+        return self.packed.shape[0]
+
+    @property
+    def h(self) -> jnp.ndarray:
+        """H — exactly zero below the first subdiagonal."""
+        return unpack_hessenberg(self.packed)
+
+    def q(self) -> jnp.ndarray:
+        """Form Q explicitly (ORGHR analogue)."""
+        return form_q_hess(self.packed, self.taus, self.block,
+                           backend=self.backend)
+
+    def reconstruct(self) -> jnp.ndarray:
+        """``Q·H·Qᵀ`` — should reproduce A to roundoff."""
+        q = self.q()
+        return self.backend.gemm(self.backend.gemm(q, self.h), q.T)
+
+    def similarity(self, b: jnp.ndarray) -> jnp.ndarray:
+        """``Qᵀ·B·Q`` — carry another matrix into the reduced basis."""
+        q = self.q()
+        return self.backend.gemm(self.backend.gemm(q.T, b), q)
+
+    def eigvals(self) -> jnp.ndarray:
+        """Eigenvalues of A, computed from the Hessenberg form."""
+        return jnp.linalg.eigvals(self.h)

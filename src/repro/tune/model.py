@@ -91,6 +91,28 @@ def _band_reduction(n: int, k: int, bk: int, itemsize: int):
     return pf, tu, byts
 
 
+def _qrcp(n: int, k: int, bk: int, itemsize: int):
+    # GEQP3: the panel is *expensive* — every reflector's F column is a
+    # GEMV over the whole trailing block (half the factorization's flops
+    # live in PF, which is why the paper flags QRCP for look-ahead)
+    r = n - k - bk
+    m = n - k
+    pf = 4.0 * bk * m * (n - k)                      # F GEMVs + pivot rows
+    tu = 2.0 * bk * m * r                            # deferred V·Fᵀ GEMM
+    byts = 3.0 * m * r * itemsize
+    return pf, tu, byts
+
+
+def _hessenberg(n: int, k: int, bk: int, itemsize: int):
+    # GEHRD: panel dominated by the per-column A₀·v GEMVs over the full
+    # matrix; the trailing update is two-sided (right over all n rows)
+    r = n - k - bk
+    pf = 2.0 * bk * n * (n - k)                      # W = A₀·V build
+    tu = 6.0 * bk * n * r                            # right + left WY GEMMs
+    byts = 4.0 * n * r * itemsize
+    return pf, tu, byts
+
+
 STEP_COSTS: Dict[str, Callable] = {
     "lu": _lu,
     "cholesky": _cholesky,
@@ -98,6 +120,8 @@ STEP_COSTS: Dict[str, Callable] = {
     "ldlt": _cholesky,                               # same BLAS-3 shape
     "gauss_jordan": _gauss_jordan,
     "band_reduction": _band_reduction,
+    "qrcp": _qrcp,
+    "hessenberg": _hessenberg,
 }
 
 

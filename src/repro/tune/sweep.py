@@ -184,11 +184,15 @@ def search(
     # rank and slice per backend — a pooled top-k would be monopolized by the
     # fastest-modeled backend, leaving the others with only their baseline
     chosen, baselines = [], {}
+    # DMFs excluded from look-ahead (qrcp/hessenberg, DESIGN.md §11) have
+    # no "la" to measure — their fixed-b baseline is mtb instead
+    base_variant = (BASELINE_VARIANT
+                    if BASELINE_VARIANT in list_variants(dmf) else "mtb")
     for be in cold:
         mine = _candidates(dmf, n, dtype, blocks, variants, (be,))
         chosen += model.rank(dmf, n, dtype, mine)[: max(top_k, 1)]
         baselines[be] = Candidate(
-            variant=BASELINE_VARIANT,
+            variant=base_variant,
             schedule=expand_schedule(n, min(BASELINE_BLOCK, n)), backend=be)
     chosen += [b for b in baselines.values() if b not in chosen]
 

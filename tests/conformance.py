@@ -1,0 +1,263 @@
+"""Cross-DMF conformance harness (machinery; the suite is test_conformance).
+
+One contract, every factorization: for each ``(dmf, variant, backend,
+dtype) × shape class`` combination the factorization must
+
+* run (no shape/schedule crashes on ragged, single-panel, or n=1 inputs),
+* reconstruct its input (residual check against the DMF's defining
+  identity, with dtype-aware tolerances),
+* satisfy its structural invariants (triangularity, band shape, packed
+  zero regions, permutation validity, orthogonality, pivot monotonicity).
+
+Cases are **auto-discovered** from ``repro.core.lookahead``: every DMF in
+``FACTORIZATIONS`` × every name ``list_variants`` advertises (minus
+``"tuned"``, which reads machine-local cache state).  A new StepOps DMF
+registered in ``core/lookahead.py`` therefore gets the full sweep with no
+test edits — this is how QRCP and Hessenberg (ISSUE 4) are covered, and it
+replaces the per-DMF assert blocks that used to be duplicated across
+``test_core_cholesky_qr.py`` / ``test_core_ldlt_gj_band.py`` /
+``test_core_lu.py``.
+
+Shape classes: ``square``, ``ragged`` (n % b ≠ 0), ``small`` (n < b, one
+clipped panel), ``one`` (n = 1), plus ``tall``/``wide`` (m ≠ n) for the
+rectangular-capable DMFs.  Fused ``la_mb`` (lu/cholesky) and the pallas
+backend run in Pallas interpret mode, so those cases are restricted to
+n ≤ conftest.PALLAS_MAX_N and picked up by the ``pallas`` CI lane via the
+nodeid-based auto-marker in conftest.py.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from conftest import PALLAS_MAX_N
+from repro.core import hessenberg as H
+from repro.core import ldlt as D
+from repro.core import lu as L
+from repro.core import qr as Q
+from repro.core.backend import get_backend
+from repro.core.lookahead import FACTORIZATIONS, get_variant, list_variants, \
+    parse_variant
+
+#: DMFs whose ``la_mb`` resolves to a *fused Pallas kernel* (interpret mode
+#: on CPU) rather than falling back to plain ``la``.
+FUSED_LA_MB = ("lu", "cholesky")
+#: DMFs accepting rectangular inputs.
+RECTANGULAR = ("qr", "qrcp")
+
+# class name -> (m, n, block).  Block 16 makes "ragged" clip the last panel
+# and "small" a single clipped panel; "one" is the degenerate 1×1 sweep.
+SHAPE_CLASSES = {
+    "square": (48, 48, 16),
+    "ragged": (50, 50, 16),
+    "small": (12, 12, 16),
+    "one": (1, 1, 16),
+    "tall": (72, 40, 16),
+    "wide": (24, 56, 16),      # m < n, panels straddle the last row
+    "fused": (32, 32, 16),     # uniform panels, n ≤ PALLAS_MAX_N (la_mb)
+    "psmall": (16, 16, 8),     # pallas-backend sweep size
+}
+assert SHAPE_CLASSES["fused"][0] <= PALLAS_MAX_N
+assert SHAPE_CLASSES["psmall"][0] <= PALLAS_MAX_N
+
+DTYPES = (np.float32, np.float64)
+
+
+@dataclasses.dataclass(frozen=True)
+class Case:
+    dmf: str
+    variant: str
+    backend: str
+    dtype: str
+    shape_class: str
+
+    @property
+    def id(self) -> str:
+        return (f"{self.dmf}-{self.variant}-{self.backend}-"
+                f"{self.dtype}-{self.shape_class}")
+
+
+def shape_classes_for(dmf: str, variant: str, backend: str):
+    base, _ = parse_variant(variant)
+    if backend == "pallas":
+        # interpret mode — one capped size is the whole point (conftest cap)
+        return ("psmall",)
+    if base == "la_mb" and dmf in FUSED_LA_MB:
+        # fused Pallas panel-update kernels: uniform panels, capped size
+        return ("fused",)
+    if dmf == "band_reduction":
+        # w is the *output bandwidth*: it must divide n exactly and the
+        # degenerate classes have no band to reduce to
+        return ("square",)
+    classes = ("square", "ragged", "small", "one")
+    if dmf in RECTANGULAR:
+        classes += ("tall", "wide")
+    return classes
+
+
+def build_cases():
+    cases = []
+    for dmf in FACTORIZATIONS:
+        # "tuned" reads machine-local cache state; la_mb for DMFs without a
+        # fused kernel is the *same callable* as la (lookahead._make_la_mb
+        # falls through) — re-running it would be byte-identical duplicates
+        variants = [v for v in list_variants(dmf)
+                    if v != "tuned"
+                    and not (parse_variant(v)[0] == "la_mb"
+                             and dmf not in FUSED_LA_MB)]
+        for variant in variants:
+            backends = ("jnp",) if parse_variant(variant)[0] == "la_mb" \
+                else ("jnp", "pallas")
+            for backend in backends:
+                dtypes = DTYPES if backend == "jnp" else (np.float32,)
+                for dtype in dtypes:
+                    for sc in shape_classes_for(dmf, variant, backend):
+                        cases.append(Case(dmf, variant, backend,
+                                          np.dtype(dtype).name, sc))
+    return cases
+
+
+# ---------------------------------------------------------------------------
+# Inputs.
+# ---------------------------------------------------------------------------
+def _rand(m, n, seed, dtype):
+    return jnp.asarray(np.random.default_rng(seed)
+                       .standard_normal((m, n)).astype(dtype))
+
+
+def _spd(n, seed, dtype):
+    g = np.random.default_rng(seed).standard_normal((n, n)).astype(dtype)
+    return jnp.asarray(g @ g.T + n * np.eye(n, dtype=dtype))
+
+
+def _quasi_definite(n, seed, dtype):
+    """Symmetric, diagonally dominant, indefinite — unpivoted LDLᵀ's domain."""
+    g = np.random.default_rng(seed).standard_normal((n, n)).astype(dtype)
+    s = (g + g.T) / 2
+    signs = np.where(np.arange(n) % 3 == 0, -1.0, 1.0)
+    return jnp.asarray(s + np.diag(signs * 2.0 * n).astype(dtype))
+
+
+def make_input(dmf, m, n, seed, dtype):
+    if dmf in ("cholesky", "gauss_jordan"):
+        return _spd(n, seed, dtype)
+    if dmf == "ldlt":
+        return _quasi_definite(n, seed, dtype)
+    return _rand(m, n, seed, dtype)
+
+
+def tolerance(case: Case) -> float:
+    """Residual tolerance scaled to the *effective compute* dtype.
+
+    The fused la_mb kernels and the whole Pallas backend accumulate in
+    float32, so those paths get eps(f32) regardless of the input dtype.
+    """
+    base, _ = parse_variant(case.variant)
+    f32_path = case.backend == "pallas" or (base == "la_mb"
+                                            and case.dmf in FUSED_LA_MB)
+    eff = np.float32 if f32_path else np.dtype(case.dtype)
+    m, n, _ = SHAPE_CLASSES[case.shape_class]
+    return 200.0 * max(m, n, 8) * float(jnp.finfo(eff).eps)
+
+
+# ---------------------------------------------------------------------------
+# Per-DMF contract checks: (a, out, tol, block, backend) -> None.
+# ---------------------------------------------------------------------------
+def _rel(x, y):
+    return float(jnp.linalg.norm(x) / max(float(jnp.linalg.norm(y)), 1e-30))
+
+
+def _check_lu(a, out, tol, b, backend):
+    fac, piv = out
+    n = a.shape[0]
+    l, u = L.unpack_lu(fac)
+    perm = L.permutation_from_pivots(piv, n)
+    assert sorted(np.asarray(perm).tolist()) == list(range(n))
+    assert _rel(a[perm] - l @ u, a) < tol
+
+
+def _check_cholesky(a, l, tol, b, backend):
+    assert float(jnp.abs(jnp.triu(l, 1)).max()) == 0.0     # packed lower
+    assert _rel(a - l @ l.T, a) < tol
+
+
+def _check_qr(a, out, tol, b, backend):
+    packed, taus = out
+    q = Q.form_q(packed, taus, b)
+    r = jnp.triu(packed)
+    assert _rel(a - q @ r, a) < tol
+    assert float(jnp.linalg.norm(
+        q.T @ q - jnp.eye(a.shape[0], dtype=a.dtype))) < tol
+
+
+def _check_qrcp(a, out, tol, b, backend):
+    packed, taus, jpvt = out
+    m, n = a.shape
+    assert sorted(np.asarray(jpvt).tolist()) == list(range(n))
+    q = Q.form_q(packed, taus, b)
+    r = jnp.triu(packed)
+    assert _rel(a[:, jpvt] - q @ r, a) < tol
+    assert float(jnp.linalg.norm(q.T @ q - jnp.eye(m, dtype=a.dtype))) < tol
+    # greedy pivoting ⇒ |r_jj| non-increasing (up to downdate roundoff)
+    d = np.abs(np.asarray(jnp.diagonal(packed)))
+    slack = 1.0 + 1e3 * float(jnp.finfo(a.dtype).eps)
+    assert np.all(d[1:] <= d[:-1] * slack + 1e-30), d
+
+
+def _check_ldlt(a, packed, tol, b, backend):
+    assert float(jnp.abs(jnp.triu(packed, 1)).max()) == 0.0
+    l, d = D.unpack_ldlt(packed)
+    assert _rel(a - (l * d[None, :]) @ l.T, a) < tol
+
+
+def _check_gauss_jordan(a, inv, tol, b, backend):
+    n = a.shape[0]
+    assert _rel(a @ inv - jnp.eye(n, dtype=a.dtype), a @ inv) < tol
+
+
+def _check_band_reduction(a, band, tol, b, backend):
+    n = a.shape[0]
+    i, j = np.indices((n, n))
+    outside = jnp.asarray((j < i) | (j > i + b))
+    scale = float(jnp.linalg.norm(a))
+    assert float(jnp.abs(band * outside).max()) < tol * scale
+    sv_a = jnp.linalg.svd(a.astype(jnp.float64), compute_uv=False)
+    sv_b = jnp.linalg.svd(band.astype(jnp.float64), compute_uv=False)
+    assert float(jnp.abs(sv_a - sv_b).max()) < tol * scale
+
+
+def _check_hessenberg(a, out, tol, b, backend):
+    packed, taus = out
+    h = H.unpack_hessenberg(packed)
+    assert float(jnp.abs(jnp.tril(h, -2)).max()) == 0.0    # exact structure
+    q = H.form_q_hess(packed, taus, b)
+    n = a.shape[0]
+    assert float(jnp.linalg.norm(q.T @ q - jnp.eye(n, dtype=a.dtype))) < tol
+    assert _rel(a - q @ h @ q.T, a) < tol
+
+
+CHECKS = {
+    "lu": _check_lu,
+    "cholesky": _check_cholesky,
+    "qr": _check_qr,
+    "qrcp": _check_qrcp,
+    "ldlt": _check_ldlt,
+    "gauss_jordan": _check_gauss_jordan,
+    "band_reduction": _check_band_reduction,
+    "hessenberg": _check_hessenberg,
+}
+
+# every registered DMF must declare its contract — a new StepOps DMF that
+# forgets to add a checker fails collection, not silently under-tests
+assert set(CHECKS) >= set(FACTORIZATIONS), \
+    set(FACTORIZATIONS) - set(CHECKS)
+
+
+def run_case(case: Case):
+    m, n, b = SHAPE_CLASSES[case.shape_class]
+    if case.dmf == "band_reduction":
+        assert n % b == 0                 # exact tiling by contract
+    a = make_input(case.dmf, m, n, seed=m * 131 + n, dtype=case.dtype)
+    fn = get_variant(case.dmf, case.variant)
+    out = fn(a, b, backend=get_backend(case.backend))
+    CHECKS[case.dmf](a, out, tolerance(case), b, case.backend)

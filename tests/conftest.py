@@ -17,6 +17,35 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 #: exceed it per-shape, full DMF sweeps must not.
 PALLAS_MAX_N = 32
 
+# CI runs the suite as two lanes — `-m "not pallas"` (fast) and `-m pallas`
+# (interpret-mode kernels).  The pallas lane is only tractable because of
+# the cap above; treat it as a contract, not a tunable.
+assert PALLAS_MAX_N <= 32, "pallas-interpret tests must stay at n <= 32"
+
+#: Modules that are Pallas-kernel validation end to end.
+_PALLAS_MODULES = frozenset({"test_kernels", "test_kernels_wkv"})
+#: Nodeid fragments that identify a Pallas-executing case anywhere else:
+#: the pallas backend, and the la_mb variant (whose lu/cholesky resolution
+#: is the fused Pallas kernel; for other DMFs la_mb aliases la, so a few
+#: cheap jnp cases ride along — conservative routing, never the reverse).
+_PALLAS_TOKENS = ("pallas", "la_mb")
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "pallas: exercises Pallas kernels in interpret mode — the slow CI "
+        "lane (`-m pallas`); everything else runs in the fast lane")
+
+
+def pytest_collection_modifyitems(config, items):
+    for item in items:
+        module = getattr(item, "module", None)
+        nodeid = item.nodeid.lower()
+        if (module is not None and module.__name__ in _PALLAS_MODULES) \
+                or any(tok in nodeid for tok in _PALLAS_TOKENS):
+            item.add_marker(pytest.mark.pallas)
+
 
 @pytest.fixture
 def pallas_n() -> int:

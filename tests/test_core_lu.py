@@ -1,8 +1,13 @@
-"""LU factorization: all scheduling variants, GETRF semantics, scipy parity."""
+"""LU semantics pinned against independent references (scipy, inversion).
+
+The per-variant residual sweep that used to live here moved into the
+cross-DMF conformance harness (``tests/conformance.py`` — every (variant,
+backend, dtype) × shape class, ISSUE 4); what remains is the LU-specific
+ground truth no generic harness can express.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 import scipy.linalg as sla
 
 from repro.core import lu as L
@@ -10,30 +15,10 @@ from repro.core.lookahead import get_variant
 
 jax.config.update("jax_enable_x64", True)
 
-VARIANTS = ["mtb", "rtm", "la", "la_mb"]
-
 
 def _rand(n, seed=0, dtype=np.float64):
     return jnp.asarray(np.random.default_rng(seed).standard_normal((n, n))
                        .astype(dtype))
-
-
-def _check(a, fac, piv, tol):
-    l, u = L.unpack_lu(fac)
-    perm = L.permutation_from_pivots(piv, a.shape[0])
-    err = jnp.linalg.norm(a[perm] - l @ u) / jnp.linalg.norm(a)
-    assert err < tol, float(err)
-
-
-@pytest.mark.parametrize("variant", VARIANTS)
-@pytest.mark.parametrize("n,b", [(64, 16), (96, 32), (100, 32), (32, 32)])
-def test_lu_variants_residual(variant, n, b):
-    if variant == "la_mb" and n % b:
-        pytest.skip("fused kernel path assumes uniform panels")
-    a = _rand(n, seed=n + b)
-    dtype_tol = 1e-10 if variant != "la_mb" else 1e-4  # kernel runs f32
-    fac, piv = get_variant("lu", variant)(a, b)
-    _check(a, fac, piv, dtype_tol)
 
 
 def test_lu_matches_scipy_exactly():

@@ -10,6 +10,8 @@ from hypothesis import given, settings, strategies as st
 from repro.core import lu as L
 from repro.core import qr as Q
 from repro.core.cholesky import cholesky_lookahead
+from repro.core.hessenberg import hessenberg_blocked, unpack_hessenberg
+from repro.core.qrcp import qrcp_blocked
 from repro.data.pipeline import SyntheticTask
 
 jax.config.update("jax_enable_x64", True)
@@ -52,6 +54,57 @@ def test_cholesky_spd_property(n, b, seed):
     l = cholesky_lookahead(s, b)
     assert float(jnp.linalg.norm(s - l @ l.T) / jnp.linalg.norm(s)) < 1e-9
     assert float(jnp.diagonal(l).min()) > 0  # positive diagonal
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=sizes, b=blocks, seed=seeds)
+def test_qrcp_pivot_ordering_property(n, b, seed):
+    """GEQP3 invariants: valid permutation, residual closes, and the greedy
+    pivot choice makes |diag(R)| non-increasing in magnitude."""
+    a = jnp.asarray(np.random.default_rng(seed).standard_normal((n, n)))
+    packed, taus, jpvt = qrcp_blocked(a, b)
+    assert sorted(np.asarray(jpvt).tolist()) == list(range(n))
+    q = Q.form_q(packed, taus, b)
+    assert float(jnp.linalg.norm(a[:, jpvt] - q @ jnp.triu(packed))
+                 / jnp.linalg.norm(a)) < 1e-9
+    d = np.abs(np.asarray(jnp.diagonal(packed)))
+    assert np.all(d[1:] <= d[:-1] * (1 + 1e-9) + 1e-12), d
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(min_value=10, max_value=48), seed=seeds)
+def test_qrcp_rank_revealing_property(n, seed):
+    """On an exactly rank-r input the pivoted R's trailing diagonal
+    collapses to roundoff — the rank-revealing property plain QR lacks."""
+    from repro.solve import geqp3
+
+    r = max(2, n // 3)
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.standard_normal((n, r)) @ rng.standard_normal((r, n)))
+    packed, taus, jpvt = qrcp_blocked(a, 16)
+    d = np.abs(np.asarray(jnp.diagonal(packed)))
+    assert np.all(d[r:] <= 1e-8 * d[0]), d
+    # the solve layer reads the same rank off the diagonal
+    assert int(geqp3(a, 16).rank(rcond=1e-8)) == r
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=sizes, b=blocks, seed=seeds)
+def test_hessenberg_similarity_property(n, b, seed):
+    """GEHRD invariants: exact zero below the first subdiagonal and a
+    preserved spectrum (symmetric input keeps the eigenproblem
+    well-conditioned, so the comparison is roundoff-robust)."""
+    g = np.random.default_rng(seed).standard_normal((n, n))
+    a = jnp.asarray((g + g.T) / 2)
+    packed, taus = hessenberg_blocked(a, b)
+    h = unpack_hessenberg(packed)
+    assert float(jnp.abs(jnp.tril(h, -2)).max()) == 0.0
+    ev = np.linalg.eigvals(np.asarray(h))
+    assert np.abs(ev.imag).max() < 1e-8 * n        # similar to symmetric A
+    ev_a = np.sort(np.linalg.eigvalsh(np.asarray(a)))
+    scale = max(float(np.abs(ev_a).max()), 1.0)
+    np.testing.assert_allclose(np.sort(ev.real), ev_a,
+                               atol=1e-8 * n * scale)
 
 
 @settings(max_examples=10, deadline=None)

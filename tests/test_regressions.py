@@ -1,0 +1,134 @@
+"""Dedicated regression tests for fixed defects and enforced policies.
+
+Previously these behaviours were only exercised incidentally inside the
+broad sweeps of ``test_pipeline.py`` (ISSUE 4 satellite):
+
+* the PR-3 wide-QR (m < n) stale-R defect — the legacy ``qr_lookahead``
+  never applied the trailing update to the first unfactorable panel's
+  columns, leaving stale A rows where R should be;
+* the depth=/variant-name conflict rejection — ``"la2"`` with an explicit
+  contradicting ``depth=`` must raise, not silently run a schedule other
+  than the label claims;
+* the look-ahead exclusion policy for the pivot/trailing-dependent DMFs
+  (QRCP, Hessenberg — DESIGN.md §11), at both the registry and the engine
+  level.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import hessenberg, pipeline, qrcp
+from repro.core import qr as Q
+from repro.core.lookahead import (LOOKAHEAD_EXCLUDED, deepen, get_variant,
+                                  list_variants)
+from repro.solve import gesv
+
+jax.config.update("jax_enable_x64", True)
+
+
+def _rand(m, n=None, seed=0):
+    return jnp.asarray(np.random.default_rng(seed)
+                       .standard_normal((m, n or m)))
+
+
+# ---------------------------------------------------------------------------
+# Wide-QR stale-R defect (fixed in PR 3's engine).
+# ---------------------------------------------------------------------------
+def test_wide_qr_r_rows_are_not_stale():
+    """m < n with several unfactorable panels: every variant must finish
+    applying the trailing update to the columns beyond row m.  The legacy
+    defect left those columns holding *input* rows instead of R."""
+    m, n, b = 24, 72, 16                  # panels at 48 and 64 unfactorable
+    a = _rand(m, n, seed=3)
+    packed_ref, taus_ref = Q.qr_blocked(a, b)
+    q = Q.form_q(packed_ref, taus_ref, b)
+    r_true = jnp.triu(q.T @ a)            # ground truth R from the formed Q
+    for variant in ("mtb", "rtm", "la", "la2", "la3", "la_mb"):
+        packed, taus = get_variant("qr", variant)(a, b)
+        np.testing.assert_allclose(np.asarray(jnp.triu(packed)),
+                                   np.asarray(r_true), atol=1e-10,
+                                   err_msg=variant)
+        # and the reconstruction closes — a stale column cannot satisfy it
+        qv = Q.form_q(packed, taus, b)
+        res = float(jnp.linalg.norm(a - qv @ jnp.triu(packed))
+                    / jnp.linalg.norm(a))
+        assert res < 1e-12, (variant, res)
+
+
+def test_wide_qr_depths_agree_bitwise():
+    a = _rand(32, 64, seed=5)
+    ref = Q.qr_lookahead(a, 16, depth=1)
+    for depth in (2, 3, 9):
+        out = Q.qr_lookahead(a, 16, depth=depth)
+        for x, y in zip(jax.tree_util.tree_leaves(ref),
+                        jax.tree_util.tree_leaves(out)):
+            np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                       rtol=1e-12, atol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# depth= / variant-name conflict rejection.
+# ---------------------------------------------------------------------------
+def test_depth_name_conflict_rejected_at_registry():
+    a = _rand(48, seed=7)
+    with pytest.raises(ValueError, match="pins depth"):
+        get_variant("lu", "la2")(a, 16, depth=3)
+    # an *agreeing* explicit depth is fine
+    fac, piv = get_variant("lu", "la2")(a, 16, depth=2)
+    ref, refp = get_variant("lu", "la")(a, 16, depth=2)
+    np.testing.assert_array_equal(np.asarray(fac), np.asarray(ref))
+    np.testing.assert_array_equal(np.asarray(piv), np.asarray(refp))
+
+
+def test_depth_name_conflict_rejected_by_deepen():
+    with pytest.raises(ValueError, match="already carries a depth"):
+        deepen("la2", 3)
+    with pytest.raises(ValueError, match="no look-ahead window"):
+        deepen("mtb", 2)
+    with pytest.raises(ValueError):
+        deepen("la", 0)
+
+
+def test_depth_on_windowless_variant_rejected_in_solve():
+    a = _rand(32, seed=9)
+    b = _rand(32, 2, seed=10)
+    with pytest.raises(ValueError, match="no look-ahead window"):
+        gesv(a, b, 16, variant="mtb", depth=2)
+    with pytest.raises(ValueError, match="no look-ahead window"):
+        gesv(a, b, 16, variant="tuned", depth=2)
+
+
+# ---------------------------------------------------------------------------
+# Look-ahead exclusion policy (QRCP / Hessenberg, DESIGN.md §11).
+# ---------------------------------------------------------------------------
+def test_lookahead_excluded_dmfs_advertise_no_la():
+    assert set(LOOKAHEAD_EXCLUDED) == {"qrcp", "hessenberg"}
+    for dmf, reason in LOOKAHEAD_EXCLUDED.items():
+        assert reason                     # the policy must say *why*
+        advertised = list_variants(dmf)
+        assert "mtb" in advertised and "rtm" in advertised
+        assert not any(v.startswith("la") for v in advertised)
+        for name in ("la", "la2", "la_mb", "la_mb3"):
+            with pytest.raises(KeyError, match="look-ahead is excluded"):
+                get_variant(dmf, name)
+
+
+def test_engine_refuses_la_for_unsafe_stepops():
+    a = _rand(32, seed=11)
+    for ops in (qrcp.QRCP_OPS, hessenberg.HESSENBERG_OPS):
+        assert ops.la_unsafe
+        # both refusals must carry the declaration's reason string
+        with pytest.raises(ValueError, match=r"PF\(k\+1\)"):
+            pipeline.factorize(ops, a, 16, variant="la")
+        with pytest.raises(ValueError, match=r"PF\(k\+1\)"):
+            pipeline.make_variant(ops, "la")
+    # mtb/rtm still build through the same registration path
+    drv = pipeline.make_variant(qrcp.QRCP_OPS, "mtb")
+    packed, taus, jpvt = drv(a, 16)
+    assert packed.shape == a.shape and jpvt.shape == (32,)
+
+
+def test_hessenberg_rejects_rectangular():
+    with pytest.raises(ValueError, match="square"):
+        get_variant("hessenberg", "mtb")(_rand(24, 32, seed=12), 8)

@@ -16,7 +16,8 @@ import numpy as np
 import pytest
 
 from repro.core.lookahead import VARIANTS, get_variant
-from repro.solve import (LUFactors, gecon, gels, gesv, gesv_batched, getri,
+from repro.solve import (HessenbergFactors, LUFactors, QRCPFactors, gecon,
+                         gehrd, gels, geqp3, gesv, gesv_batched, getri,
                          ldlt_factor, lu_factor, lu_factor_batched, posv,
                          posv_batched, qr_factor, solve_batched)
 
@@ -158,6 +159,68 @@ def test_gecon_estimates_condition():
     # Hager–Higham lower-bounds ‖A⁻¹‖₁, so rc upper-bounds the true rcond
     assert float(true_rc) <= float(rc) * (1 + 1e-10)
     assert float(rc) < 50 * float(true_rc)
+
+
+# ---------------------------------------------------------------------------
+# ISSUE 4: pivoted QR (geqp3) and Hessenberg (gehrd) drivers.
+# ---------------------------------------------------------------------------
+def test_geqp3_full_rank_matches_plain_gels():
+    a = _rand((48, 32), 60, np.float64)
+    b = _rand((48, 3), 61, np.float64)
+    x_plain = gels(a, b, 16)
+    x_piv = gels(a, b, 16, pivot=True)
+    np.testing.assert_allclose(np.asarray(x_piv), np.asarray(x_plain),
+                               atol=1e-10)
+    facs = geqp3(a, 16)
+    assert isinstance(facs, QRCPFactors)
+    assert int(facs.rank()) == 32
+
+
+def test_geqp3_rank_deficient_gels():
+    """gels(pivot=True) returns the bounded rank-truncated solution where
+    unpivoted QR would divide by a (near-)zero trailing diagonal."""
+    rng = np.random.default_rng(62)
+    r = 6
+    a = jnp.asarray(rng.standard_normal((40, r))
+                    @ rng.standard_normal((r, 24)))
+    b = jnp.asarray(rng.standard_normal((40, 2)))
+    facs = geqp3(a, 16)
+    assert int(facs.rank()) == r
+    x = gels(a, b, 16, pivot=True)
+    # least-squares optimality on the rank-deficient system
+    assert float(jnp.linalg.norm(a.T @ (a @ x - b))) < 1e-9
+    assert float(jnp.linalg.norm(x)) < 1e3  # bounded basic solution
+
+
+def test_geqp3_factors_cross_jit_boundary():
+    a = _rand((32, 24), 63, np.float64)
+    b = _rand((32, 2), 64, np.float64)
+    facs = jax.jit(lambda m: geqp3(m, 16))(a)
+    x = jax.jit(lambda f, rhs: f.solve(rhs))(facs, b)
+    x_ref = geqp3(a, 16).solve(b)
+    np.testing.assert_allclose(np.asarray(x), np.asarray(x_ref), atol=1e-12)
+
+
+def test_gehrd_similarity_object():
+    a = _rand((32, 32), 65, np.float64)
+    facs = gehrd(a, 8)
+    assert isinstance(facs, HessenbergFactors)
+    h, q = facs.h, facs.q()
+    assert float(jnp.abs(jnp.tril(h, -2)).max()) == 0.0
+    assert float(jnp.linalg.norm(q.T @ q - jnp.eye(32))) < 1e-12
+    rec = facs.reconstruct()
+    assert float(jnp.linalg.norm(rec - a) / jnp.linalg.norm(a)) < 1e-13
+    ev = np.sort_complex(np.asarray(facs.eigvals()))
+    ev_ref = np.sort_complex(np.linalg.eigvals(np.asarray(a)))
+    assert float(np.abs(ev - ev_ref).max()) < 1e-10
+
+
+def test_new_drivers_reject_lookahead_variant():
+    a = _rand((24, 24), 66, np.float64)
+    with pytest.raises(KeyError, match="look-ahead is excluded"):
+        geqp3(a, 8, variant="la")
+    with pytest.raises(KeyError, match="look-ahead is excluded"):
+        gehrd(a, 8, variant="la2")
 
 
 # ---------------------------------------------------------------------------

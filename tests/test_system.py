@@ -9,13 +9,19 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.lookahead import FACTORIZATIONS, get_variant
+from repro.core.lookahead import (FACTORIZATIONS, LOOKAHEAD_EXCLUDED,
+                                  get_variant, list_variants)
 
 jax.config.update("jax_enable_x64", True)
 
 
 def test_lookahead_never_changes_results():
-    """LA ≡ MTB output for every factorization in the framework."""
+    """LA ≡ MTB output for every factorization that *has* look-ahead.
+
+    QRCP and Hessenberg are excluded by policy (their panels read trailing
+    data beyond the panel columns, DESIGN.md §11) — for them the claim is
+    enforced the other way around: no ``la`` variant exists to drift.
+    """
     rng = np.random.default_rng(0)
     n, b = 96, 32
     a = jnp.asarray(rng.standard_normal((n, n)))
@@ -25,6 +31,9 @@ def test_lookahead_never_changes_results():
         "cholesky": spd, "ldlt": spd, "gauss_jordan": spd,
     }
     for dmf in FACTORIZATIONS:
+        if "la" not in list_variants(dmf):
+            assert dmf in LOOKAHEAD_EXCLUDED, dmf
+            continue
         ref = get_variant(dmf, "mtb")(inputs[dmf], b)
         la = get_variant(dmf, "la")(inputs[dmf], b)
         ref_l = jax.tree.leaves(ref)
