@@ -10,9 +10,16 @@ Extra row groups:
 * the **depth sweep** (ISSUE 3) — LU-LA at fixed b with ``depth`` ∈
   {1, 2, 3} panels in flight (the generic engine's ``la<d>`` variants,
   DESIGN.md §10);
-* the **new-DMF rows** (ISSUE 4) — QRCP (GEQP3) and Hessenberg (GEHRD)
-  under their mtb schedule at a reduced size (their panels are GEMV-heavy,
-  and the unrolled trace grows with every panel column — DESIGN.md §11);
+* the **pivoted/two-sided DMF rows** (ISSUE 4/5) — QRCP (GEQP3),
+  windowed-pivoting QRCP under its legalized look-ahead schedule, and
+  Hessenberg (GEHRD).  Since the traced panel microkernels landed
+  (``repro.kernels.panels``, DESIGN.md §12) the jit trace is O(1) in the
+  panel width, so these rows run at n ≥ 512 — the eager panels capped
+  them at n = 192;
+* the **panels-vs-eager comparison** (ISSUE 5 satellite) — the same QRCP
+  factorization with the traced vs the preserved eager panel, at a modest
+  size (the eager trace still unrolls one step per column), plus the
+  resulting speedup row;
 * the ``repro.tune`` comparison — the autotuned (variant, depth, schedule)
   for this (dmf, n) — searched on first run, served from the persistent
   cache afterwards — against the fixed-``b`` sweep above.
@@ -24,16 +31,19 @@ import jax
 from benchmarks.common import emit, gflops, random_matrix, time_fn
 from repro.core.lookahead import get_variant
 
-#: flops(n) for the new-DMF rows (GEQP3 ≈ GEQRF; GEHRD per LAPACK).
-_NEW_DMF_FLOPS = {
-    "qrcp": lambda n: 4.0 * n ** 3 / 3.0,
-    "hessenberg": lambda n: 10.0 * n ** 3 / 3.0,
-}
+#: flops(n) and scheduling variant for the pivoted/two-sided DMF rows
+#: (GEQP3 ≈ GEQRF; GEHRD per LAPACK).  qrcp_local runs its legalized
+#: look-ahead schedule — the whole point of windowed pivoting.
+_NEW_DMF_ROWS = (
+    ("qrcp", "mtb", lambda n: 4.0 * n ** 3 / 3.0),
+    ("qrcp_local", "la", lambda n: 4.0 * n ** 3 / 3.0),
+    ("hessenberg", "mtb", lambda n: 10.0 * n ** 3 / 3.0),
+)
 
 
 def run(n: int = 1024, blocks=(64, 128, 192, 256, 384), tuned: bool = True,
-        depths=(1, 2, 3), depth_block: int = 128, new_dmf_n: int = 192,
-        new_dmf_block: int = 64):
+        depths=(1, 2, 3), depth_block: int = 128, new_dmf_n: int = 512,
+        new_dmf_block: int = 64, panel_cmp_n: int = 128):
     rows = []
     a = random_matrix(n, 6)
     flops = 2.0 * n ** 3 / 3.0
@@ -50,11 +60,43 @@ def run(n: int = 1024, blocks=(64, 128, 192, 256, 384), tuned: bool = True,
                          f"{gflops(flops, t):.2f}GFLOPS"))
     nn = min(n, new_dmf_n)
     an = random_matrix(nn, 7)
-    for dmf, fl in _NEW_DMF_FLOPS.items():
-        fn = jax.jit(lambda x, d=dmf: get_variant(d, "mtb")(x, new_dmf_block)[0])
+    for dmf, variant, fl in _NEW_DMF_ROWS:
+        fn = jax.jit(lambda x, d=dmf, v=variant:
+                     get_variant(d, v)(x, new_dmf_block)[0])
         t = time_fn(fn, an)
-        rows.append(emit(f"{dmf}_mtb_n{nn}_b{new_dmf_block}", t,
+        rows.append(emit(f"{dmf}_{variant}_n{nn}_b{new_dmf_block}", t,
                          f"{gflops(fl(nn), t):.2f}GFLOPS"))
+    # traced vs eager QRCP panel (the ISSUE 5 win): the eager panel
+    # unrolls one trace step per column, so what it loses is the *first
+    # call* — jit compile grows O(b·panels) (and every eager/unjitted call
+    # pays the analogous per-column dispatch).  Steady-state throughput is
+    # reported too for honesty: XLA optimizes the unrolled straight-line
+    # panel somewhat better than the while-loop form, which is the
+    # compile-time/run-time trade the traced layer makes.  The comparison
+    # stays at a size the eager jit can afford.
+    import time as _time
+
+    from repro.kernels import panels
+
+    ncmp = min(n, panel_cmp_n)
+    acmp = random_matrix(ncmp, 8)
+    fl = 4.0 * ncmp ** 3 / 3.0
+    first = {}
+    for label, pf in (("traced", None), ("eager", panels.qrcp_panel_eager)):
+        fn = jax.jit(lambda x, pf=pf:
+                     get_variant("qrcp", "mtb")(x, new_dmf_block,
+                                                panel_fn=pf)[0])
+        t0 = _time.perf_counter()
+        jax.block_until_ready(fn(acmp))
+        first[label] = _time.perf_counter() - t0
+        steady = time_fn(fn, acmp, warmup=0)       # first call warmed it
+        rows.append(emit(f"qrcp_mtb_panelcmp_n{ncmp}_{label}_firstcall",
+                         first[label], "jit_compile_plus_run"))
+        rows.append(emit(f"qrcp_mtb_panelcmp_n{ncmp}_{label}_steady",
+                         steady, f"{gflops(fl, steady):.2f}GFLOPS"))
+    rows.append(emit(f"qrcp_mtb_panelcmp_n{ncmp}_firstcall_speedup",
+                     first["eager"] / first["traced"],
+                     "x_eager_over_traced_seconds_scale"))
     if tuned:
         from repro import tune
 

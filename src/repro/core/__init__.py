@@ -10,7 +10,10 @@ See DESIGN.md §1–4.  Public surface:
   excepted) scheduled by the generic engine in :mod:`repro.core.pipeline`
 * scheduling variants: :func:`repro.core.lookahead.get_variant`
   (``mtb``/``rtm``/``la``/``la_mb``, depth-suffixed ``la2``/``la3`` …;
-  qrcp/hessenberg are look-ahead-excluded by policy, DESIGN.md §11)
+  qrcp/hessenberg are look-ahead-excluded by policy, DESIGN.md §11, while
+  the windowed-pivoting ``qrcp_local`` gets the full set back, §12)
+* panel microkernels: :mod:`repro.kernels.panels` (the traced
+  ``panel_fn=`` layer every variant threads through, DESIGN.md §12)
 * distributed (pod-scale) versions: :mod:`repro.core.distributed`
 """
 from repro.core.backend import Backend, JNP_BACKEND, get_backend

@@ -20,11 +20,15 @@ updated column is
 
 (right update via the running ``W = A₀·V``, then the left compact-WY
 apply), after which the reflector zeroing ``c[kj+2:]`` is generated.  The
-per-column GEMV ``A₀·v_j`` reads the *whole* trailing block — which is why
-this DMF, like QRCP, refuses look-ahead: ``PF(k+1)`` is data-dependent on
-``TU_k^R`` and pre-factoring would read stale bulk columns
-(:data:`StepOps.la_unsafe`, DESIGN.md §11).  Available schedules: ``mtb``
-and ``rtm``.
+sweep runs as a **traced panel microkernel**
+(:func:`repro.kernels.panels.hessenberg_panel`, a ``lax.fori_loop`` with a
+fixed-shape carry — trace size O(1) in the panel width; the preserved
+eager reference is ``panels.hessenberg_panel_eager``, selectable through
+``panel_fn=``).  The per-column GEMV ``A₀·v_j`` reads the *whole* trailing
+block — which is why this DMF, like global QRCP, refuses look-ahead:
+``PF(k+1)`` is data-dependent on ``TU_k^R`` and pre-factoring would read
+stale bulk columns (:data:`StepOps.la_unsafe`, DESIGN.md §11).  Available
+schedules: ``mtb`` and ``rtm``.
 
 Packed format mirrors GEHRD: H on/above the first subdiagonal, reflector
 ``v_j`` below it in column ``j`` (implicit ``v[j+1] = 1``);
@@ -40,7 +44,8 @@ from repro.core import pipeline
 from repro.core.backend import Backend, JNP_BACKEND
 from repro.core.blocking import BlockSpec, panel_steps
 from repro.core.pipeline import StepOps
-from repro.core.qr import build_t_matrix, householder_vector
+from repro.core.qr import build_t_matrix
+from repro.kernels.panels import hessenberg_panel
 
 __all__ = ["hessenberg_blocked", "hessenberg_tiled", "unpack_hessenberg",
            "form_q_hess", "HESSENBERG_OPS"]
@@ -61,43 +66,14 @@ def _init(a):
 
 
 def _factor(state, st, backend, panel_fn):
-    # PF(k), xLAHR2 style.  ``panel_fn`` optionally replaces the reflector
-    # generator (``householder_vector(x, j) -> (v, tau, beta)``).
+    # PF(k), xLAHR2 style, via the traced panel microkernel.  ``panel_fn``
+    # has the ``hessenberg_panel(a, k, bk) -> (a, v, t, w, tau)`` contract
+    # (repro.kernels.panels) — it needs the *whole* matrix because the
+    # running W = A₀·V reads every trailing column (the la_unsafe reason).
     a, taus = state
-    n = a.shape[0]
     k, bk = st.k, st.bk
-    hh = panel_fn or householder_vector
-    rows = jnp.arange(n)
-
-    v = jnp.zeros((n, bk), a.dtype)
-    t = jnp.zeros((bk, bk), a.dtype)
-    w = jnp.zeros((n, bk), a.dtype)       # W = A₀·V, built one GEMV per col
-    tau_p = jnp.zeros((bk,), a.dtype)
-
-    for j in range(bk):
-        kj = k + j
-        col = a[:, kj]
-        # right update: col −= W·(T·V[kj, :j]ᵀ)  (= (A₀·V·T·Vᵀ)[:, kj])
-        col = col - w[:, :j] @ (t[:j, :j] @ v[kj, :j])
-        # left update: col −= V·Tᵀ·(Vᵀ·col)
-        col = col - v[:, :j] @ (t[:j, :j].T @ (v[:, :j].T @ col))
-        col = col.astype(a.dtype)
-        if kj < n - 2:                    # rows kj+2: exist — reduce them
-            vj, tau_j, beta = hh(col, kj + 1)
-            a = a.at[:, kj].set(
-                jnp.where(rows > kj + 1, vj, col).at[kj + 1].set(beta)
-                .astype(a.dtype))
-            v = v.at[:, j].set(vj)
-            tau_p = tau_p.at[j].set(tau_j)
-            # T column j (LARFT forward columnwise)
-            tcol = -tau_j * (t[:j, :j] @ (v[:, :j].T @ vj))
-            t = t.at[:j, j].set(tcol.astype(a.dtype)).at[j, j].set(tau_j)
-            # W column j = A₀·v_j — reads only columns ≥ kj+1, which are
-            # still untouched at this point of the panel sweep
-            w = w.at[:, j].set((a @ vj).astype(a.dtype))
-        else:                             # trailing 2×2 block: H already
-            a = a.at[:, kj].set(col)
-
+    fn = panel_fn or hessenberg_panel
+    a, v, t, w, tau_p = fn(a, k, bk)
     taus = taus.at[k : k + bk].set(tau_p)
     y = (w @ t).astype(a.dtype)           # Y = A₀·V·T, one GEMM per panel
     return (a, taus), _HessCtx(v, t, y)

@@ -15,10 +15,13 @@ scheduled by the generic engine (DESIGN.md §10), look-ahead **depth** is a
 variant parameter: ``"la<d>"`` / ``"la_mb<d>"`` resolve to the same driver
 with ``depth=d`` (d panels in flight, the paper's §5 generalization).
 ``"la"`` ≡ ``"la1"``.  Band reduction keeps its bespoke two-panel driver
-and stays depth-1 — deeper names raise ``KeyError`` for it.  QRCP and
-Hessenberg expose **no** look-ahead variant at all (their panels read
+and stays depth-1 — deeper names raise ``KeyError`` for it.  Global QRCP
+and Hessenberg expose **no** look-ahead variant at all (their panels read
 trailing data beyond the panel columns — :data:`LOOKAHEAD_EXCLUDED`,
 DESIGN.md §11): ``"la"``/``"la_mb"`` raise ``KeyError`` with the policy.
+``"qrcp_local"`` (windowed pivoting, DESIGN.md §12) restricts the pivot
+search to the panel window and therefore gets the full variant set back,
+look-ahead at any depth included.
 
 On TPU the variants differ in *dataflow structure* rather than thread
 mapping (DESIGN.md §2): MTB = one barrier-separated panel/update pair per
@@ -71,6 +74,15 @@ _REGISTRY: Dict[str, Dict[str, Callable]] = {
     "qrcp": {
         "mtb": qrcp.qrcp_blocked,
         "rtm": qrcp.qrcp_tiled,
+    },
+    # Windowed-pivoting QRCP: the pivot search never leaves the panel
+    # window, so `factor` reads only the panel columns and look-ahead is
+    # *legal* — the first DMF to move out of the exclusion list
+    # (DESIGN.md §12; weaker rank-revealing guarantee documented there).
+    "qrcp_local": {
+        "mtb": qrcp.qrcp_local_blocked,
+        "rtm": qrcp.qrcp_local_tiled,
+        "la": qrcp.qrcp_local_lookahead,
     },
     "hessenberg": {
         "mtb": hessenberg.hessenberg_blocked,

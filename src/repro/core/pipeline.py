@@ -1,4 +1,4 @@
-"""The generic static look-ahead engine — one loop, eight DMFs, depth-d.
+"""The generic static look-ahead engine — one loop, nine DMFs, depth-d.
 
 The paper's central claim (§4–§5) is that static look-ahead is *algorithm
 independent*: the MTB / RTM / LA schedules are properties of the panel

@@ -1,28 +1,44 @@
-"""QR with column pivoting (GEQP3 semantics) — the paper's caveat DMF.
+"""QR with column pivoting — global GEQP3 and windowed ``qrcp_local``.
 
-The factorization computes ``A·P = Q·R`` where ``P`` greedily moves the
-trailing column of largest partial norm into pivot position at every step —
-the rank-revealing property LAPACK's GEQP3 provides and plain GEQRF does
-not.  The panel follows xLAQPS: within a panel only the *pivot rows* of the
-trailing matrix are updated eagerly (one row per reflector, enough to
-downdate the column norms exactly), while the block update of the rows
-below the panel is deferred to the engine's trailing-update hook as the
-single GEMM ``A₂ ← A₂ − V₂·Fᵀ`` — the same BLAS-3 split every other
-StepOps DMF feeds the scheduler.
+Two pivoting policies, one packed format (``a[:, jpvt] == Q·R``, QR packing
+— :func:`repro.core.qr.form_q` applies):
 
-Declared as :data:`QRCP_OPS` and scheduled by :mod:`repro.core.pipeline` —
-but **mtb/rtm only**.  This is the paper's look-ahead caveat made explicit
-(DESIGN.md §11): the pivot choice for panel k+1 reads the downdated norms
-of *every* trailing column after update k, so pre-factoring panel k+1 ahead
-of the bulk ``TU_k^R`` (what ``la`` does) would commit pivots computed from
-stale norms — a different (wrong) factorization, not a different schedule.
-:data:`StepOps.la_unsafe` carries that reason to the engine, which refuses
-``variant="la"`` outright, and ``repro.core.lookahead`` never advertises a
-look-ahead variant for this DMF.
+**Global pivoting (GEQP3 semantics, :data:`QRCP_OPS`).**  ``P`` greedily
+moves the trailing column of largest partial norm into pivot position at
+every step — the rank-revealing property LAPACK's GEQP3 provides and plain
+GEQRF does not.  The panel follows xLAQPS: within a panel only the *pivot
+rows* of the trailing matrix are updated eagerly (one row per reflector,
+enough to downdate the column norms exactly), while the block update of the
+rows below the panel is deferred to the engine's trailing-update hook as
+the single GEMM ``A₂ ← A₂ − V₂·Fᵀ``.  Scheduled **mtb/rtm only**: the
+pivot choice for panel k+1 reads the downdated norms of *every* trailing
+column after update k, so pre-factoring panel k+1 ahead of the bulk
+``TU_k^R`` would commit pivots computed from stale norms — a different
+(wrong) factorization, not a different schedule (:data:`StepOps.la_unsafe`,
+DESIGN.md §11).
+
+**Windowed pivoting (:data:`QRCP_LOCAL_OPS`, ``qrcp_local``).**  The pivot
+search is restricted to the columns of the *current panel window*: the
+panel factorization reads nothing beyond the panel columns, which is
+exactly the §10 premise look-ahead needs — so ``qrcp_local`` is the first
+pivoted-QR DMF with a **legal** ``la``/``la2``/… schedule (DESIGN.md §12).
+The price is a weaker rank-revealing guarantee: ``|r_jj|`` is non-
+increasing only *within each window* (an adversarial matrix can hide a
+large column from an early window), though on well-conditioned and
+generically rank-deficient inputs the revealed rank matches global QRCP.
+The trailing update is the standard compact-WY apply (GEQRF's), since no
+trailing norms are tracked.
+
+Both panels run as **traced microkernels** (``lax.fori_loop`` over dynamic
+slices, :mod:`repro.kernels.panels`) — trace size O(1) in the panel width,
+which removed the eager per-column compile/dispatch wall (ROADMAP "QRCP
+panel speed").  ``panel_fn=`` accepts any implementation of the
+``qrcp_panel(block, steps) -> (block, v, f, tau, piv)`` contract (e.g. the
+preserved eager reference ``panels.qrcp_panel_eager``).
 
 Column interchanges swap *full* columns, but the rows **above** the panel
-(the already-computed R rows of trailing columns) are swapped lazily by the
-``swap`` hook — the column analogue of LU's deferred ``laswp``.
+(the already-computed R rows) are swapped lazily by the ``swap`` hook —
+the column analogue of LU's deferred ``laswp``.
 
 ``jpvt`` output follows the permutation-vector convention:
 ``a[:, jpvt] == Q·R`` (``jpvt[j]`` is the original index of the column the
@@ -37,9 +53,12 @@ from jax import lax
 
 from repro.core import pipeline
 from repro.core.pipeline import StepOps
-from repro.core.qr import householder_vector
+from repro.core.qr import build_t_matrix
+from repro.kernels.panels import _swap_perm, qrcp_panel
 
-__all__ = ["qrcp_blocked", "qrcp_tiled", "QRCP_OPS"]
+__all__ = ["qrcp_blocked", "qrcp_tiled", "QRCP_OPS",
+           "qrcp_local_blocked", "qrcp_local_tiled", "qrcp_local_lookahead",
+           "QRCP_LOCAL_OPS"]
 
 
 class _QRCPCtx(NamedTuple):
@@ -54,65 +73,27 @@ def _init(a):
     return a, (taus, jpvt)
 
 
-def _swap_perm(cols: jnp.ndarray, j, p) -> jnp.ndarray:
-    """Index vector interchanging ``j`` and ``p`` (``j == p`` and traced
-    indices safe) — gathered through ``jnp.take`` at both swap sites."""
-    return cols.at[j].set(p).at[p].set(j)
+def _replay_pivots(jpvt_k: jnp.ndarray, piv: jnp.ndarray) -> jnp.ndarray:
+    """Apply the panel's interchange sequence to a permutation slice."""
+    cols = jnp.arange(jpvt_k.shape[0])
+
+    def body(j, jp):
+        return jnp.take(jp, _swap_perm(cols, j, piv[j]))
+
+    return lax.fori_loop(0, piv.shape[0], body, jpvt_k)
 
 
 def _factor(state, st, backend, panel_fn):
-    # PF(k), xLAQPS style.  ``panel_fn`` optionally replaces the reflector
-    # generator (the ``householder_vector(x, j) -> (v, tau, beta)``
-    # contract); pivot selection and norm tracking stay in the driver —
-    # they are what make GEQP3 GEQP3.
+    # PF(k), xLAQPS style, via the traced panel microkernel (module doc).
     a, (taus, jpvt) = state
     m, n = a.shape
     k, bk = st.k, st.bk
-    r, c = m - k, n - k
-    steps = min(bk, r)
-    hh = panel_fn or householder_vector
-
-    b = a[k:, k:]                         # trailing block, fully updated
-    v = jnp.zeros((r, steps), a.dtype)
-    f = jnp.zeros((c, steps), a.dtype)
-    tau_p = jnp.zeros((steps,), a.dtype)
-    piv = jnp.zeros((steps,), jnp.int32)
-    # squared partial norms, recomputed per panel from the updated trailing
-    # block (sidesteps LAPACK's cross-panel downdate-drift machinery)
-    vn = jnp.sum(b * b, axis=0)
-    rows = jnp.arange(r)
-    cols = jnp.arange(c)
-
-    for j in range(steps):
-        # --- greedy pivot: largest remaining partial norm ----------------
-        p = jnp.argmax(jnp.where(cols >= j, vn, -jnp.inf)).astype(jnp.int32)
-        piv = piv.at[j].set(p)
-        permv = _swap_perm(cols, j, p)
-        b = jnp.take(b, permv, axis=1)
-        f = jnp.take(f, permv, axis=0)
-        vn = jnp.take(vn, permv)
-        jpvt = jpvt.at[k:].set(jnp.take(jpvt[k:], permv))
-        # --- bring column j current: rows j: get reflectors 0..j−1 -------
-        # (rows < j were completed by the pivot-row updates below)
-        upd = v[:, :j] @ f[j, :j]
-        colj = (b[:, j] - jnp.where(rows >= j, upd, 0.0)).astype(a.dtype)
-        # --- reflector j --------------------------------------------------
-        vj, tau_j, beta = hh(colj, j)
-        v = v.at[:, j].set(vj)
-        tau_p = tau_p.at[j].set(tau_j)
-        newcol = jnp.where(rows > j, vj, colj).at[j].set(beta)
-        b = b.at[:, j].set(newcol.astype(a.dtype))
-        # --- F(:, j) = tau·(B₀ᵀ·v − F·(Vᵀ·v))  (xLAQPS incremental F) ----
-        w = b.T @ vj - f[:, :j] @ (v[:, :j].T @ vj)
-        f = f.at[:, j].set((tau_j * w).astype(a.dtype))
-        # --- pivot row j of every trailing column (completes row j) ------
-        rowj = b[j, :] - v[j, : j + 1] @ f[:, : j + 1].T
-        b = b.at[j, :].set(jnp.where(cols > j, rowj, b[j, :]).astype(a.dtype))
-        # --- exact norm downdate: ‖B[j+1:, i]‖² = ‖B[j:, i]‖² − B[j,i]² --
-        vn = jnp.where(cols > j, jnp.maximum(vn - b[j, :] ** 2, 0.0), 0.0)
-
+    steps = min(bk, m - k)
+    fn = panel_fn or qrcp_panel
+    b, v, f, tau_p, piv = fn(a[k:, k:], steps)
     a = a.at[k:, k:].set(b)
     taus = taus.at[k : k + steps].set(tau_p)
+    jpvt = jpvt.at[k:].set(_replay_pivots(jpvt[k:], piv))
     return (a, (taus, jpvt)), _QRCPCtx(v, f, piv)
 
 
@@ -174,6 +155,90 @@ QRCP_OPS = StepOps(
 
 
 # ---------------------------------------------------------------------------
+# Windowed pivoting: pivots restricted to the panel window — look-ahead
+# becomes legal because `factor` reads only the panel columns (DESIGN.md §12).
+# ---------------------------------------------------------------------------
+class _QRCPLocalCtx(NamedTuple):
+    v: jnp.ndarray            # (m−k) × steps reflectors, unit diagonal
+    t: jnp.ndarray            # steps × steps LARFT factor (compact WY)
+    piv: jnp.ndarray          # panel-relative column interchanges
+    k: int                    # panel origin — guards the lazy swap replay
+    w: int                    # panel width: the extent piv permutes over
+    #                           (> len(piv) on straddling m < n panels)
+
+
+def _factor_local(state, st, backend, panel_fn):
+    # PF(k): QRCP of the panel *block only* — the same traced xLAQPS
+    # microkernel, handed a window exactly `bk` columns wide, so the greedy
+    # pivot never sees (and the factorization never reads) trailing data.
+    a, (taus, jpvt) = state
+    m = a.shape[0]
+    k, bk = st.k, st.bk
+    steps = min(bk, m - k)
+    fn = panel_fn or qrcp_panel
+    packed, v, _, tau_p, piv = fn(a[k:, k : k + bk], steps)
+    a = a.at[k:, k : k + bk].set(packed)
+    taus = taus.at[k : k + steps].set(tau_p)
+    jpvt = jpvt.at[k : k + bk].set(_replay_pivots(jpvt[k : k + bk], piv))
+    return (a, (taus, jpvt)), _QRCPLocalCtx(v, build_t_matrix(v, tau_p),
+                                            piv, k, bk)
+
+
+def _swap_local(state, ctx, st, backend):
+    # Panel-k interchanges on the R rows above the panel.  Pivots never
+    # leave the window, so only the panel's own columns are touched.  Under
+    # la the engine replays swaps lazily with whatever ctx is in flight; the
+    # ctx.k guard makes the replay idempotent when the look-ahead window has
+    # run out of factorable panels (wide m < n inputs) and ctx goes stale.
+    a, aux = state
+    k = st.k
+    if ctx is None or ctx.k != k or k == 0:
+        return state
+    cols = jnp.arange(ctx.w)
+
+    def body(j, top):
+        return jnp.take(top, _swap_perm(cols, j, ctx.piv[j]), axis=1)
+
+    top = lax.fori_loop(0, ctx.piv.shape[0], body, a[:k, k : k + ctx.w])
+    return a.at[:k, k : k + ctx.w].set(top), aux
+
+
+def _update_local(state, ctx, st, c0, c1, backend):
+    # TU_k on columns [c0, c1): the standard compact-WY Qᵀ apply (GEQRF's
+    # trailing update — no trailing norms exist to maintain).
+    a, aux = state
+    k = st.k
+    c = a[k:, c0:c1]
+    w = backend.gemm(ctx.t.T, backend.gemm(ctx.v.T, c))
+    a = a.at[k:, c0:c1].set((c - backend.gemm(ctx.v, w)).astype(a.dtype))
+    return (a, aux)
+
+
+def _tiles_local(state, ctx, st, backend):
+    # RTM: one Qᵀ-apply task per trailing column panel.
+    n = state[0].shape[1]
+    for j in range(st.k_next, n, st.bk):
+        state = _update_local(state, ctx, st, j, min(j + st.bk, n), backend)
+    return state
+
+
+QRCP_LOCAL_OPS = StepOps(
+    name="qrcp_local",
+    init=_init,
+    factor=_factor_local,
+    update=_update_local,
+    finalize=lambda state: (state[0], state[1][0], state[1][1]),
+    swap=_swap_local,
+    tiles=_tiles_local,
+    stop=lambda state, st: st.k >= state[0].shape[0],
+    can_factor=lambda state, st: st.k < state[0].shape[0],
+    width=lambda a: a.shape[1],
+    # no la_unsafe: restricting the pivot window is precisely what restores
+    # the "factor reads only the panel columns" premise of §10 look-ahead
+)
+
+
+# ---------------------------------------------------------------------------
 # Public drivers (the make_variant registration path, DESIGN.md §10).
 # ---------------------------------------------------------------------------
 qrcp_blocked = pipeline.make_variant(QRCP_OPS, "mtb")
@@ -186,3 +251,20 @@ qrcp_blocked.__doc__ = """Blocked GEQP3 (MTB).  Returns (packed, taus, jpvt).
 qrcp_tiled = pipeline.make_variant(QRCP_OPS, "rtm")
 qrcp_tiled.__doc__ = """GEQP3 with the deferred trailing update fragmented
 into per-column-panel tasks (RTM).  Same output as :func:`qrcp_blocked`."""
+
+qrcp_local_blocked = pipeline.make_variant(QRCP_LOCAL_OPS, "mtb")
+qrcp_local_blocked.__doc__ = """Windowed-pivoting QRCP (MTB).  Returns
+(packed, taus, jpvt) — same packing as :func:`qrcp_blocked`, but ``jpvt``
+only permutes within panel windows and ``|diag R|`` is non-increasing only
+within each window (the weaker rank-revealing guarantee, DESIGN.md §12)."""
+
+qrcp_local_tiled = pipeline.make_variant(QRCP_LOCAL_OPS, "rtm")
+qrcp_local_tiled.__doc__ = """Windowed-pivoting QRCP with the trailing
+update fragmented into per-column-panel tasks (RTM)."""
+
+qrcp_local_lookahead = pipeline.make_variant(QRCP_LOCAL_OPS, "la")
+qrcp_local_lookahead.__doc__ = """Windowed-pivoting QRCP with static
+look-ahead — the first pivoted DMF with a legal ``la`` schedule: the pivot
+search never leaves the panel window, so ``PF(k+1)`` after the narrow
+update is the same computation as after the full update (``depth=d`` keeps
+d panels in flight, DESIGN.md §12)."""

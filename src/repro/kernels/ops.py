@@ -20,6 +20,7 @@ from repro.core.backend import Backend, trsm_jnp
 from repro.kernels import blis_gemm as _bg
 from repro.kernels import fused_panel_update as _fpu
 from repro.kernels import panel_lu as _plu
+from repro.kernels import panels as _panels
 from repro.kernels import panel_qr as _pqr
 from repro.kernels import trsm as _tr
 
@@ -141,21 +142,26 @@ FUSED_PU = {
     "cholesky": fused_cholesky_panel_update,
 }
 
-# Pallas panel kernels in the per-DMF ``panel_fn=`` contract documented on
-# each ``STEP_OPS`` declaration (DESIGN.md §10).  Every scheduling variant
+# Panel kernels in the per-DMF ``panel_fn=`` contract documented on each
+# ``STEP_OPS`` declaration (DESIGN.md §10/§12).  Every scheduling variant
 # of every pipeline-backed driver threads ``panel_fn=`` through
 # ``StepOps.factor``, so these plug into mtb/rtm/la(depth=d) uniformly:
 #
 #     lu_tiled(a, 128, panel_fn=kops.PANEL_KERNELS["lu"])
 #
-# DMFs without a VMEM-resident panel kernel (cholesky/ldlt factor their
-# panel through backend TRSM already; gauss_jordan's diagonal inverse is
-# latency-trivial) simply have no entry.  qrcp/hessenberg also have none:
-# their ``panel_fn`` contract is the single-column reflector generator
-# (``repro.core.qr.householder_vector``) because pivot/norm tracking (QRCP)
-# and the per-column A₀·v GEMVs (GEHRD) interleave with reflector
-# generation and cannot live in one panel-resident kernel.
+# Two families share the registry: the Pallas VMEM-resident kernels (lu/qr
+# — this module's wrappers, interpret mode on CPU) and the traced pure-XLA
+# microkernels from ``repro.kernels.panels`` (ldlt / qrcp / qrcp_local /
+# hessenberg — ``lax.fori_loop`` bodies, O(1) trace in the panel width;
+# those are also the DMFs' *defaults*, so the entries here exist for
+# explicit selection and for symmetry of the registry).  The traced lu/qr
+# forms stay reachable as ``panels.TRACED_PANELS["lu"/"qr"]`` — the bare
+# keys resolve to the Pallas kernels, matching the pre-existing contract.
+# cholesky and gauss_jordan have no entry: their panels are backend TRSM /
+# a latency-trivial diagonal inverse.
 PANEL_KERNELS = {
+    **{k: v for k, v in _panels.TRACED_PANELS.items()
+       if k not in ("lu", "qr")},
     "lu": lu_panel,
     "qr": qr_panel,
 }

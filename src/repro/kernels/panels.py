@@ -1,0 +1,322 @@
+"""Traced panel microkernels — the PF layer as `lax.fori_loop` bodies.
+
+The paper's engineering thesis is that the *panel factorization* must be
+treated as a first-class tuned kernel, separately from the BLAS-3 trailing
+update the scheduler overlaps it with (§4, §6.1; also the malleable-BLAS
+line in PAPERS.md).  This module is that layer for the JAX port: every
+per-column panel routine of every DMF, written as a ``lax.fori_loop`` body
+over **dynamic slices with a fixed-shape carry**, so the emitted trace (and
+therefore jit compile time) is O(1) in the panel width ``b`` instead of
+O(b) per panel.
+
+Why it matters here: LU/QR/LDLT panels were born traced
+(``lu_unblocked``/``qr_unblocked``/``ldlt_unblocked`` are ``fori_loop``
+bodies already — re-exported below so the whole panel family lives behind
+one registry), but QRCP's xLAQPS and Hessenberg's xLAHR2 panels were eager
+Python column loops: O(b) dispatches per panel eagerly and O(n·b) trace
+under ``jit``, which is exactly the "QRCP panel speed" wall in ROADMAP
+(~15 s per n≈50 conformance case, minutes of compile at n=256).  The
+traced forms below replace them as the **default** panel for those DMFs;
+the eager loops are preserved (``*_eager``) as references for equivalence
+tests and benchmarks.
+
+Contracts (the per-DMF ``panel_fn=`` hook documented on each ``*_OPS``
+declaration, threaded through every scheduling variant by the §10 engine):
+
+* ``lu_panel(panel) -> (packed, piv)``                 — GETF2.
+* ``qr_panel(panel) -> (packed, tau, T)``              — GEQR2 + LARFT.
+* ``ldlt_panel(panel, nb, backend) -> packed``         — LDLᵀ PF.
+* ``qrcp_panel(block, steps) -> (block, v, f, tau, piv)``
+  — xLAQPS over a trailing block: greedy pivot among *all* ``block``
+  columns, exact in-panel norm downdate, incremental ``F = B₀ᵀ·V·T``,
+  eager pivot-row updates.  ``steps`` is the number of reflectors (the
+  panel width, static).  Passing the bare *panel* (``block`` exactly
+  ``steps`` columns wide) restricts the pivot choice to the panel window —
+  the same routine is the windowed-pivoting ``qrcp_local`` panel.
+* ``hessenberg_panel(a, k, bk) -> (a, v, t, w, tau)``  — xLAHR2 (needs the
+  full matrix: ``W = A₀·V`` reads every trailing column).
+
+The traced QRCP/Hessenberg panels are ``jit``-wrapped with static loop
+bounds, so eager drivers compile each distinct panel shape once and reuse
+it across panels, variants, and conformance cases.
+
+Numerics note: inside a traced body the slice bounds ``:j`` become masked
+or gathered full-width contractions.  The extra terms are *exact* zeros
+(``v``/``f``/``t`` columns ``>= j`` are unwritten), so the result differs
+from the eager loop only through reduction-tree grouping — within an ulp,
+never structurally.  That is why the bit-pinned DMFs (LU/QR/LDLT vs
+``tests/legacy_reference.py``) keep their original panels as defaults,
+while QRCP and Hessenberg — pinned to tolerances, not bits — switch.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+__all__ = [
+    "lu_panel", "qr_panel", "ldlt_panel",
+    "qrcp_panel", "qrcp_panel_eager",
+    "hessenberg_panel", "hessenberg_panel_eager",
+    "TRACED_PANELS",
+]
+
+# NB: the `repro.core` imports below are deliberately *lazy* (inside the
+# functions, resolved at call/trace time): `repro.core`'s package init pulls
+# in the variant registry, whose DMF modules import this module for their
+# default panels — a module-level import here would close that cycle.
+
+
+def lu_panel(panel: jnp.ndarray):
+    """GETF2, traced: ``(m × nb panel) -> (packed, piv)``.
+
+    Delegates to :func:`repro.core.lu.lu_unblocked` — already a
+    ``fori_loop`` of masked rank-1 updates (born traced).
+    """
+    from repro.core.lu import lu_unblocked
+
+    return lu_unblocked(panel)
+
+
+def ldlt_panel(panel: jnp.ndarray, nb: int, backend=None):
+    """LDLᵀ PF, traced: ``(panel, nb, backend) -> packed`` — delegates to
+    :func:`repro.core.ldlt.ldlt_panel` (``fori_loop`` diagonal sweep +
+    backend TRSM for the subdiagonal block)."""
+    from repro.core.backend import JNP_BACKEND
+    from repro.core.ldlt import ldlt_panel as _ldlt_panel
+
+    return _ldlt_panel(panel, nb, backend if backend is not None
+                       else JNP_BACKEND)
+
+
+def qr_panel(panel: jnp.ndarray):
+    """GEQR2 + LARFT, traced: ``(m × nb panel) -> (packed, tau, T)``.
+
+    The pure-XLA spelling of the QR ``panel_fn`` contract (the Pallas
+    VMEM-resident kernel in ``kernels/panel_qr.py`` implements the same
+    signature); both inner loops are ``fori_loop`` bodies already.
+    """
+    from repro.core.qr import build_t_matrix, qr_unblocked, unpack_v
+
+    packed, tau = qr_unblocked(panel)
+    v = unpack_v(packed, panel.shape[1])
+    return packed, tau, build_t_matrix(v, tau)
+
+
+# ---------------------------------------------------------------------------
+# QRCP: the xLAQPS panel (greedy pivot + exact norm downdate), traced.
+# ---------------------------------------------------------------------------
+def _swap_perm(cols: jnp.ndarray, j, p) -> jnp.ndarray:
+    """Index vector interchanging ``j`` and ``p`` (traced indices safe)."""
+    return cols.at[j].set(p).at[p].set(j)
+
+
+@functools.partial(jax.jit, static_argnames=("steps",))
+def qrcp_panel(block: jnp.ndarray, steps: int):
+    """Traced xLAQPS sweep over a trailing block (module doc for contract).
+
+    Carry: ``(block, v, f, vn, tau, piv)`` — all fixed-shape; step ``j``
+    touches rows/columns ``>= j`` through masks and dynamic gathers.  The
+    trace is O(1) in ``steps``.  Columns of ``v``/``f`` at indices
+    ``>= j`` are exact zeros when step ``j`` reads them, so the full-width
+    contractions below equal the eager loop's ``[:j]`` slices.
+    """
+    from repro.core.qr import householder_vector
+
+    r, c = block.shape
+    dtype = block.dtype
+    rows = jnp.arange(r)
+    cols = jnp.arange(c)
+
+    def body(j, carry):
+        b, v, f, vn, tau, piv = carry
+        # --- greedy pivot: largest remaining partial norm ----------------
+        p = jnp.argmax(jnp.where(cols >= j, vn, -jnp.inf)).astype(jnp.int32)
+        piv = piv.at[j].set(p)
+        permv = _swap_perm(cols, j, p)
+        b = jnp.take(b, permv, axis=1)
+        f = jnp.take(f, permv, axis=0)
+        vn = jnp.take(vn, permv)
+        # --- bring column j current: rows j: get reflectors 0..j−1 -------
+        upd = v @ f[j, :]
+        colj = (b[:, j] - jnp.where(rows >= j, upd, 0.0)).astype(dtype)
+        # --- reflector j --------------------------------------------------
+        vj, tau_j, beta = householder_vector(colj, j)
+        v = v.at[:, j].set(vj)
+        tau = tau.at[j].set(tau_j)
+        newcol = jnp.where(rows > j, vj, colj).at[j].set(beta)
+        b = b.at[:, j].set(newcol.astype(dtype))
+        # --- F(:, j) = tau·(B₀ᵀ·v − F·(Vᵀ·v))  (xLAQPS incremental F) ----
+        w = b.T @ vj - f @ (v.T @ vj)
+        f = f.at[:, j].set((tau_j * w).astype(dtype))
+        # --- pivot row j of every trailing column (completes row j) ------
+        rowj = b[j, :] - v[j, :] @ f.T
+        b = b.at[j, :].set(jnp.where(cols > j, rowj, b[j, :]).astype(dtype))
+        # --- exact norm downdate: ‖B[j+1:, i]‖² = ‖B[j:, i]‖² − B[j,i]² --
+        vn = jnp.where(cols > j, jnp.maximum(vn - b[j, :] ** 2, 0.0), 0.0)
+        return b, v, f, vn, tau, piv
+
+    carry0 = (
+        block,
+        jnp.zeros((r, steps), dtype),
+        jnp.zeros((c, steps), dtype),
+        jnp.sum(block * block, axis=0),
+        jnp.zeros((steps,), dtype),
+        jnp.zeros((steps,), jnp.int32),
+    )
+    b, v, f, _, tau, piv = lax.fori_loop(0, steps, body, carry0)
+    return b, v, f, tau, piv
+
+
+def qrcp_panel_eager(block: jnp.ndarray, steps: int):
+    """The pre-traced xLAQPS loop — one Python iteration per column.
+
+    Kept verbatim (same contract as :func:`qrcp_panel`) as the equivalence
+    reference and the "before" side of the panels-vs-eager benchmark row.
+    O(steps) dispatches eagerly and O(steps) trace growth under jit — the
+    compile-time wall the traced panel exists to remove.
+    """
+    from repro.core.qr import householder_vector
+
+    r, c = block.shape
+    dtype = block.dtype
+    b = block
+    v = jnp.zeros((r, steps), dtype)
+    f = jnp.zeros((c, steps), dtype)
+    tau = jnp.zeros((steps,), dtype)
+    piv = jnp.zeros((steps,), jnp.int32)
+    vn = jnp.sum(b * b, axis=0)
+    rows = jnp.arange(r)
+    cols = jnp.arange(c)
+
+    for j in range(steps):
+        p = jnp.argmax(jnp.where(cols >= j, vn, -jnp.inf)).astype(jnp.int32)
+        piv = piv.at[j].set(p)
+        permv = _swap_perm(cols, j, p)
+        b = jnp.take(b, permv, axis=1)
+        f = jnp.take(f, permv, axis=0)
+        vn = jnp.take(vn, permv)
+        upd = v[:, :j] @ f[j, :j]
+        colj = (b[:, j] - jnp.where(rows >= j, upd, 0.0)).astype(dtype)
+        vj, tau_j, beta = householder_vector(colj, j)
+        v = v.at[:, j].set(vj)
+        tau = tau.at[j].set(tau_j)
+        newcol = jnp.where(rows > j, vj, colj).at[j].set(beta)
+        b = b.at[:, j].set(newcol.astype(dtype))
+        w = b.T @ vj - f[:, :j] @ (v[:, :j].T @ vj)
+        f = f.at[:, j].set((tau_j * w).astype(dtype))
+        rowj = b[j, :] - v[j, : j + 1] @ f[:, : j + 1].T
+        b = b.at[j, :].set(jnp.where(cols > j, rowj, b[j, :]).astype(dtype))
+        vn = jnp.where(cols > j, jnp.maximum(vn - b[j, :] ** 2, 0.0), 0.0)
+    return b, v, f, tau, piv
+
+
+# ---------------------------------------------------------------------------
+# Hessenberg: the xLAHR2 panel, traced.
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("bk",))
+def hessenberg_panel(a: jnp.ndarray, k: int, bk: int):
+    """Traced xLAHR2 sweep (module doc for contract).
+
+    Column ``kj = k + j`` is brought current by the running right update
+    (``W = A₀·V``) and the left compact-WY apply, then reduced.  The last
+    two columns of the matrix have no rows to reduce; instead of a
+    ``lax.cond`` the reflector quantities are masked to zero when
+    ``kj >= n − 2`` (``tau = 0`` ⇒ identity reflector), keeping one path.
+    Only ``bk`` is a static jit key (it sizes the carry); ``k`` is a traced
+    operand so one compile per (shape, dtype, bk) serves *every* panel.
+    """
+    from repro.core.qr import householder_vector
+
+    n = a.shape[0]
+    dtype = a.dtype
+    rows = jnp.arange(n)
+    idx = jnp.arange(bk)
+
+    def body(j, carry):
+        a, v, t, w, tau = carry
+        kj = k + j
+        col = a[:, kj]
+        # right update: col −= W·(T·V[kj, :]ᵀ)  (= (A₀·V·T·Vᵀ)[:, kj])
+        col = col - w @ (t @ v[kj, :])
+        # left update: col −= V·Tᵀ·(Vᵀ·col)
+        col = col - v @ (t.T @ (v.T @ col))
+        col = col.astype(dtype)
+        valid = kj < n - 2                # rows kj+2: exist — reduce them
+        vj, tau_j, beta = householder_vector(col, kj + 1)
+        vj = jnp.where(valid, vj, 0.0).astype(dtype)
+        tau_j = jnp.where(valid, tau_j, 0.0).astype(dtype)
+        newcol = jnp.where(rows > kj + 1, vj, col).at[kj + 1].set(beta)
+        a = a.at[:, kj].set(jnp.where(valid, newcol, col).astype(dtype))
+        v = v.at[:, j].set(vj)
+        tau = tau.at[j].set(tau_j)
+        # T column j (LARFT forward columnwise); t[:, i >= j] are still
+        # zero, so the full-width products reduce to the eager [:j] slices
+        tcol = -tau_j * (t @ (v.T @ vj))
+        t = t.at[:, j].set(jnp.where(idx < j, tcol, 0.0)
+                           .at[j].set(tau_j).astype(dtype))
+        # W column j = A₀·v_j — reads only columns ≥ kj+1, untouched so far
+        w = w.at[:, j].set((a @ vj).astype(dtype))
+        return a, v, t, w, tau
+
+    carry0 = (
+        a,
+        jnp.zeros((n, bk), dtype),
+        jnp.zeros((bk, bk), dtype),
+        jnp.zeros((n, bk), dtype),
+        jnp.zeros((bk,), dtype),
+    )
+    return lax.fori_loop(0, bk, body, carry0)
+
+
+def hessenberg_panel_eager(a: jnp.ndarray, k: int, bk: int):
+    """The pre-traced xLAHR2 loop (same contract as
+    :func:`hessenberg_panel`) — equivalence reference and benchmark
+    "before" side."""
+    from repro.core.qr import householder_vector
+
+    n = a.shape[0]
+    dtype = a.dtype
+    rows = jnp.arange(n)
+
+    v = jnp.zeros((n, bk), dtype)
+    t = jnp.zeros((bk, bk), dtype)
+    w = jnp.zeros((n, bk), dtype)
+    tau = jnp.zeros((bk,), dtype)
+
+    for j in range(bk):
+        kj = k + j
+        col = a[:, kj]
+        col = col - w[:, :j] @ (t[:j, :j] @ v[kj, :j])
+        col = col - v[:, :j] @ (t[:j, :j].T @ (v[:, :j].T @ col))
+        col = col.astype(dtype)
+        if kj < n - 2:                    # rows kj+2: exist — reduce them
+            vj, tau_j, beta = householder_vector(col, kj + 1)
+            a = a.at[:, kj].set(
+                jnp.where(rows > kj + 1, vj, col).at[kj + 1].set(beta)
+                .astype(dtype))
+            v = v.at[:, j].set(vj)
+            tau = tau.at[j].set(tau_j)
+            tcol = -tau_j * (t[:j, :j] @ (v[:, :j].T @ vj))
+            t = t.at[:j, j].set(tcol.astype(dtype)).at[j, j].set(tau_j)
+            w = w.at[:, j].set((a @ vj).astype(dtype))
+        else:                             # trailing 2×2 block: H already
+            a = a.at[:, kj].set(col)
+    return a, v, t, w, tau
+
+
+#: The traced panel family, keyed by DMF — merged into
+#: ``repro.kernels.ops.PANEL_KERNELS`` (the ``panel_fn=`` registry).  LU
+#: and QR also have Pallas VMEM-resident panel kernels; those keep the
+#: bare ``"lu"``/``"qr"`` registry keys, and these traced pure-XLA forms
+#: are reachable here (they are the same routines the DMFs default to).
+TRACED_PANELS = {
+    "lu": lu_panel,
+    "qr": qr_panel,
+    "ldlt": ldlt_panel,
+    "qrcp": qrcp_panel,
+    "qrcp_local": qrcp_panel,
+    "hessenberg": hessenberg_panel,
+}

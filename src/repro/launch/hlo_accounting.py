@@ -193,6 +193,25 @@ def _dot_flops(type_str: str, line: str, defs: Dict[str, str]) -> float:
     return 2.0 * out_elems * k
 
 
+def count_instructions(hlo: str) -> int:
+    """Static instruction count of an (optimized) HLO module text.
+
+    Counts every instruction line across all computations, *uncorrected*
+    for loop trip counts — which is the point: a ``lax.fori_loop`` body
+    contributes its instructions once regardless of the trip count, so
+    this is the proxy for **trace/compile size** (what the traced panel
+    microkernels in ``repro.kernels.panels`` bound to O(1) per panel,
+    where the eager per-column loops grew O(b)).  Used by the trace-size
+    regression tests; parameters/constants/tuple-plumbing are included —
+    they grow with unrolling just the same.
+    """
+    comps, _ = _split_computations(hlo)
+    total = 0
+    for lines in comps.values():
+        total += sum(1 for line in lines if _INSTR.match(line))
+    return total
+
+
 def analyze_hlo(hlo: str) -> Dict[str, float]:
     comps, entry = _split_computations(hlo)
     chains = _parse_frames(hlo)

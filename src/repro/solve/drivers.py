@@ -25,7 +25,7 @@ compositions over them.  LAPACK name → meaning:
 """
 from __future__ import annotations
 
-from typing import Union
+from typing import Optional, Union
 
 import jax.numpy as jnp
 
@@ -99,17 +99,35 @@ def ldlt_factor(a: jnp.ndarray, block: BlockSpec = 128, *, variant: str = "la",
                        backend=be)
 
 
-def geqp3(a: jnp.ndarray, block: BlockSpec = 128, *, variant: str = "mtb",
+def geqp3(a: jnp.ndarray, block: BlockSpec = 128, *,
+          variant: Optional[str] = None,
+          local: bool = False, depth: int = 1,
           backend: BackendLike = "jnp") -> QRCPFactors:
     """Column-pivoted QR factor step (LAPACK GEQP3 → :class:`QRCPFactors`).
 
-    Note the default ``variant="mtb"`` and the *absence* of ``depth=``:
-    QRCP is look-ahead-excluded by policy (the pivot choice depends on the
-    fully updated trailing norms — DESIGN.md §11), so only ``mtb``/``rtm``/
-    ``tuned`` resolve.
+    ``local=False`` (default) is global pivoting: rank-revealing, but
+    look-ahead-excluded by policy (the pivot choice depends on the fully
+    updated trailing norms — DESIGN.md §11), so only ``mtb`` (the default)
+    / ``rtm`` / ``tuned`` resolve and ``depth`` must stay 1.
+
+    ``local=True`` routes through the windowed-pivoting ``qrcp_local`` DMF
+    (DESIGN.md §12): pivots never leave the panel window, which weakens the
+    rank-revealing guarantee (``|r_jj|`` non-increasing per window only)
+    but makes look-ahead legal — the default variant becomes ``la`` and
+    ``depth=`` keeps d panels in flight, same contract as the other
+    factor steps.  The returned :class:`QRCPFactors` is the same object
+    either way (``rank()``/rank-truncated ``solve`` read the diagonal).
     """
     be = _resolve(backend)
-    packed, taus, jpvt = get_variant("qrcp", variant)(a, block, backend=be)
+    if local:
+        dmf, variant = "qrcp_local", _deepen(variant or "la", depth)
+    else:
+        if depth != 1:
+            raise ValueError(
+                "depth > 1 requires local=True: global QRCP has no "
+                "look-ahead window to deepen (DESIGN.md §11)")
+        dmf, variant = "qrcp", variant or "mtb"
+    packed, taus, jpvt = get_variant(dmf, variant)(a, block, backend=be)
     return QRCPFactors(packed=packed, taus=taus, jpvt=jpvt,
                        block=_static_block(block), backend=be)
 
@@ -151,21 +169,31 @@ def posv(a: jnp.ndarray, b: jnp.ndarray, block: BlockSpec = 128, *,
 def gels(a: jnp.ndarray, b: jnp.ndarray, block: BlockSpec = 128, *,
          variant: str = "la", depth: int = 1,
          backend: BackendLike = "jnp", pivot: bool = False,
-         rcond=None) -> jnp.ndarray:
+         local: bool = False, rcond=None) -> jnp.ndarray:
     """Least-squares ``argmin‖A·X − B‖₂`` for m ≥ n via Householder QR.
 
     ``pivot=True`` routes through the column-pivoted factorization
     (:func:`geqp3`) and returns the rank-truncated basic solution — the
     GELSY path for rank-deficient systems, with ``rcond`` controlling the
-    rank cutoff.  Because QRCP has no look-ahead variant (DESIGN.md §11),
-    the default ``variant="la"`` is mapped to ``"mtb"`` on this path; an
-    explicitly requested variant is passed through unchanged.
+    rank cutoff.  Because global QRCP has no look-ahead variant
+    (DESIGN.md §11), the default ``variant="la"`` is mapped to ``"mtb"``
+    on this path; an explicitly requested variant is passed through
+    unchanged.  ``local=True`` (with ``pivot=True``) selects windowed
+    pivoting instead — look-ahead stays legal, so the ``variant``/
+    ``depth`` defaults pass through as for every other driver
+    (DESIGN.md §12; weaker rank-revealing guarantee).
     """
     if pivot:
+        if local:
+            return geqp3(a, block, variant=variant, local=True, depth=depth,
+                         backend=backend).solve(b, rcond=rcond)
         qv = "mtb" if (variant, depth) == ("la", 1) else _deepen(variant,
                                                                  depth)
         return geqp3(a, block, variant=qv, backend=backend).solve(
             b, rcond=rcond)
+    if local:
+        raise ValueError("local=True selects windowed *pivoting* and "
+                         "requires pivot=True")
     if rcond is not None:
         # silently dropping the rank cutoff would hand back the exploded
         # unpivoted solution rcond was meant to guard against

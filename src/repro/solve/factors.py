@@ -238,13 +238,19 @@ class LDLTFactors:
                    meta_fields=("block", "backend"))
 @dataclasses.dataclass(frozen=True)
 class QRCPFactors:
-    """GEQP3 output: ``A[:, jpvt] = Q·R`` with greedy column pivoting.
+    """Pivoted-QR output: ``A[:, jpvt] = Q·R`` (GEQP3 or ``qrcp_local``).
 
-    The pivoting makes R rank-revealing — ``|r_jj|`` is non-increasing, so
-    :meth:`rank` reads the numerical rank off the diagonal and
-    :meth:`solve` returns the rank-truncated basic least-squares solution
-    (GELSY semantics) instead of amplifying noise through a singular
-    trailing block the way unpivoted :class:`QRFactors` would.
+    The pivoting makes R rank-revealing — :meth:`rank` reads the numerical
+    rank off the diagonal and :meth:`solve` returns the rank-truncated
+    basic least-squares solution (GELSY semantics) instead of amplifying
+    noise through a singular trailing block the way unpivoted
+    :class:`QRFactors` would.  Both truncations are *diagonal-aware*
+    (``|r_jj| > rcond·max|r_jj|`` per column, not "keep the first rank()
+    columns"): under global GEQP3 pivoting ``|r_jj|`` is non-increasing so
+    the two are identical, but windowed ``qrcp_local`` pivoting
+    (DESIGN.md §12) only orders the diagonal within each panel window —
+    a deficient early window must not drag near-zero pivots into the
+    triangular solve.
     """
 
     packed: jnp.ndarray
@@ -269,28 +275,37 @@ class QRCPFactors:
     def apply_qt(self, c: jnp.ndarray) -> jnp.ndarray:
         return self._qr().apply_qt(c)
 
-    def rank(self, rcond=None) -> jnp.ndarray:
-        """Numerical rank: #{j : |r_jj| > rcond·|r_00|} (traced int)."""
+    def _keep(self, rcond) -> jnp.ndarray:
+        """Per-column truncation mask: ``|r_jj| > rcond·max_j|r_jj|``.
+
+        Under global pivoting the diagonal is non-increasing, so this is
+        exactly "the first rank() columns"; under windowed pivoting it
+        additionally drops deficient columns *inside* early windows.
+        """
         d = jnp.abs(jnp.diagonal(self.packed))
         if rcond is None:
             rcond = max(self.m, self.n) * jnp.finfo(self.packed.dtype).eps
-        return jnp.sum(d > rcond * d[0]).astype(jnp.int32)
+        return d > rcond * jnp.max(d)
+
+    def rank(self, rcond=None) -> jnp.ndarray:
+        """Numerical rank: #{j : |r_jj| > rcond·max|r_jj|} (traced int)."""
+        return jnp.sum(self._keep(rcond)).astype(jnp.int32)
 
     def solve(self, b: jnp.ndarray, *, rcond=None) -> jnp.ndarray:
         """Rank-truncated basic solution of ``min‖A·X − B‖₂`` (m ≥ n).
 
-        Columns beyond :meth:`rank` are masked out of the triangular solve
-        (their diagonal is replaced by 1 and their coupling zeroed), so the
-        solution is well-defined on rank-deficient systems — jit-friendly:
-        the truncation is a mask, not a dynamic slice.
+        Columns whose diagonal falls below the rank cutoff are masked out
+        of the triangular solve (their diagonal is replaced by 1 and their
+        coupling zeroed), so the solution is well-defined on rank-deficient
+        systems — jit-friendly: the truncation is a mask, not a dynamic
+        slice.
         """
         if self.m < self.n:
             raise ValueError("QRCPFactors.solve requires m >= n "
                              "(underdetermined systems need LQ)")
         b, was_vec = _as_matrix(b)
         n = self.n
-        r = self.rank(rcond)
-        keep = jnp.arange(n) < r
+        keep = self._keep(rcond)
         qtb = jnp.where(keep[:, None], self.apply_qt(b)[:n], 0.0)
         rmat = jnp.triu(self.packed[:n])
         mask2 = keep[:, None] & keep[None, :]

@@ -103,6 +103,19 @@ def _qrcp(n: int, k: int, bk: int, itemsize: int):
     return pf, tu, byts
 
 
+def _qrcp_local(n: int, k: int, bk: int, itemsize: int):
+    # Windowed pivoting (DESIGN.md §12): the pivot search never leaves the
+    # panel, so the panel cost collapses from GEQP3's trailing-wide F GEMVs
+    # to GEQR2-plus-pivot-bookkeeping — the same O(m·b²) shape as QR, which
+    # is exactly what makes its (legal) look-ahead worth scheduling.
+    r = n - k - bk
+    m = n - k
+    pf = 5.0 * bk * bk * m                           # GEQR2 + F + norm track
+    tu = 4.0 * bk * m * r                            # two GEMMs of the WY apply
+    byts = 3.0 * m * r * itemsize
+    return pf, tu, byts
+
+
 def _hessenberg(n: int, k: int, bk: int, itemsize: int):
     # GEHRD: panel dominated by the per-column A₀·v GEMVs over the full
     # matrix; the trailing update is two-sided (right over all n rows)
@@ -121,6 +134,7 @@ STEP_COSTS: Dict[str, Callable] = {
     "gauss_jordan": _gauss_jordan,
     "band_reduction": _band_reduction,
     "qrcp": _qrcp,
+    "qrcp_local": _qrcp_local,
     "hessenberg": _hessenberg,
 }
 

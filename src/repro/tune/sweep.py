@@ -14,7 +14,11 @@ The sweep for one ``(dmf, n, dtype)`` case:
    — the paper's §5 early-termination analogue).  Since the variant space
    includes the depth-suffixed look-ahead names (``"la2"`` from
    ``list_variants``, or any ``"la<d>"`` passed explicitly), look-ahead
-   depth is swept like any other knob and recorded in the cache entry;
+   depth is swept like any other knob and recorded in the cache entry.
+   Deep candidates are pruned twice: structurally (a depth-d window needs
+   > d panels) and by the §9 cost model (a deep window the model scores no
+   faster than its depth-1 twin — every iteration update-bound — is never
+   measured);
 2. rank them with the analytical model (:mod:`repro.tune.model`, seeded
    from the roofline constants) and keep the top-``k`` — only those are
    measured, per the co-design methodology in PAPERS.md;
@@ -127,7 +131,7 @@ def _candidates(dmf: str, n: int, dtype, blocks: Sequence[int],
     out = []
     for be in backends:
         for v in variants:
-            depth = parse_variant(v)[1]
+            base, depth = parse_variant(v)
             for b in blocks:
                 if b > n:
                     continue
@@ -137,6 +141,20 @@ def _candidates(dmf: str, n: int, dtype, blocks: Sequence[int],
                     # shallower schedule — don't measure duplicates
                     if depth > 1 and len(s) <= depth:
                         continue
+                    # §9 cost-model depth pruning (ROADMAP): a deeper
+                    # window only pays when some iteration is panel-bound
+                    # (model: step = max(PF/(amortized depth), TU)).  If
+                    # the model sees no gain over the same schedule at
+                    # depth 1, the deep candidate cannot beat its shallow
+                    # twin on the wall clock either — don't measure it.
+                    if depth > 1:
+                        try:
+                            if not (model.predict(dmf, n, dtype, v, s, be)
+                                    < model.predict(dmf, n, dtype, base, s,
+                                                    be)):
+                                continue
+                        except (KeyError, ValueError):
+                            pass          # unmodeled DMF/schedule: measure
                     out.append(Candidate(variant=v, schedule=s, backend=be))
     return out
 

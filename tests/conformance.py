@@ -43,7 +43,7 @@ from repro.core.lookahead import FACTORIZATIONS, get_variant, list_variants, \
 #: on CPU) rather than falling back to plain ``la``.
 FUSED_LA_MB = ("lu", "cholesky")
 #: DMFs accepting rectangular inputs.
-RECTANGULAR = ("qr", "qrcp")
+RECTANGULAR = ("qr", "qrcp", "qrcp_local")
 
 # class name -> (m, n, block).  Block 16 makes "ragged" clip the last panel
 # and "small" a single clipped panel; "one" is the degenerate 1×1 sweep.
@@ -204,6 +204,43 @@ def _check_qrcp(a, out, tol, b, backend):
     assert np.all(d[1:] <= d[:-1] * slack + 1e-30), d
 
 
+def assert_window_invariants(packed, jpvt, b, *, slack):
+    """The ``qrcp_local`` windowed-pivoting contract (DESIGN.md §12).
+
+    ``jpvt`` is a valid permutation whose pivots never leave their panel
+    window, and ``|r_jj|`` is non-increasing *within each window* (up to
+    ``slack``) — deliberately weaker than global QRCP's monotonicity.
+    ``b`` is a scalar block or a schedule; shared by the conformance
+    checker, test_panels, test_property, and test_schedules so the window
+    invariant lives in exactly one place.
+    """
+    from repro.core.blocking import panel_steps
+
+    n = packed.shape[1]
+    d = np.abs(np.asarray(jnp.diagonal(packed)))
+    jp = np.asarray(jpvt)
+    assert sorted(jp.tolist()) == list(range(n))
+    for st in panel_steps(n, b):
+        w = d[st.k : st.k_next]           # clips at min(m, n) on wide inputs
+        assert np.all(w[1:] <= w[:-1] * slack + 1e-30), (st.k, w)
+        assert set(jp[st.k : st.k_next].tolist()) \
+            == set(range(st.k, st.k_next)), st.k
+
+
+def _check_qrcp_local(a, out, tol, b, backend):
+    # Windowed pivoting (DESIGN.md §12): same factorization contract as
+    # QRCP, but the greedy-pivot monotonicity of |r_jj| holds only *within
+    # each panel window* — the documented weaker rank-revealing guarantee.
+    packed, taus, jpvt = out
+    m = a.shape[0]
+    q = Q.form_q(packed, taus, b)
+    r = jnp.triu(packed)
+    assert _rel(a[:, jpvt] - q @ r, a) < tol
+    assert float(jnp.linalg.norm(q.T @ q - jnp.eye(m, dtype=a.dtype))) < tol
+    assert_window_invariants(packed, jpvt, b,
+                             slack=1.0 + 1e3 * float(jnp.finfo(a.dtype).eps))
+
+
 def _check_ldlt(a, packed, tol, b, backend):
     assert float(jnp.abs(jnp.triu(packed, 1)).max()) == 0.0
     l, d = D.unpack_ldlt(packed)
@@ -241,6 +278,7 @@ CHECKS = {
     "cholesky": _check_cholesky,
     "qr": _check_qr,
     "qrcp": _check_qrcp,
+    "qrcp_local": _check_qrcp_local,
     "ldlt": _check_ldlt,
     "gauss_jordan": _check_gauss_jordan,
     "band_reduction": _check_band_reduction,

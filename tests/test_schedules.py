@@ -72,6 +72,19 @@ def _check_ldlt(a, packed, tol):
     assert jnp.linalg.norm(l @ (d[:, None] * l.T) - a) / jnp.linalg.norm(a) < tol
 
 
+def _check_qrcp_local(a, out, tol, sched):
+    # ISSUE 5: windowed pivoting under a non-uniform schedule — the pivot
+    # windows *are* the schedule's panels, so the per-window invariants
+    # must hold for whatever widths the tuner hands the driver.
+    from conformance import assert_window_invariants
+
+    packed, taus, jpvt = out
+    q = form_q(packed, taus, sched)
+    r = jnp.triu(packed)
+    assert jnp.linalg.norm(q @ r - a[:, jpvt]) / jnp.linalg.norm(a) < tol
+    assert_window_invariants(packed, jpvt, sched, slack=1 + 1e-12)
+
+
 def _check_gj(a, inv, tol):
     eye = jnp.eye(a.shape[0], dtype=a.dtype)
     assert jnp.linalg.norm(a @ inv - eye) / jnp.linalg.norm(inv) < tol
@@ -87,6 +100,7 @@ DMFS = {
     "lu": (_rand, lambda a, o, t, s: _check_lu(a, o, t)),
     "cholesky": (_spd, lambda a, o, t, s: _check_cholesky(a, o, t)),
     "qr": (_rand, _check_qr),
+    "qrcp_local": (_rand, _check_qrcp_local),
     "ldlt": (_spd, lambda a, o, t, s: _check_ldlt(a, o, t)),
     "gauss_jordan": (_spd, lambda a, o, t, s: _check_gj(a, o, t)),
     "band_reduction": (_rand, lambda a, o, t, s: _check_band(a, o, t)),

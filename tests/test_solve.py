@@ -221,6 +221,68 @@ def test_new_drivers_reject_lookahead_variant():
         geqp3(a, 8, variant="la")
     with pytest.raises(KeyError, match="look-ahead is excluded"):
         gehrd(a, 8, variant="la2")
+    with pytest.raises(ValueError, match="local=True"):
+        geqp3(a, 8, depth=2)              # global QRCP has no la window
+
+
+def test_geqp3_local_lookahead_path():
+    """ISSUE 5: geqp3(local=True) routes through the windowed-pivoting
+    qrcp_local DMF, where look-ahead (the default, any depth) is legal."""
+    a = _rand((48, 32), 67, np.float64)
+    b = _rand((48, 3), 68, np.float64)
+    facs = geqp3(a, 16, local=True)       # default variant="la"
+    assert isinstance(facs, QRCPFactors)
+    assert int(facs.rank()) == 32
+    x_local = facs.solve(b)
+    x_plain = gels(a, b, 16)
+    np.testing.assert_allclose(np.asarray(x_local), np.asarray(x_plain),
+                               atol=1e-10)
+    # depth is a real knob on this path — and changes nothing numerically
+    deep = geqp3(a, 16, local=True, depth=2)
+    np.testing.assert_array_equal(np.asarray(deep.jpvt),
+                                  np.asarray(facs.jpvt))
+    np.testing.assert_allclose(np.asarray(deep.packed),
+                               np.asarray(facs.packed), atol=1e-11)
+
+
+def test_geqp3_local_early_window_deficiency_stays_bounded():
+    """The truncation mask must be diagonal-aware, not keep-first-rank():
+    under windowed pivoting a rank-deficient *early* window leaves
+    near-zero |r_jj| ahead of large later-window pivots, and masking by
+    position would divide by them (‖x‖ ~ 1e15)."""
+    rng = np.random.default_rng(70)
+    r = 6
+    left = rng.standard_normal((40, r)) @ rng.standard_normal((r, 16))
+    right = rng.standard_normal((40, 16))
+    a = jnp.asarray(np.hstack([left, right]))   # window 0 rank-6, window 1 full
+    b = jnp.asarray(rng.standard_normal((40,)))
+    facs = geqp3(a, 16, local=True)
+    assert int(facs.rank(rcond=1e-8)) == r + 16
+    x = facs.solve(b, rcond=1e-8)
+    assert bool(jnp.isfinite(x).all())
+    assert float(jnp.linalg.norm(x)) < 1e3       # bounded basic solution
+    # the kept columns solve their subsystem: residual comparable to the
+    # globally-pivoted one, not a blow-up
+    res = float(jnp.linalg.norm(a @ x - b))
+    res_global = float(jnp.linalg.norm(a @ geqp3(a, 16).solve(b, rcond=1e-8)
+                                       - b))
+    assert res < 10 * max(res_global, 1e-8), (res, res_global)
+
+
+def test_geqp3_local_rank_deficient_gels():
+    """gels(pivot=True, local=True): rank-truncated solve under the
+    windowed pivoting — same GELSY semantics, look-ahead schedule."""
+    rng = np.random.default_rng(69)
+    r = 6
+    a = jnp.asarray(rng.standard_normal((40, r))
+                    @ rng.standard_normal((r, 24)))
+    b = jnp.asarray(rng.standard_normal((40, 2)))
+    assert int(geqp3(a, 16, local=True).rank(rcond=1e-8)) == r
+    x = gels(a, b, 16, pivot=True, local=True, rcond=1e-8)
+    assert float(jnp.linalg.norm(a.T @ (a @ x - b))) < 1e-9
+    assert float(jnp.linalg.norm(x)) < 1e3
+    with pytest.raises(ValueError, match="pivot=True"):
+        gels(a, b, 16, local=True)        # local pivoting needs pivot=True
 
 
 # ---------------------------------------------------------------------------

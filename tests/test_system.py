@@ -27,7 +27,7 @@ def test_lookahead_never_changes_results():
     a = jnp.asarray(rng.standard_normal((n, n)))
     spd = a @ a.T + n * jnp.eye(n)
     inputs = {
-        "lu": a, "qr": a, "band_reduction": a,
+        "lu": a, "qr": a, "qrcp_local": a, "band_reduction": a,
         "cholesky": spd, "ldlt": spd, "gauss_jordan": spd,
     }
     for dmf in FACTORIZATIONS:

@@ -375,6 +375,54 @@ def test_candidates_include_depth_variants():
     assert one == []
 
 
+def test_candidates_depth_pruned_by_cost_model(monkeypatch):
+    """ISSUE 5 satellite: the depth axis is pruned with the §9 model, not
+    the ≤-panels rule only — a deep window the model scores no faster than
+    its depth-1 twin (every iteration update-bound) is never measured."""
+    from repro.core.lookahead import parse_variant
+
+    def flat(dmf, n, dtype, variant, schedule, backend="jnp"):
+        return 1.0                        # model sees no depth benefit
+
+    monkeypatch.setattr(search_mod.model, "predict", flat)
+    cands = search_mod._candidates("lu", N, np.float32, (16,),
+                                   ("la", "la2"), ("jnp",))
+    assert cands and all(c.variant == "la" for c in cands)
+
+    def rewarding(dmf, n, dtype, variant, schedule, backend="jnp"):
+        return 1.0 / parse_variant(variant)[1]
+
+    monkeypatch.setattr(search_mod.model, "predict", rewarding)
+    cands = search_mod._candidates("lu", N, np.float32, (16,),
+                                   ("la", "la2"), ("jnp",))
+    assert any(c.variant == "la2" for c in cands)
+    # the structural ≤-panels rule still applies on top of the model
+    one = search_mod._candidates("lu", 16, np.float32, (16,), ("la2",),
+                                 ("jnp",))
+    assert one == []
+
+
+def test_qrcp_local_swept_with_lookahead_baseline(cache, monkeypatch):
+    """ISSUE 5: qrcp_local is tunable with the *la* fixed-b baseline — the
+    la→mtb fallback is only for the look-ahead-excluded DMFs now."""
+    measured = []
+
+    def fake_measure(dmf, cand, a, **kw):
+        measured.append(cand)
+        return 1e-3
+
+    monkeypatch.setattr(search_mod, "_measure", fake_measure)
+    cfg = tune.search("qrcp_local", 32, blocks=(16,), top_k=2, repeats=1,
+                      cache=cache)
+    assert cfg.dmf == "qrcp_local"
+    assert any(c.variant == "la" for c in measured)
+    # …while the excluded DMFs keep falling back to mtb for their baseline
+    measured.clear()
+    tune.search("qrcp", 32, blocks=(16,), top_k=2, repeats=1, cache=cache)
+    assert any(c.variant == "mtb" for c in measured)
+    assert not any(c.variant.startswith("la") for c in measured)
+
+
 def test_search_records_depth_and_dispatches_it(cache, monkeypatch):
     # force a depth-2 winner, then check the cached entry round-trips and
     # "tuned" dispatch runs it
