@@ -1,0 +1,201 @@
+"""Synthetic-load harness for the solve server (DESIGN.md §13).
+
+    PYTHONPATH=src python -m benchmarks.bench_serve_solver \
+        [--requests N] [--seconds S] [--json PATH] [--verify]
+
+Two load modes over a mixed shape/dmf distribution:
+
+* closed-loop (default): submit ``--requests`` requests as fast as the
+  server absorbs them, pumping between submissions — measures sustained
+  throughput and the bucketed-vs-naive speedup the ISSUE acceptance
+  criterion requires (>= 3x a one-request-at-a-time ``gesv`` loop).
+* open-loop (``--seconds``): Poisson-less fixed-interval arrivals for a
+  wall-clock budget — measures p50/p99 under queueing (the CI smoke job).
+
+``--verify`` recomputes a deterministic sample of responses with the eager
+unbatched driver (the reference is ~4 s/call of Python dispatch, so checking
+all of them would dwarf the measurement) and counts bitwise mismatches —
+must be zero.  Exhaustive bitwise coverage lives in
+``tests/test_serve_solver.py``; the sample here is an end-to-end smoke of
+the same contract under real mixed load.  ``--json`` writes one
+BENCH_serve.json trajectory row: throughput, p50/p99, speedup, cache hit
+rate, commit.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+import numpy as np
+
+from benchmarks.common import git_commit
+
+
+#: Mixed request distribution: (dmf, m, n, nrhs, weight).
+MIX = [
+    ("gesv", 48, 48, 2, 4),
+    ("gesv", 33, 33, 1, 3),
+    ("gesv", 64, 64, 4, 3),
+    ("posv", 40, 40, 2, 2),
+    ("gels", 56, 30, 2, 2),
+    ("geqp3", 80, 17, 1, 1),
+]
+
+
+def _requests(rng, count):
+    kinds = [m[:4] for m in MIX]
+    weights = np.array([m[4] for m in MIX], dtype=float)
+    weights /= weights.sum()
+    picks = rng.choice(len(kinds), size=count, p=weights)
+    out = []
+    for k in picks:
+        dmf, m, n, nrhs = kinds[k]
+        a = rng.standard_normal((m, n)).astype(np.float32)
+        if dmf == "posv":
+            a = a @ a.T + n * np.eye(n, dtype=np.float32)
+        b = rng.standard_normal((m, nrhs)).astype(np.float32)
+        out.append((dmf, a, b))
+    return out
+
+def _reference(dmf, a, b, block=32):
+    import jax.numpy as jnp
+    from repro.solve import drivers
+    a, b = jnp.asarray(a), jnp.asarray(b)
+    if dmf == "geqp3":
+        return drivers.gels(a, b, block, pivot=True)
+    return getattr(drivers, dmf)(a, b, block)
+
+
+def _naive_gesv_throughput(rng, seconds_budget=8.0, n=48, nrhs=2):
+    """One-request-at-a-time eager gesv loop — the baseline to beat 3x."""
+    from repro.solve import drivers
+    import jax
+    import jax.numpy as jnp
+    a = jnp.asarray(rng.standard_normal((n, n)).astype(np.float32))
+    b = jnp.asarray(rng.standard_normal((n, nrhs)).astype(np.float32))
+    jax.block_until_ready(drivers.gesv(a, b, 32))       # warm the op caches
+    count, t0 = 0, time.perf_counter()
+    while time.perf_counter() - t0 < seconds_budget:
+        jax.block_until_ready(drivers.gesv(a, b, 32))
+        count += 1
+    return count / (time.perf_counter() - t0)
+
+
+def run(requests=256, seconds=None, verify=False, seed=0):
+    from repro.serve import ServerConfig, SolveServer
+
+    rng = np.random.default_rng(seed)
+    srv = SolveServer(ServerConfig(max_batch=16, max_wait_s=0.005))
+
+    # warmup: compile every bucket executable in the mix at full batch
+    warm = _requests(rng, 64)
+    for dmf, a, b in warm:
+        srv.submit(dmf, a, b)
+    srv.drain()
+    for r in list(srv._responses):
+        srv.take(r)
+    srv.metrics = type(srv.metrics)()                    # reset counters
+    srv._wall0 = None
+
+    load = _requests(rng, requests)
+    inflight = {}
+    t0 = time.perf_counter()
+    if seconds is None:                                  # closed loop
+        for i, (dmf, a, b) in enumerate(load):
+            inflight[srv.submit(dmf, a, b)] = (dmf, a, b)
+            if i % 8 == 7:
+                srv.pump()
+        srv.drain()
+    else:                                                # open loop
+        interval = seconds / max(1, len(load))
+        for i, (dmf, a, b) in enumerate(load):
+            target = t0 + i * interval
+            while time.perf_counter() < target:
+                srv.pump()
+            inflight[srv.submit(dmf, a, b)] = (dmf, a, b)
+            srv.pump()
+        deadline = time.perf_counter() + 5.0
+        while srv.pending() and time.perf_counter() < deadline:
+            srv.pump()
+        srv.drain()
+    wall = time.perf_counter() - t0
+
+    # factor-once/solve-many phase: repeated solves against 4 cached matrices
+    mats = [_requests(rng, 1)[0] for _ in range(4)]
+    cached_ids = {}
+    for round_ in range(4):
+        for dmf, a, _ in mats:
+            if dmf not in ("gesv", "posv"):
+                continue
+            b = rng.standard_normal((a.shape[0], 2)).astype(np.float32)
+            cached_ids[srv.submit(dmf, a, b, cache=True)] = (dmf, a, b)
+        srv.drain()
+
+    bad = checked = 0
+    if verify:
+        # deterministic sample: the eager reference costs seconds per call,
+        # so check every cached-path response plus a spread of the load
+        ids = list(inflight.items())
+        stride = max(1, len(ids) // 12)
+        sample = ids[::stride][:12] + list(cached_ids.items())[:8]
+        for rid, (dmf, a, b) in sample:
+            resp = srv.take(rid)
+            ref = _reference(dmf, a, b)
+            checked += 1
+            if not bool((np.asarray(resp.x) == np.asarray(ref)).all()):
+                bad += 1
+
+    summ = srv.summary()
+    naive = _naive_gesv_throughput(rng)
+    served = len(load) / wall
+    row = {
+        "bench": "serve_solver",
+        "mode": "open" if seconds else "closed",
+        "requests": len(load),
+        "wall": wall,
+        "req_per_s": served,
+        "naive_req_per_s": naive,
+        "speedup_vs_naive": served / naive if naive else None,
+        "p50_ms": summ["p50_ms"],
+        "p99_ms": summ["p99_ms"],
+        "gflops_per_s": summ["gflops_per_s"],
+        "cache_hit_rate": srv.factor_cache.hit_rate,
+        "verified_responses": checked if verify else None,
+        "bitwise_mismatches": bad if verify else None,
+        "commit": git_commit(),
+    }
+    return row, srv.snapshot()
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=256)
+    ap.add_argument("--seconds", type=float, default=None,
+                    help="open-loop arrival window (default: closed loop)")
+    ap.add_argument("--verify", action="store_true",
+                    help="recompute every response unbatched; count "
+                         "bitwise mismatches")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="append the trajectory row to PATH")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    row, snap = run(args.requests, args.seconds, args.verify, args.seed)
+    print(json.dumps(row, indent=2, sort_keys=True))
+    interesting = {k: round(v, 4) for k, v in snap.items()
+                   if any(s in k for s in ("bucket_fill", "padding_waste",
+                                           "latency", "cache", "compiles"))}
+    print("# snapshot:", json.dumps(interesting, sort_keys=True),
+          file=sys.stderr)
+    if args.json:
+        with open(args.json, "a") as f:
+            f.write(json.dumps(row, sort_keys=True) + "\n")
+        print(f"# wrote {args.json}", file=sys.stderr)
+    if args.verify and row["bitwise_mismatches"]:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -8,6 +8,9 @@ correctness in tests and analyzed via the dry-run rooflines instead.
 """
 from __future__ import annotations
 
+import json
+import re
+import subprocess
 import time
 
 import jax
@@ -35,6 +38,51 @@ def emit(name: str, seconds: float, derived: str) -> str:
 
 def gflops(flops: float, seconds: float) -> float:
     return flops / seconds / 1e9
+
+
+def git_commit() -> str:
+    """Short commit hash of the working tree ('unknown' outside a repo)."""
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], capture_output=True,
+            text=True, timeout=10, check=True).stdout.strip()
+    except Exception:
+        return "unknown"
+
+
+def parse_row(row: str, commit: str = "unknown") -> dict:
+    """Structured trajectory record from a ``name,us,derived`` CSV row.
+
+    Schema (BENCH_*.json): bench, n, b, variant, gflops, wall, commit —
+    parsed best-effort from the emit naming convention
+    ``{bench}_{variant}_n{n}_b{b}`` so re-anchor tooling can chart a perf
+    curve across commits without re-parsing free-form CSV.
+    """
+    name, us, derived = row.split(",", 2)
+    parts = name.split("_")
+    nm = re.search(r"_n(\d+)", name)
+    bm = re.search(r"_b(\d+)", name)
+    gm = re.search(r"([\d.]+)GFLOPS", derived)
+    variant = [p for p in parts[1:]
+               if not re.fullmatch(r"[nb]\d+|\d+x\d+|rhs\d+", p)]
+    return {
+        "bench": parts[0],
+        "n": int(nm.group(1)) if nm else None,
+        "b": int(bm.group(1)) if bm else None,
+        "variant": "_".join(variant) or None,
+        "gflops": float(gm.group(1)) if gm else None,
+        "wall": float(us) * 1e-6,
+        "commit": commit,
+    }
+
+
+def write_json_rows(path: str, rows: list, commit: str = None) -> None:
+    """Write CSV rows as JSON-lines trajectory records (BENCH_*.json)."""
+    commit = commit or git_commit()
+    with open(path, "w") as f:
+        for row in rows:
+            f.write(json.dumps(parse_row(row, commit),
+                               sort_keys=True) + "\n")
 
 
 def random_matrix(n: int, seed: int = 0, dtype=np.float32):

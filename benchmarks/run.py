@@ -56,6 +56,9 @@ def main(argv=None) -> None:
                     help="run only benchmark groups whose name contains NAME")
     ap.add_argument("--csv", default=None, metavar="PATH",
                     help="also write the aggregated rows to PATH")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write BENCH_*.json trajectory rows (schema: "
+                         "bench, n, b, variant, gflops, wall, commit)")
     args = ap.parse_args(argv)
 
     groups = _groups(args)
@@ -81,6 +84,11 @@ def main(argv=None) -> None:
             f.write(CSV_HEADER + "\n")
             f.writelines(row + "\n" for row in rows)
         print(f"# wrote {args.csv}", file=sys.stderr)
+
+    if args.json:
+        from benchmarks.common import write_json_rows
+        write_json_rows(args.json, rows)
+        print(f"# wrote {args.json}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -36,6 +36,9 @@ def main():
           f"tokens")
     print(f"prefill {stats['prefill_s']*1e3:.1f} ms | "
           f"decode {stats['decode_tok_per_s']:.1f} tok/s")
+    # shared serve-layer schema — same line shape as examples/solve_server.py
+    print(f"wall {stats['wall']:.2f} s | {stats['items_per_s']:.1f} tok/s | "
+          f"p50 {stats['p50_ms']:.1f} ms | p99 {stats['p99_ms']:.1f} ms")
     print("sample:", tokens[0, :12].tolist())
 
 

@@ -12,8 +12,10 @@ paper's separation between the DMF framework (§3) and the BLAS layer (§2).
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Callable
 
+import jax
 import jax.numpy as jnp
 from jax import lax
 
@@ -25,13 +27,70 @@ def _acc_dtype(dtype) -> jnp.dtype:
     return dtype
 
 
+#: K-dimension quantum for :func:`gemm_jnp` — every contraction is zero-padded
+#: to a multiple of this and accumulated chunk-by-chunk in a fixed order.
+_GEMM_KQ = 128
+#: M/N-dimension quanta.  XLA picks its CPU dot kernel by shape (an M=1
+#: product lowers to a matvec whose batched variant reassociates; small-M
+#: and large-M tilings differ), so M and N are padded to multiples of 32.
+#: With 32-aligned serve buckets this makes every GEMM in a padded run have
+#: exactly the same operand shapes as in the raw-shape run — kernel choice,
+#: and therefore accumulation order, cannot diverge between the two.
+_GEMM_MQ = 32
+_GEMM_NQ = 32
+
+
+@jax.jit
 def gemm_jnp(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
-    """C = A·B with f32 accumulation for bf16 inputs."""
-    out = jnp.matmul(a, b, preferred_element_type=_acc_dtype(a.dtype))
-    return out.astype(a.dtype)
+    """C = A·B with f32 accumulation for bf16 inputs.
+
+    jit-wrapped so an *eager* driver call costs one cached executable per
+    shape instead of ~8 dispatched ops (pad, two scatters, dot, slice, …);
+    inside an outer ``jit``/``vmap`` trace the wrapper inlines.  Fusion does
+    not move the dots, so the bitwise contract below survives the wrapper —
+    ``tests/test_serve_solver.py`` pins jit == eager across the full
+    dmf × dtype matrix.
+
+    Canonicalized for bitwise reproducibility (DESIGN.md §13): XLA's dot
+    accumulation order over K depends on the *total* K (and an M=1 product
+    lowers to a matvec with a different batched kernel), so a zero-padded or
+    ``vmap``-batched GEMM is not bit-identical to the unpadded/unbatched one
+    in general.  Here M is padded to a multiple of ``_GEMM_MQ`` and K to a
+    multiple of ``_GEMM_KQ``, and chunks of ``_GEMM_KQ`` are accumulated
+    sequentially — so the result depends only on the real values, never on
+    how much zero padding or batching surrounds them.  This is what lets the
+    serve layer promise padded+batched == unbatched bitwise.
+    """
+    acc = _acc_dtype(a.dtype)
+    if a.ndim != 2 or b.ndim != 2:
+        out = jnp.matmul(a, b, preferred_element_type=acc)
+        return out.astype(a.dtype)
+    m, k = a.shape
+    n = b.shape[1]
+    kp = max(_GEMM_KQ, -(-k // _GEMM_KQ) * _GEMM_KQ)
+    mp = -(-m // _GEMM_MQ) * _GEMM_MQ
+    np_ = -(-n // _GEMM_NQ) * _GEMM_NQ
+    ap = a if (m == mp and k == kp) else (
+        jnp.zeros((mp, kp), a.dtype).at[:m, :k].set(a))
+    bp = b if (k == kp and n == np_) else (
+        jnp.zeros((kp, np_), b.dtype).at[:k, :n].set(b))
+    if kp == _GEMM_KQ:
+        out = jnp.matmul(ap, bp, preferred_element_type=acc)
+    else:
+        def body(i, c):
+            ac = lax.dynamic_slice_in_dim(ap, i * _GEMM_KQ, _GEMM_KQ, 1)
+            bc = lax.dynamic_slice_in_dim(bp, i * _GEMM_KQ, _GEMM_KQ, 0)
+            return c + jnp.matmul(ac, bc, preferred_element_type=acc)
+        out = lax.fori_loop(0, kp // _GEMM_KQ, body,
+                            jnp.zeros((mp, np_), acc))
+    return out[:m, :n].astype(a.dtype)
 
 
-def trsm_jnp(
+#: Width of the substitution diagonal blocks inside :func:`trsm_jnp`.
+_TRSM_DIAG = 32
+
+
+def _trsm_impl(
     t: jnp.ndarray,
     b: jnp.ndarray,
     *,
@@ -40,16 +99,63 @@ def trsm_jnp(
     trans: bool = False,
     unit_diagonal: bool = False,
 ) -> jnp.ndarray:
-    """Solve ``op(T)·X = B`` (side=left) or ``X·op(T) = B`` (side=right)."""
-    if side == "left":
-        return lax.linalg.triangular_solve(
-            t, b, left_side=True, lower=lower,
-            transpose_a=trans, unit_diagonal=unit_diagonal)
-    elif side == "right":
-        return lax.linalg.triangular_solve(
-            t, b, left_side=False, lower=lower,
-            transpose_a=trans, unit_diagonal=unit_diagonal)
-    raise ValueError(f"side must be left/right, got {side}")
+    """Solve ``op(T)·X = B`` (side=left) or ``X·op(T) = B`` (side=right).
+
+    Implemented as blocked substitution (elementwise column sweeps on
+    ``_TRSM_DIAG``-wide diagonal blocks, GEMM off-diagonal updates) rather
+    than ``lax.linalg.triangular_solve``: the lax primitive lowers to a
+    *different algorithm* when a batch dimension is present, so a
+    ``vmap``-batched solve is not bit-identical to the unbatched one.  The
+    serving layer's reproducibility contract (DESIGN.md §13) requires
+    batched == unbatched bitwise, and elementwise ops + GEMM are the
+    primitives that lower identically with and without batch dimensions.
+    """
+    if side == "right":
+        # X·op(T) = B  ⇔  op(T)ᵀ·Xᵀ = Bᵀ; transposing T flips lower/upper
+        # unless op already transposes.
+        if trans:
+            return _trsm_impl(t, b.T, side="left", lower=lower, trans=False,
+                            unit_diagonal=unit_diagonal).T
+        return _trsm_impl(t.T, b.T, side="left", lower=not lower, trans=False,
+                        unit_diagonal=unit_diagonal).T
+    if side != "left":
+        raise ValueError(f"side must be left/right, got {side}")
+    if trans:
+        return _trsm_impl(t.T, b, side="left", lower=not lower, trans=False,
+                        unit_diagonal=unit_diagonal)
+
+    m = t.shape[0]
+    blocks = [(k, min(_TRSM_DIAG, m - k)) for k in range(0, m, _TRSM_DIAG)]
+    if not lower:
+        blocks = list(reversed(blocks))
+    x = b
+    for k, bk in blocks:
+        tkk = t[k : k + bk, k : k + bk]
+        rows = jnp.arange(bk)[:, None]
+
+        def body(i, xk, tkk=tkk, bk=bk, rows=rows, lower=lower):
+            j = i if lower else bk - 1 - i
+            xj = xk[j] if unit_diagonal else xk[j] / tkk[j, j]
+            xk = xk.at[j].set(xj)
+            mask = (rows > j) if lower else (rows < j)
+            return jnp.where(mask, xk - tkk[:, j][:, None] * xj[None, :],
+                             xk).astype(xk.dtype)
+
+        xk = lax.fori_loop(0, bk, body, x[k : k + bk])
+        x = x.at[k : k + bk].set(xk)
+        rem = slice(k + bk, m) if lower else slice(0, k)
+        if rem.start < rem.stop:
+            x = x.at[rem].set(
+                (x[rem] - gemm_jnp(t[rem, k : k + bk], xk)).astype(x.dtype))
+    return x
+
+
+#: jit entry point for the same reason as :func:`gemm_jnp` — an eager
+#: substitution solve is a storm of scatter/fori dispatches otherwise
+#: (the lax primitive it replaced was one op; this claws that back).
+trsm_jnp = functools.wraps(_trsm_impl)(jax.jit(
+    _trsm_impl,
+    static_argnames=("side", "lower", "trans", "unit_diagonal")))
 
 
 @dataclasses.dataclass(frozen=True)

@@ -22,7 +22,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core import pipeline
-from repro.core.backend import Backend, JNP_BACKEND
+from repro.core.backend import Backend, JNP_BACKEND, gemm_jnp
 from repro.core.blocking import BlockSpec, panel_steps
 from repro.core.pipeline import StepOps
 
@@ -40,6 +40,19 @@ __all__ = [
 ]
 
 
+def _dot_sq(x: jnp.ndarray) -> jnp.ndarray:
+    """``Σ x²`` as a (1×m)·(m×1) GEMM instead of a ``jnp.sum`` reduction.
+
+    A plain reduction re-associates when the axis is zero-padded (the
+    reduction tree is a function of the *total* length), and the serving
+    layer pads systems to bucket boundaries while promising bit-identical
+    results (DESIGN.md §13).  :func:`gemm_jnp` canonicalizes the K dimension,
+    so appending exact zeros leaves every partial sum bit-identical — the
+    same property that makes it stable under ``vmap`` batching.
+    """
+    return gemm_jnp(x[None, :], x[:, None])[0, 0]
+
+
 def householder_vector(x: jnp.ndarray, j: int
                        ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Reflector ``H = I − tau·v·vᵀ`` zeroing ``x[j+1:]``, with ``v[j] = 1``.
@@ -54,7 +67,7 @@ def householder_vector(x: jnp.ndarray, j: int
     rows = jnp.arange(x.shape[0])
     xm = jnp.where(rows >= j, x, 0.0).astype(x.dtype)
     alpha = x[j]
-    xnorm = jnp.sqrt(jnp.sum(xm * xm))
+    xnorm = jnp.sqrt(_dot_sq(xm))
     sign = jnp.where(alpha >= 0, 1.0, -1.0).astype(x.dtype)
     beta = -sign * xnorm
     safe = xnorm > 0                     # degenerate column: H = I, tau = 0
@@ -80,7 +93,7 @@ def qr_unblocked(panel: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
         a, tau = carry
         x = jnp.where(rows >= j, a[:, j], 0.0).astype(a.dtype)
         alpha = a[j, j]
-        xnorm = jnp.sqrt(jnp.sum(x * x))
+        xnorm = jnp.sqrt(_dot_sq(x))
         sign = jnp.where(alpha >= 0, 1.0, -1.0).astype(a.dtype)
         beta = -sign * xnorm
         # degenerate column (xnorm == 0): H_j = I, tau = 0
@@ -90,8 +103,10 @@ def qr_unblocked(panel: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
         v = jnp.where(rows > j, x / denom, 0.0).astype(a.dtype)
         v = v.at[j].set(1.0)
         v = jnp.where(rows >= j, v, 0.0).astype(a.dtype)
-        # apply H_j to the remaining columns (> j)
-        w = tau_j * (v @ a)                      # (nb,)
+        # apply H_j to the remaining columns (> j) — the row·matrix product
+        # in (1×m)·(m×nb) GEMM form: a GEMV lowers to a different (non-
+        # vmap-bit-stable) kernel (DESIGN.md §13)
+        w = tau_j * gemm_jnp(v[None, :], a)[0]   # (nb,)
         w = jnp.where(cols > j, w, 0.0).astype(a.dtype)
         a = a - jnp.outer(v, w)
         # store beta on the diagonal, v below it
@@ -117,13 +132,13 @@ def unpack_v(packed: jnp.ndarray, nb: int) -> jnp.ndarray:
 def build_t_matrix(v: jnp.ndarray, tau: jnp.ndarray) -> jnp.ndarray:
     """LARFT (forward, columnwise): T s.t. ``H_1…H_nb = I − V·T·Vᵀ``."""
     nb = tau.shape[0]
-    vtv = v.T @ v                                 # (nb, nb)
+    vtv = gemm_jnp(v.T, v)                        # (nb, nb)
     idx = jnp.arange(nb)
 
     def body(j, t):
         colmask = idx < j
         rhs = jnp.where(colmask, vtv[:, j], 0.0).astype(v.dtype)
-        newcol = -tau[j] * (t @ rhs)
+        newcol = -tau[j] * gemm_jnp(t, rhs[:, None])[:, 0]   # GEMM form, §13
         newcol = jnp.where(colmask, newcol, 0.0).at[j].set(tau[j])
         return t.at[:, j].set(newcol.astype(v.dtype))
 

@@ -56,6 +56,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core.backend import gemm_jnp
+
 __all__ = [
     "lu_panel", "qr_panel", "ldlt_panel",
     "qrcp_panel", "qrcp_panel_eager",
@@ -130,6 +132,11 @@ def qrcp_panel(block: jnp.ndarray, steps: int):
     rows = jnp.arange(r)
     cols = jnp.arange(c)
 
+    # GEMV-shaped products are spelled as (1×k)/(k×1) GEMMs and the initial
+    # norms as a ones-row GEMM: the vector forms and `jnp.sum` reductions
+    # lower to kernels that re-associate under vmap batching / zero-padding,
+    # breaking the serving layer's batched == unbatched bitwise contract
+    # (DESIGN.md §13).
     def body(j, carry):
         b, v, f, vn, tau, piv = carry
         # --- greedy pivot: largest remaining partial norm ----------------
@@ -140,7 +147,7 @@ def qrcp_panel(block: jnp.ndarray, steps: int):
         f = jnp.take(f, permv, axis=0)
         vn = jnp.take(vn, permv)
         # --- bring column j current: rows j: get reflectors 0..j−1 -------
-        upd = v @ f[j, :]
+        upd = gemm_jnp(v, f[j, :][:, None])[:, 0]
         colj = (b[:, j] - jnp.where(rows >= j, upd, 0.0)).astype(dtype)
         # --- reflector j --------------------------------------------------
         vj, tau_j, beta = householder_vector(colj, j)
@@ -149,10 +156,12 @@ def qrcp_panel(block: jnp.ndarray, steps: int):
         newcol = jnp.where(rows > j, vj, colj).at[j].set(beta)
         b = b.at[:, j].set(newcol.astype(dtype))
         # --- F(:, j) = tau·(B₀ᵀ·v − F·(Vᵀ·v))  (xLAQPS incremental F) ----
-        w = b.T @ vj - f @ (v.T @ vj)
+        vj2 = vj[:, None]
+        w = (gemm_jnp(b.T, vj2) - gemm_jnp(f, gemm_jnp(v.T, vj2)))[:, 0]
         f = f.at[:, j].set((tau_j * w).astype(dtype))
         # --- pivot row j of every trailing column (completes row j) ------
-        rowj = b[j, :] - v[j, :] @ f.T
+        rowj = gemm_jnp(v[j, :][None, :], f.T)[0]
+        rowj = b[j, :] - rowj
         b = b.at[j, :].set(jnp.where(cols > j, rowj, b[j, :]).astype(dtype))
         # --- exact norm downdate: ‖B[j+1:, i]‖² = ‖B[j:, i]‖² − B[j,i]² --
         vn = jnp.where(cols > j, jnp.maximum(vn - b[j, :] ** 2, 0.0), 0.0)
@@ -162,7 +171,7 @@ def qrcp_panel(block: jnp.ndarray, steps: int):
         block,
         jnp.zeros((r, steps), dtype),
         jnp.zeros((c, steps), dtype),
-        jnp.sum(block * block, axis=0),
+        gemm_jnp(jnp.ones((1, r), dtype), block * block)[0],
         jnp.zeros((steps,), dtype),
         jnp.zeros((steps,), jnp.int32),
     )

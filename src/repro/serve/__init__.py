@@ -1,1 +1,12 @@
-"""Serving runtime: batched prefill + decode engine."""
+"""Serving runtime: batched prefill + decode engine, and the bucketed
+factorization-as-a-service solve server (DESIGN.md §13)."""
+from repro.serve.bucketing import BucketKey, shape_class
+from repro.serve.metrics import Metrics, throughput_summary
+from repro.serve.solver import (FactorCache, ServerConfig, SolveRequest,
+                                SolveResponse, SolveServer)
+
+__all__ = [
+    "BucketKey", "shape_class", "Metrics", "throughput_summary",
+    "FactorCache", "ServerConfig", "SolveRequest", "SolveResponse",
+    "SolveServer",
+]

@@ -1,0 +1,158 @@
+"""Shape bucketing for the solve server (DESIGN.md §13).
+
+A heterogeneous request stream would, naively, trigger one XLA compilation
+per distinct (dmf, shape, dtype) — unbounded compile-cache growth.  The
+server instead maps every request to a *bucket*: requests are zero/identity
+padded up to the bucket's canonical shape, so each bucket lowers to ONE
+``vmap``-compiled computation and the number of live executables is bounded
+by the (logarithmic) number of shape classes.
+
+The padding is *exact*: a request's answer inside the padded system is
+bit-identical to the unbatched driver on the raw shape.  Two ingredients
+make that true (both verified by ``tests/test_serve_solver.py``):
+
+* the embeddings below couple the real block to the padding block only
+  through exact zeros (block-diagonal identity for square systems, identity
+  tail rows for least squares, a ``sqrt(tiny)`` diagonal for pivoted QR so
+  padding columns always lose the pivot race), and
+* every contraction in the driver stack runs through the shape-canonical
+  GEMM of :mod:`repro.core.backend` and elementwise substitution sweeps, so
+  XLA's kernel choice — and with it the accumulation order — cannot differ
+  between the raw and the padded program.  Bucket boundaries are multiples
+  of 32 to line up with the GEMM quanta.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+__all__ = [
+    "SHAPE_QUANTUM", "BucketKey", "round_up", "shape_class", "batch_slots",
+    "pad_request", "extract", "flops",
+]
+
+#: Bucket boundaries are multiples of this — keep equal to the dimension
+#: quanta of ``repro.core.backend.gemm_jnp`` (see module docstring).
+SHAPE_QUANTUM = 32
+
+#: Below this, boundaries advance linearly in quanta; above, geometrically
+#: (powers of two), bounding the number of shape classes logarithmically.
+_LINEAR_LIMIT = 128
+
+#: Square-system dmfs (padded with a block-diagonal identity).
+SQUARE_DMFS = ("gesv", "posv")
+#: Least-squares dmfs (padded with identity tail rows).
+TALL_DMFS = ("gels", "geqp3")
+
+
+def round_up(x: int, q: int) -> int:
+    return -(-x // q) * q
+
+
+def _boundary(x: int) -> int:
+    """Smallest bucket boundary >= x (linear in quanta, then geometric)."""
+    x = max(1, int(x))
+    if x <= _LINEAR_LIMIT:
+        return round_up(x, SHAPE_QUANTUM)
+    b = _LINEAR_LIMIT
+    while b < x:
+        b *= 2
+    return b
+
+
+def _rhs_boundary(nrhs: int) -> int:
+    """RHS columns quantize to powers of two (1, 2, 4, ...)."""
+    b = 1
+    while b < nrhs:
+        b *= 2
+    return b
+
+
+class BucketKey(NamedTuple):
+    """One compiled executable per key — the compile-cache unit."""
+
+    dmf: str
+    dtype: str
+    m: int        # canonical (padded) row count
+    n: int        # canonical (padded) column count
+    nrhs: int     # canonical (padded) RHS columns
+
+
+def shape_class(dmf: str, m: int, n: int, nrhs: int, dtype) -> BucketKey:
+    """Canonical bucket for a raw (m × n, nrhs) request."""
+    if dmf in SQUARE_DMFS:
+        if m != n:
+            raise ValueError(f"{dmf} needs a square matrix, got {m}x{n}")
+        np_ = _boundary(n)
+        mp = np_
+    elif dmf in TALL_DMFS:
+        if m < n:
+            raise ValueError(f"{dmf} needs m >= n, got {m}x{n}")
+        np_ = _boundary(n)
+        # the identity tail adds (np_ − n) rows; the row boundary must
+        # leave room for the worst-case tail in this column class
+        mp = _boundary(m + (np_ - 1))
+    else:
+        raise ValueError(f"unknown dmf {dmf!r}")
+    return BucketKey(dmf, jnp.dtype(dtype).name, mp, np_,
+                     _rhs_boundary(nrhs))
+
+
+def batch_slots(n_requests: int, max_batch: int) -> int:
+    """Padded batch size: next power of two, never 1.
+
+    A batch dimension of exactly 1 is special-cased by XLA into a different
+    (non-bit-stable) lowering; >= 2 slots always runs the true batched
+    kernel.  Unused slots are filled by replicating a real request.
+    """
+    slots = 2
+    while slots < n_requests:
+        slots *= 2
+    return min(slots, max(2, max_batch)) if n_requests <= max_batch else slots
+
+
+def pad_request(dmf: str, a: jnp.ndarray, b: jnp.ndarray,
+                key: BucketKey) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Embed (a, b) into the bucket's canonical shape, exactly.
+
+    * square dmfs: ``diag(A, I)`` — padded pivot rows are zero in real
+      columns, so LU pivoting and the substitution sweeps never couple the
+      blocks; posv padding keeps the matrix SPD.
+    * gels: identity rows below the real block for the padding columns —
+      the padded LS solution is exactly ``(x, 0)``.
+    * geqp3: same embedding with a ``sqrt(tiny)`` diagonal so the padded
+      columns always lose the global pivot competition against real ones,
+      leaving the real pivot order untouched.
+    """
+    m, n = a.shape
+    nrhs = b.shape[1]
+    dt = a.dtype
+    bp = jnp.zeros((key.m, key.nrhs), dt).at[:m, :nrhs].set(b)
+    if dmf in SQUARE_DMFS:
+        ap = jnp.zeros((key.n, key.n), dt).at[:n, :n].set(a)
+        ap = ap.at[jnp.arange(n, key.n), jnp.arange(n, key.n)].set(
+            jnp.ones((), dt))
+        return ap, bp
+    diag = jnp.sqrt(jnp.finfo(dt).tiny) if dmf == "geqp3" else \
+        jnp.asarray(1.0, dt)
+    ap = jnp.zeros((key.m, key.n), dt).at[:m, :n].set(a)
+    tail = key.n - n
+    ap = ap.at[jnp.arange(m, m + tail), jnp.arange(n, key.n)].set(diag)
+    return ap, bp
+
+
+def extract(x_pad: jnp.ndarray, n: int, nrhs: int) -> jnp.ndarray:
+    """Recover the raw-shape solution from a padded one."""
+    return x_pad[:n, :nrhs]
+
+
+def flops(dmf: str, m: int, n: int, nrhs: int) -> float:
+    """Nominal flop count of one request (raw shape) for GFLOP/s metrics."""
+    if dmf == "gesv":
+        return (2.0 / 3.0) * n ** 3 + 2.0 * n * n * nrhs
+    if dmf == "posv":
+        return (1.0 / 3.0) * n ** 3 + 2.0 * n * n * nrhs
+    # QR-based: 2mn² − 2n³/3 for the factor plus the two solve sweeps
+    return 2.0 * m * n * n - (2.0 / 3.0) * n ** 3 + \
+        2.0 * n * (m + n) * nrhs

@@ -19,6 +19,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import api
+from repro.serve.metrics import throughput_summary
 
 
 @dataclasses.dataclass
@@ -66,12 +67,15 @@ class ServeEngine:
         done = np.zeros((b,), bool)
         t1 = time.perf_counter()
         steps = 0
+        step_s = []
         for i in range(max_new_tokens - 1):
+            ts = time.perf_counter()
             pos = jnp.int32(s + i)
             logits, cache = self._decode(self.params, cache, tok[:, None], pos)
             tok = self._sample(logits)
             steps += 1
-            cur = np.asarray(tok)
+            cur = np.asarray(tok)          # forces sync — honest step latency
+            step_s.append(time.perf_counter() - ts)
             out.append(cur)
             if self.sc.eos_id >= 0:
                 done |= cur == self.sc.eos_id
@@ -80,9 +84,13 @@ class ServeEngine:
         jax.block_until_ready(tok)
         t_decode = time.perf_counter() - t1
         tokens = np.stack(out, axis=1)
-        stats = {
-            "prefill_s": t_prefill,
-            "decode_s": t_decode,
-            "decode_tok_per_s": b * max(steps, 1) / max(t_decode, 1e-9),
-        }
+        # shared summary schema (metrics.SUMMARY_KEYS) + engine-specific keys,
+        # so serve-layer dashboards read one shape for tokens and solves
+        stats = throughput_summary(
+            t_prefill + t_decode, b * (1 + steps), latency=step_s)
+        stats.update(
+            prefill_s=t_prefill,
+            decode_s=t_decode,
+            decode_tok_per_s=b * max(steps, 1) / max(t_decode, 1e-9),
+        )
         return tokens, stats

@@ -1,0 +1,361 @@
+"""Factorization-as-a-service: the bucketed, cached solve server.
+
+The paper's look-ahead thesis — keep every resource busy around the serial
+panel — recast at the queueing layer (DESIGN.md §13): thousands of small
+heterogeneous systems are packed into shape buckets so the device executes
+one ``vmap``-compiled computation per bucket instead of one tiny program per
+request.  Pipeline:
+
+    submit → bucket queue → (admission: max batch / max wait) →
+    pad to bucket shape → stack → jit(vmap(driver)) → unpad → response
+
+plus a factor-once/solve-many fast path: operands are content-hashed into an
+LRU :class:`FactorCache`; cached factor *pytrees* from different requests
+are gathered (``tree_map``-stacked) into one batched triangular-solve call —
+the factor objects' pytree registration makes the cache and the batch axis
+compose for free.
+
+Reproducibility contract: every response is bit-identical to the unbatched
+driver on the raw request shape (``tests/test_serve_solver.py`` enforces it
+for all dmfs × dtypes, including ragged shapes sharing a bucket).  Batches
+are padded to >= 2 slots by replicating a real request — a batch dimension
+of 1 triggers a different XLA lowering (see ``bucketing.batch_slots``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import time
+from collections import OrderedDict
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve import bucketing
+from repro.serve.bucketing import BucketKey
+from repro.serve.metrics import Metrics, throughput_summary
+from repro.solve import drivers
+from repro.tune.cache import cache_key
+
+__all__ = ["ServerConfig", "SolveRequest", "SolveResponse", "FactorCache",
+           "SolveServer"]
+
+#: dmfs with a factor-object fast path (factor once / solve many).
+CACHEABLE_DMFS = ("gesv", "posv")
+
+_DRIVER_FNS: Dict[str, Callable] = {
+    "gesv": lambda a, b, block: drivers.gesv(a, b, block),
+    "posv": lambda a, b, block: drivers.posv(a, b, block),
+    "gels": lambda a, b, block: drivers.gels(a, b, block),
+    "geqp3": lambda a, b, block: drivers.gels(a, b, block, pivot=True),
+}
+
+_FACTOR_FNS: Dict[str, Callable] = {
+    "gesv": lambda a, block: drivers.lu_factor(a, block),
+    "posv": lambda a, block: drivers.cholesky_factor(a, block),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ServerConfig:
+    max_batch: int = 16        # flush a bucket at this many requests
+    max_wait_s: float = 0.01   # ... or once its oldest request is this old
+    block: int = 32            # panel width — keep bucket-quantum aligned
+    cache_capacity: int = 64   # FactorCache entries
+    backend: str = "jnp"
+
+
+@dataclasses.dataclass
+class SolveRequest:
+    req_id: int
+    dmf: str
+    a: jnp.ndarray
+    b: jnp.ndarray
+    bucket: BucketKey
+    submit_t: float
+    cache: bool = False        # route through the FactorCache
+
+
+@dataclasses.dataclass
+class SolveResponse:
+    req_id: int
+    dmf: str
+    x: jnp.ndarray             # raw request shape — unpadded
+    bucket: BucketKey
+    batch_index: int           # slot inside the flushed batch
+    batch_size: int            # real requests in that batch
+    latency_s: float
+    cache_hit: bool = False
+
+
+class FactorCache:
+    """LRU of factor pytrees, keyed like :class:`repro.tune.TuneCache`.
+
+    Key: ``backend:dmf:MxN:dtype:digest`` (the shared §9 format via
+    :func:`repro.tune.cache.cache_key` — shapes are the *bucket-canonical*
+    shapes, the digest a content hash of the padded operand, so a hit means
+    "same matrix, same compiled computation").
+    """
+
+    def __init__(self, capacity: int = 64) -> None:
+        self.capacity = capacity
+        self._store: "OrderedDict[str, object]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    @staticmethod
+    def digest(a: jnp.ndarray) -> str:
+        return hashlib.sha1(np.asarray(a).tobytes()).hexdigest()[:16]
+
+    def key_for(self, dmf: str, a: jnp.ndarray, backend: str) -> str:
+        return cache_key(dmf, a.shape, a.dtype, backend,
+                         digest=self.digest(a))
+
+    def get(self, key: str):
+        entry = self._store.get(key)
+        if entry is None:
+            self.misses += 1
+            return None
+        self.hits += 1
+        self._store.move_to_end(key)
+        return entry
+
+    def put(self, key: str, factors) -> None:
+        if key in self._store:
+            self._store.move_to_end(key)
+        self._store[key] = factors
+        while len(self._store) > self.capacity:
+            self._store.popitem(last=False)
+            self.evictions += 1
+
+    def __len__(self) -> int:
+        return len(self._store)
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+
+class SolveServer:
+    """Single-threaded bucketed solve server with an injectable clock.
+
+    Usage::
+
+        srv = SolveServer(ServerConfig(max_batch=8))
+        rid = srv.submit("gesv", a, b)
+        srv.drain()                      # or srv.pump() on a schedule
+        x = srv.take(rid).x
+    """
+
+    def __init__(self, config: ServerConfig = ServerConfig(), *,
+                 clock: Callable[[], float] = time.monotonic) -> None:
+        self.config = config
+        self.clock = clock
+        self.metrics = Metrics()
+        self.factor_cache = FactorCache(config.cache_capacity)
+        self._queues: Dict[Tuple[BucketKey, bool], List[SolveRequest]] = {}
+        self._responses: Dict[int, SolveResponse] = {}
+        self._next_id = 0
+        self._solve_exec: Dict[Tuple[BucketKey, int], Callable] = {}
+        self._factor_exec: Dict[Tuple[BucketKey, int], Callable] = {}
+        self._gather_exec: Dict[Tuple[BucketKey, int], Callable] = {}
+        self._wall0: Optional[float] = None
+
+    # ------------------------------------------------------------------
+    # Ingest.
+    # ------------------------------------------------------------------
+    def submit(self, dmf: str, a: jnp.ndarray, b: jnp.ndarray, *,
+               cache: bool = False) -> int:
+        """Enqueue one request; returns its id.  ``cache=True`` routes via
+        the factor-once/solve-many path (``dmf`` must be cacheable)."""
+        a = jnp.asarray(a)
+        b = jnp.asarray(b)
+        if b.ndim != 2:
+            raise ValueError("b must be (m, nrhs)")
+        if cache and dmf not in CACHEABLE_DMFS:
+            raise ValueError(f"{dmf} has no factor-object solve path")
+        key = bucketing.shape_class(dmf, a.shape[0], a.shape[1],
+                                    b.shape[1], a.dtype)
+        now = self.clock()
+        if self._wall0 is None:
+            self._wall0 = now
+        req = SolveRequest(self._next_id, dmf, a, b, key, now, cache)
+        self._next_id += 1
+        self._queues.setdefault((key, cache), []).append(req)
+        self.metrics.counter("requests").inc()
+        self.metrics.gauge("queue_depth").set(self._depth())
+        return req.req_id
+
+    def _depth(self) -> int:
+        return sum(len(q) for q in self._queues.values())
+
+    # ------------------------------------------------------------------
+    # Scheduling.
+    # ------------------------------------------------------------------
+    def pump(self) -> int:
+        """Flush every bucket that is full or past its wait budget.
+        Returns the number of responses produced."""
+        now = self.clock()
+        cfg = self.config
+        produced = 0
+        for qkey in list(self._queues):
+            q = self._queues.get(qkey, [])
+            while len(q) >= cfg.max_batch:
+                produced += self._flush(qkey, q[:cfg.max_batch])
+                del q[:cfg.max_batch]
+            if q and (now - q[0].submit_t) >= cfg.max_wait_s:
+                produced += self._flush(qkey, q)
+                q.clear()
+            if not q:
+                self._queues.pop(qkey, None)
+        self.metrics.gauge("queue_depth").set(self._depth())
+        return produced
+
+    def drain(self) -> int:
+        """Flush everything regardless of admission policy."""
+        produced = 0
+        for qkey in list(self._queues):
+            q = self._queues.pop(qkey)
+            for i in range(0, len(q), self.config.max_batch):
+                produced += self._flush(qkey, q[i:i + self.config.max_batch])
+        self.metrics.gauge("queue_depth").set(self._depth())
+        return produced
+
+    def take(self, req_id: int) -> SolveResponse:
+        return self._responses.pop(req_id)
+
+    def pending(self) -> int:
+        return self._depth()
+
+    # ------------------------------------------------------------------
+    # Execution.
+    # ------------------------------------------------------------------
+    def _flush(self, qkey: Tuple[BucketKey, bool],
+               batch: List[SolveRequest]) -> int:
+        key, cached = qkey
+        if cached:
+            xs, hits = self._run_cached(key, batch)
+        else:
+            xs = self._run_direct(key, batch)
+            hits = [False] * len(batch)
+        done = self.clock()
+        real = sum(bucketing.flops(r.dmf, r.a.shape[0], r.a.shape[1],
+                                   r.b.shape[1]) for r in batch)
+        slots = bucketing.batch_slots(len(batch), self.config.max_batch)
+        self.metrics.histogram("bucket_fill").record(len(batch) / slots)
+        pad_cells = slots * (key.m * key.n + key.m * key.nrhs)
+        real_cells = sum(r.a.size + r.b.size for r in batch)
+        self.metrics.histogram("padding_waste").record(
+            pad_cells / real_cells - 1.0)
+        self.metrics.counter("batches").inc()
+        self.metrics.counter("flops").inc(real)
+        for i, req in enumerate(batch):
+            lat = done - req.submit_t
+            self.metrics.histogram("latency_s").record(lat)
+            self.metrics.counter("responses").inc()
+            x = bucketing.extract(xs[i], req.a.shape[1], req.b.shape[1])
+            self._responses[req.req_id] = SolveResponse(
+                req.req_id, req.dmf, x, key, i, len(batch), lat, hits[i])
+        return len(batch)
+
+    def _stack(self, key: BucketKey, batch: List[SolveRequest], slots: int
+               ) -> tuple[jnp.ndarray, jnp.ndarray]:
+        pads = [bucketing.pad_request(r.dmf, r.a, r.b, key) for r in batch]
+        while len(pads) < slots:          # replicate a real request: the
+            pads.append(pads[0])          # executable shape stays canonical
+        return (jnp.stack([p[0] for p in pads]),
+                jnp.stack([p[1] for p in pads]))
+
+    def _run_direct(self, key: BucketKey, batch: List[SolveRequest]):
+        slots = bucketing.batch_slots(len(batch), self.config.max_batch)
+        ab, bb = self._stack(key, batch, slots)
+        ekey = (key, slots)
+        if ekey not in self._solve_exec:
+            fn = _DRIVER_FNS[key.dmf]
+            block = self.config.block
+            self._solve_exec[ekey] = jax.jit(
+                jax.vmap(lambda a, b: fn(a, b, block)))
+            self.metrics.counter("compiles").inc()
+        return self._solve_exec[ekey](ab, bb)
+
+    def _run_cached(self, key: BucketKey, batch: List[SolveRequest]):
+        """Factor-once/solve-many: look every operand up in the cache,
+        factor only the misses (one batched factor call), then gather all
+        factor pytrees into one batched triangular-solve call."""
+        cfg = self.config
+        keys = [self.factor_cache.key_for(
+            r.dmf, bucketing.pad_request(r.dmf, r.a, r.b, key)[0],
+            cfg.backend) for r in batch]
+        hits = []
+        factors_by_slot: List[object] = [None] * len(batch)
+        miss_idx = []
+        for i, ck in enumerate(keys):
+            entry = self.factor_cache.get(ck)
+            hits.append(entry is not None)
+            if entry is None:
+                miss_idx.append(i)
+            else:
+                factors_by_slot[i] = entry
+        if miss_idx:
+            miss_reqs = [batch[i] for i in miss_idx]
+            slots = bucketing.batch_slots(len(miss_reqs), cfg.max_batch)
+            ab, _ = self._stack(key, miss_reqs, slots)
+            ekey = (key, slots)
+            if ekey not in self._factor_exec:
+                ffn = _FACTOR_FNS[key.dmf]
+                block = cfg.block
+                self._factor_exec[ekey] = jax.jit(
+                    jax.vmap(lambda a: ffn(a, block)))
+                self.metrics.counter("compiles").inc()
+            fb = self._factor_exec[ekey](ab)
+            for slot, i in enumerate(miss_idx):
+                fi = jax.tree_util.tree_map(lambda leaf, s=slot: leaf[s], fb)
+                factors_by_slot[i] = fi
+                self.factor_cache.put(keys[i], fi)
+        # gather: stack per-request factor pytrees along a fresh batch axis
+        # and run ONE batched solve — the cache and vmap composing.
+        slots = bucketing.batch_slots(len(batch), cfg.max_batch)
+        while len(factors_by_slot) < slots:
+            factors_by_slot.append(factors_by_slot[0])
+        gathered = jax.tree_util.tree_map(
+            lambda *leaves: jnp.stack(leaves), *factors_by_slot)
+        _, bb = self._stack(key, batch, slots)
+        ekey = (key, slots)
+        if ekey not in self._gather_exec:
+            self._gather_exec[ekey] = jax.jit(
+                jax.vmap(lambda f, b: f.solve(b)))
+            self.metrics.counter("compiles").inc()
+        xs = self._gather_exec[ekey](gathered, bb)
+        self._sync_cache_metrics()
+        return xs, hits
+
+    def _sync_cache_metrics(self) -> None:
+        fc = self.factor_cache
+        self.metrics.gauge("cache.size").set(len(fc))
+        self.metrics.gauge("cache.hit_rate").set(fc.hit_rate)
+        self.metrics.counter("cache.hits").value = float(fc.hits)
+        self.metrics.counter("cache.misses").value = float(fc.misses)
+        self.metrics.counter("cache.evictions").value = float(fc.evictions)
+
+    # ------------------------------------------------------------------
+    # Observability.
+    # ------------------------------------------------------------------
+    def snapshot(self) -> Dict[str, float]:
+        self._sync_cache_metrics()
+        return self.metrics.snapshot()
+
+    def summary(self) -> Dict[str, float]:
+        """Shared serve-layer schema (metrics.SUMMARY_KEYS) + solver extras."""
+        now = self.clock()
+        wall = (now - self._wall0) if self._wall0 is not None else 0.0
+        done = self.metrics.counter("responses").value
+        out = throughput_summary(wall, done,
+                                 self.metrics.histogram("latency_s"))
+        out["gflops_per_s"] = (
+            self.metrics.counter("flops").value / wall / 1e9 if wall else 0.0)
+        out["cache_hit_rate"] = self.factor_cache.hit_rate
+        return out

@@ -18,6 +18,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core.blocking import BlockSpec, normalize_block
 from repro.solve import drivers
 
 __all__ = [
@@ -26,39 +27,47 @@ __all__ = [
 ]
 
 
-@functools.partial(jax.jit, static_argnames=("block", "variant", "backend"))
-def gesv_batched(a: jnp.ndarray, b: jnp.ndarray, block: int = 32, *,
-                 variant: str = "la", backend: str = "jnp") -> jnp.ndarray:
+@functools.partial(jax.jit,
+                   static_argnames=("block", "variant", "depth", "backend"))
+def gesv_batched(a: jnp.ndarray, b: jnp.ndarray, block: BlockSpec = 32, *,
+                 variant: str = "la", depth: int = 1,
+                 backend: str = "jnp") -> jnp.ndarray:
     """Solve ``A[i]·X[i] = B[i]`` for a stack of general square systems."""
-    fn = functools.partial(drivers.gesv, block=block, variant=variant,
-                           backend=backend)
+    fn = functools.partial(drivers.gesv, block=normalize_block(block),
+                           variant=variant, depth=depth, backend=backend)
     return jax.vmap(fn)(a, b)
 
 
-@functools.partial(jax.jit, static_argnames=("block", "variant", "backend"))
-def posv_batched(a: jnp.ndarray, b: jnp.ndarray, block: int = 32, *,
-                 variant: str = "la", backend: str = "jnp") -> jnp.ndarray:
+@functools.partial(jax.jit,
+                   static_argnames=("block", "variant", "depth", "backend"))
+def posv_batched(a: jnp.ndarray, b: jnp.ndarray, block: BlockSpec = 32, *,
+                 variant: str = "la", depth: int = 1,
+                 backend: str = "jnp") -> jnp.ndarray:
     """Solve a stack of SPD systems via batched Cholesky."""
-    fn = functools.partial(drivers.posv, block=block, variant=variant,
-                           backend=backend)
+    fn = functools.partial(drivers.posv, block=normalize_block(block),
+                           variant=variant, depth=depth, backend=backend)
     return jax.vmap(fn)(a, b)
 
 
-@functools.partial(jax.jit, static_argnames=("block", "variant", "backend"))
-def lu_factor_batched(a: jnp.ndarray, block: int = 32, *,
-                      variant: str = "la", backend: str = "jnp"):
+@functools.partial(jax.jit,
+                   static_argnames=("block", "variant", "depth", "backend"))
+def lu_factor_batched(a: jnp.ndarray, block: BlockSpec = 32, *,
+                      variant: str = "la", depth: int = 1,
+                      backend: str = "jnp"):
     """Factor a stack of systems once; returns batched :class:`LUFactors`."""
-    fn = functools.partial(drivers.lu_factor, block=block, variant=variant,
-                           backend=backend)
+    fn = functools.partial(drivers.lu_factor, block=normalize_block(block),
+                           variant=variant, depth=depth, backend=backend)
     return jax.vmap(fn)(a)
 
 
-@functools.partial(jax.jit, static_argnames=("block", "variant", "backend"))
-def cholesky_factor_batched(a: jnp.ndarray, block: int = 32, *,
-                            variant: str = "la", backend: str = "jnp"):
+@functools.partial(jax.jit,
+                   static_argnames=("block", "variant", "depth", "backend"))
+def cholesky_factor_batched(a: jnp.ndarray, block: BlockSpec = 32, *,
+                            variant: str = "la", depth: int = 1,
+                            backend: str = "jnp"):
     """Factor a stack of SPD systems; returns batched :class:`CholeskyFactors`."""
-    fn = functools.partial(drivers.cholesky_factor, block=block,
-                           variant=variant, backend=backend)
+    fn = functools.partial(drivers.cholesky_factor, block=normalize_block(block),
+                           variant=variant, depth=depth, backend=backend)
     return jax.vmap(fn)(a)
 
 

@@ -88,10 +88,18 @@ class TuneConfig:
                    depth=int(depth), from_cache=from_cache)
 
 
-def cache_key(dmf: str, shape: ShapeLike, dtype, backend: str) -> str:
-    """``backend:dmf:MxN:dtype`` — the §9 cache-key format."""
+def cache_key(dmf: str, shape: ShapeLike, dtype, backend: str,
+              digest: Optional[str] = None) -> str:
+    """``backend:dmf:MxN:dtype[:digest]`` — the §9 cache-key format.
+
+    ``digest`` distinguishes entries that share a configuration but not
+    content — the serve layer's :class:`~repro.serve.solver.FactorCache`
+    appends a content hash of the factored operand so factor-once/solve-many
+    requests hit only on the *same* matrix (DESIGN.md §13).
+    """
     m, n = (_norm_shape(shape) + (0, 0))[:2]
-    return f"{backend}:{dmf}:{m}x{n}:{_norm_dtype(dtype)}"
+    base = f"{backend}:{dmf}:{m}x{n}:{_norm_dtype(dtype)}"
+    return f"{base}:{digest}" if digest else base
 
 
 class TuneCache:

@@ -1,0 +1,241 @@
+"""Serve-layer tests: bucketing, metrics, FactorCache, and the bitwise
+padded/batched == unbatched property (DESIGN.md §13)."""
+import jax
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.serve import (FactorCache, ServerConfig, SolveServer,
+                         shape_class)
+from repro.serve.bucketing import batch_slots, flops, pad_request
+from repro.serve.metrics import (SUMMARY_KEYS, Histogram, Metrics,
+                                 throughput_summary)
+from repro.solve import drivers
+
+RNG = np.random.default_rng(42)
+
+
+def _mk(dmf, m, n, nrhs, dtype=np.float32):
+    a = RNG.standard_normal((m, n)).astype(dtype)
+    if dmf == "posv":
+        a = a @ a.T + n * np.eye(n, dtype=dtype)
+    b = RNG.standard_normal((m, nrhs)).astype(dtype)
+    return jnp.asarray(a), jnp.asarray(b)
+
+
+def _reference(dmf, a, b, block=32):
+    if dmf == "geqp3":
+        return drivers.gels(a, b, block, pivot=True)
+    return getattr(drivers, dmf)(a, b, block)
+
+
+# ---------------------------------------------------------------------------
+# Bucketing.
+# ---------------------------------------------------------------------------
+def test_shape_class_quantizes_and_is_stable():
+    k1 = shape_class("gesv", 33, 33, 3, np.float32)
+    k2 = shape_class("gesv", 64, 64, 4, np.float32)
+    assert k1 == k2                      # ragged shapes share a bucket
+    assert k1.m % 32 == 0 and k1.nrhs == 4
+    kt = shape_class("gels", 56, 30, 2, np.float32)
+    assert kt.n == 32 and kt.m >= 56 + (kt.n - 30)
+    assert shape_class("gesv", 33, 33, 1, np.float64).dtype == "float64"
+
+
+def test_shape_class_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        shape_class("gesv", 4, 5, 1, np.float32)
+    with pytest.raises(ValueError):
+        shape_class("gels", 4, 5, 1, np.float32)
+    with pytest.raises(ValueError):
+        shape_class("sytrf", 4, 4, 1, np.float32)
+
+
+def test_batch_slots_never_one():
+    assert batch_slots(1, 16) == 2       # batch dim 1 lowers differently
+    assert batch_slots(3, 16) == 4
+    assert batch_slots(16, 16) == 16
+
+
+def test_flops_positive():
+    for dmf in ("gesv", "posv", "gels", "geqp3"):
+        assert flops(dmf, 64, 32 if dmf in ("gels", "geqp3") else 64, 2) > 0
+
+
+# ---------------------------------------------------------------------------
+# The §13 property: padded + batched bit-matches the unbatched driver.
+# ---------------------------------------------------------------------------
+SHAPES = {
+    "gesv": [(48, 48, 3), (33, 33, 1), (64, 64, 4)],
+    "posv": [(48, 48, 3), (33, 33, 1), (64, 64, 4)],
+    "gels": [(56, 30, 2), (80, 17, 3), (33, 20, 2)],
+    "geqp3": [(56, 30, 2), (80, 17, 3), (33, 20, 2)],
+}
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float64],
+                         ids=["f32", "f64"])
+@pytest.mark.parametrize("dmf", sorted(SHAPES))
+def test_bucketed_batch_bitwise_vs_unbatched_driver(dmf, dtype):
+    """Ragged shapes landing in one bucket: every response bit-identical to
+    the per-request unbatched driver on the raw shape."""
+    srv = SolveServer(ServerConfig(max_batch=8))
+    reqs = [(_mk(dmf, m, n, r, dtype)) for m, n, r in SHAPES[dmf]]
+    rids = [srv.submit(dmf, a, b) for a, b in reqs]
+    srv.drain()
+    for rid, (a, b) in zip(rids, reqs):
+        resp = srv.take(rid)
+        ref = _reference(dmf, a, b)
+        assert resp.x.shape == ref.shape
+        assert bool((np.asarray(resp.x) == np.asarray(ref)).all()), \
+            f"{dmf} {a.shape} not bitwise"
+
+
+def test_response_independent_of_batch_composition():
+    """The same request must produce identical bits whatever else shares
+    its flush — per-slot data flow is disjoint."""
+    a, b = _mk("gesv", 48, 48, 2)
+    lone = SolveServer(ServerConfig(max_batch=8))
+    rid = lone.submit("gesv", a, b)
+    lone.drain()
+    x_alone = np.asarray(lone.take(rid).x)
+    crowd = SolveServer(ServerConfig(max_batch=8))
+    others = [_mk("gesv", 40, 40, 1) for _ in range(3)]
+    rid2 = crowd.submit("gesv", a, b)
+    for oa, ob in others:
+        crowd.submit("gesv", oa, ob)
+    crowd.drain()
+    assert bool((np.asarray(crowd.take(rid2).x) == x_alone).all())
+
+
+# ---------------------------------------------------------------------------
+# FactorCache semantics.
+# ---------------------------------------------------------------------------
+def test_factor_cache_hit_miss_eviction_under_pressure():
+    cache = FactorCache(capacity=2)
+    mats = [jnp.asarray(RNG.standard_normal((8, 8)).astype(np.float32))
+            for _ in range(3)]
+    keys = [cache.key_for("gesv", m, "jnp") for m in mats]
+    assert len(set(keys)) == 3           # digests distinguish content
+    for k in keys:
+        assert cache.get(k) is None      # 3 misses
+    cache.put(keys[0], "f0")
+    cache.put(keys[1], "f1")
+    assert cache.get(keys[0]) == "f0"    # hit refreshes LRU position
+    cache.put(keys[2], "f2")             # evicts keys[1] (least recent)
+    assert cache.get(keys[1]) is None
+    assert cache.get(keys[0]) == "f0"
+    assert cache.evictions == 1
+    assert cache.hits == 2 and cache.misses == 4
+    assert 0 < cache.hit_rate < 1
+
+
+def test_factor_once_solve_many_bitwise_and_hits():
+    """Cached factors from different requests are gathered into one batched
+    solve; every answer still bit-matches the unbatched driver."""
+    srv = SolveServer(ServerConfig(max_batch=8))
+    a1, _ = _mk("gesv", 48, 48, 1)
+    a2, _ = _mk("gesv", 48, 48, 1)
+    rids = []
+    for trial in range(3):               # same two matrices, fresh RHS
+        for a in (a1, a2):
+            b = jnp.asarray(RNG.standard_normal((48, 2)).astype(np.float32))
+            rids.append((srv.submit("gesv", a, b, cache=True), a, b))
+        srv.drain()
+    for rid, a, b in rids:
+        resp = srv.take(rid)
+        ref = drivers.gesv(a, b, 32)
+        assert bool((np.asarray(resp.x) == np.asarray(ref)).all())
+    assert srv.factor_cache.hits == 4    # trials 2,3 hit for both matrices
+    assert srv.factor_cache.misses == 2
+    with pytest.raises(ValueError):
+        srv.submit("gels", *_mk("gels", 8, 4, 1), cache=True)
+
+
+# ---------------------------------------------------------------------------
+# Admission / flush policy (injectable clock — no sleeping).
+# ---------------------------------------------------------------------------
+def test_flush_on_max_batch_and_max_wait():
+    t = [0.0]
+    srv = SolveServer(ServerConfig(max_batch=2, max_wait_s=1.0),
+                      clock=lambda: t[0])
+    a, b = _mk("gesv", 16, 16, 1)
+    srv.submit("gesv", a, b)
+    assert srv.pump() == 0               # neither full nor old
+    srv.submit("gesv", a, b)
+    assert srv.pump() == 2               # full batch flushes
+    srv.submit("gesv", a, b)
+    t[0] = 2.0
+    assert srv.pump() == 1               # wait budget exceeded
+    assert srv.pending() == 0
+
+
+# ---------------------------------------------------------------------------
+# Metrics.
+# ---------------------------------------------------------------------------
+def test_metrics_snapshot_schema_and_histogram():
+    m = Metrics()
+    m.counter("n").inc(3)
+    m.gauge("depth").set(7)
+    h = m.histogram("lat")
+    for v in [1.0, 2.0, 3.0, 4.0]:
+        h.record(v)
+    snap = m.snapshot()
+    assert snap["counter.n"] == 3 and snap["gauge.depth"] == 7
+    assert snap["hist.lat.count"] == 4
+    assert snap["hist.lat.p50"] == pytest.approx(2.5)
+    assert h.percentile(99.0) <= 4.0
+
+
+def test_histogram_bounded_memory():
+    h = Histogram(capacity=8)
+    for i in range(100):
+        h.record(float(i))
+    assert h.count == 100 and len(h._samples) == 8
+    assert h.mean == pytest.approx(np.mean(np.arange(100.0)))
+
+
+def test_summary_shares_engine_schema():
+    srv = SolveServer(ServerConfig(max_batch=2))
+    a, b = _mk("gesv", 16, 16, 1)
+    srv.submit("gesv", a, b)
+    srv.drain()
+    summ = srv.summary()
+    for k in SUMMARY_KEYS:
+        assert k in summ
+    ts = throughput_summary(2.0, 10.0)
+    assert tuple(ts) == SUMMARY_KEYS and ts["items_per_s"] == 5.0
+    # snapshot carries the observability set from the ISSUE
+    snap = srv.snapshot()
+    for k in ("gauge.queue_depth", "hist.bucket_fill.mean",
+              "gauge.cache.hit_rate", "hist.padding_waste.mean",
+              "hist.latency_s.p99", "counter.flops"):
+        assert k in snap, k
+
+
+# ---------------------------------------------------------------------------
+# Satellite: scalar-vs-batched wrapper agreement (depth/schedule forwarding).
+# ---------------------------------------------------------------------------
+def test_batched_wrappers_forward_depth_and_schedule():
+    from repro.solve import batched
+    a = jnp.asarray(RNG.standard_normal((3, 64, 64)).astype(np.float32))
+    aspd = jnp.einsum("bij,bkj->bik", a, a) + 64 * jnp.eye(64, dtype=a.dtype)
+    b = jnp.asarray(RNG.standard_normal((3, 64, 2)).astype(np.float32))
+    sched = (16, 16, 32)                 # a BlockSpec schedule, not an int
+    for depth in (1, 2):
+        got = batched.gesv_batched(a, b, sched, depth=depth)
+        for i in range(3):
+            ref = drivers.gesv(a[i], b[i], sched, depth=depth)
+            assert bool((np.asarray(got[i]) == np.asarray(ref)).all())
+        gotp = batched.posv_batched(aspd, b, 32, depth=depth)
+        for i in range(3):
+            refp = drivers.posv(aspd[i], b[i], 32, depth=depth)
+            assert bool((np.asarray(gotp[i]) == np.asarray(refp)).all())
+    fb = batched.lu_factor_batched(a, sched, depth=2)
+    f0 = drivers.lu_factor(a[0], sched, depth=2)
+    assert bool((np.asarray(fb.lu[0]) == np.asarray(f0.lu)).all())
+    cb = batched.cholesky_factor_batched(aspd, 32, depth=2)
+    c0 = drivers.cholesky_factor(aspd[0], 32, depth=2)
+    assert bool((np.asarray(cb.l[0]) == np.asarray(c0.l)).all())
