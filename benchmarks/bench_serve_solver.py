@@ -18,8 +18,11 @@ all of them would dwarf the measurement) and counts bitwise mismatches —
 must be zero.  Exhaustive bitwise coverage lives in
 ``tests/test_serve_solver.py``; the sample here is an end-to-end smoke of
 the same contract under real mixed load.  ``--json`` writes one
-BENCH_serve.json trajectory row: throughput, p50/p99, speedup, cache hit
-rate, commit.
+BENCH_serve.json trajectory row (schema-validated via
+``benchmarks.common.validate_rows``): throughput, server p50/p99,
+client-observed sojourn p50/p99 (routed through the shared
+``repro.serve.metrics.Histogram`` — the repo's one percentile
+implementation), speedup, cache hit rate, commit, ts.
 """
 from __future__ import annotations
 
@@ -85,6 +88,7 @@ def _naive_gesv_throughput(rng, seconds_budget=8.0, n=48, nrhs=2):
 
 def run(requests=256, seconds=None, verify=False, seed=0):
     from repro.serve import ServerConfig, SolveServer
+    from repro.serve.metrics import Histogram
 
     rng = np.random.default_rng(seed)
     srv = SolveServer(ServerConfig(max_batch=16, max_wait_s=0.005))
@@ -99,14 +103,30 @@ def run(requests=256, seconds=None, verify=False, seed=0):
     srv.metrics = type(srv.metrics)()                    # reset counters
     srv._wall0 = None
 
+    # client-observed sojourn (submit -> response visible), routed through
+    # the repo's one percentile implementation (repro.obs.metrics.Histogram
+    # via the serve.metrics shim) — distinct from the server's own
+    # per-batch latency histogram inside srv.summary().
+    sub_ts, done_ts = {}, {}
+    client_lat = Histogram()
+
+    def _harvest():
+        now = time.perf_counter()
+        for rid in list(srv._responses):
+            if rid in sub_ts and rid not in done_ts:
+                done_ts[rid] = now
+
     load = _requests(rng, requests)
     inflight = {}
     t0 = time.perf_counter()
     if seconds is None:                                  # closed loop
         for i, (dmf, a, b) in enumerate(load):
-            inflight[srv.submit(dmf, a, b)] = (dmf, a, b)
+            rid = srv.submit(dmf, a, b)
+            inflight[rid] = (dmf, a, b)
+            sub_ts[rid] = time.perf_counter()
             if i % 8 == 7:
                 srv.pump()
+                _harvest()
         srv.drain()
     else:                                                # open loop
         interval = seconds / max(1, len(load))
@@ -114,13 +134,21 @@ def run(requests=256, seconds=None, verify=False, seed=0):
             target = t0 + i * interval
             while time.perf_counter() < target:
                 srv.pump()
-            inflight[srv.submit(dmf, a, b)] = (dmf, a, b)
+                _harvest()
+            rid = srv.submit(dmf, a, b)
+            inflight[rid] = (dmf, a, b)
+            sub_ts[rid] = time.perf_counter()
             srv.pump()
+            _harvest()
         deadline = time.perf_counter() + 5.0
         while srv.pending() and time.perf_counter() < deadline:
             srv.pump()
+            _harvest()
         srv.drain()
+    _harvest()
     wall = time.perf_counter() - t0
+    for rid, t_done in done_ts.items():
+        client_lat.record((t_done - sub_ts[rid]) * 1e3)
 
     # factor-once/solve-many phase: repeated solves against 4 cached matrices
     mats = [_requests(rng, 1)[0] for _ in range(4)]
@@ -160,11 +188,14 @@ def run(requests=256, seconds=None, verify=False, seed=0):
         "speedup_vs_naive": served / naive if naive else None,
         "p50_ms": summ["p50_ms"],
         "p99_ms": summ["p99_ms"],
+        "client_p50_ms": client_lat.percentile(50.0),
+        "client_p99_ms": client_lat.percentile(99.0),
         "gflops_per_s": summ["gflops_per_s"],
         "cache_hit_rate": srv.factor_cache.hit_rate,
         "verified_responses": checked if verify else None,
         "bitwise_mismatches": bad if verify else None,
         "commit": git_commit(),
+        "ts": time.time(),
     }
     return row, srv.snapshot()
 
@@ -190,6 +221,8 @@ def main(argv=None):
     print("# snapshot:", json.dumps(interesting, sort_keys=True),
           file=sys.stderr)
     if args.json:
+        from benchmarks.common import validate_rows
+        validate_rows([row])
         with open(args.json, "a") as f:
             f.write(json.dumps(row, sort_keys=True) + "\n")
         print(f"# wrote {args.json}", file=sys.stderr)

@@ -50,10 +50,57 @@ def git_commit() -> str:
         return "unknown"
 
 
-def parse_row(row: str, commit: str = "unknown") -> dict:
+#: BENCH_*.json trajectory-row schema, shared by every writer (run.py
+#: --json, bench_serve_solver --json, bench_obs).  Required keys must be
+#: present with these types; optional keys are type-checked when present
+#: and non-null; extra bench-specific keys (p99_ms, overlap_efficiency, …)
+#: pass through freely.
+ROW_REQUIRED = {"bench": str, "commit": str, "ts": (int, float),
+                "wall": (int, float)}
+ROW_OPTIONAL = {"n": int, "b": int, "variant": str, "gflops": (int, float)}
+
+
+def validate_rows(rows: list) -> list:
+    """Validate BENCH_*.json rows against the shared schema.
+
+    Checks required keys/types, optional-key types, ``wall``/``ts`` >= 0,
+    and that ``ts`` is monotone non-decreasing across the list (rows are
+    appended in emission order — a decreasing clock means mixed-up
+    trajectories).  Raises ``ValueError`` on the first violation; returns
+    ``rows`` unchanged so writers can validate inline.
+    """
+    prev_ts = None
+    for i, row in enumerate(rows):
+        if not isinstance(row, dict):
+            raise ValueError(f"row {i}: expected dict, got {type(row).__name__}")
+        for key, types in ROW_REQUIRED.items():
+            if key not in row:
+                raise ValueError(f"row {i}: missing required key {key!r}")
+            if not isinstance(row[key], types) or isinstance(row[key], bool):
+                raise ValueError(
+                    f"row {i}: {key!r} must be {types}, "
+                    f"got {type(row[key]).__name__}")
+        for key, types in ROW_OPTIONAL.items():
+            if row.get(key) is not None and (
+                    not isinstance(row[key], types)
+                    or isinstance(row[key], bool)):
+                raise ValueError(
+                    f"row {i}: {key!r} must be {types} or null, "
+                    f"got {type(row[key]).__name__}")
+        if row["wall"] < 0 or row["ts"] < 0:
+            raise ValueError(f"row {i}: negative wall/ts")
+        if prev_ts is not None and row["ts"] < prev_ts:
+            raise ValueError(
+                f"row {i}: ts {row['ts']} < preceding row's {prev_ts} "
+                f"(timestamps must be monotone non-decreasing)")
+        prev_ts = row["ts"]
+    return rows
+
+
+def parse_row(row: str, commit: str = "unknown", ts: float = None) -> dict:
     """Structured trajectory record from a ``name,us,derived`` CSV row.
 
-    Schema (BENCH_*.json): bench, n, b, variant, gflops, wall, commit —
+    Schema (BENCH_*.json): bench, n, b, variant, gflops, wall, commit, ts —
     parsed best-effort from the emit naming convention
     ``{bench}_{variant}_n{n}_b{b}`` so re-anchor tooling can chart a perf
     curve across commits without re-parsing free-form CSV.
@@ -73,16 +120,23 @@ def parse_row(row: str, commit: str = "unknown") -> dict:
         "gflops": float(gm.group(1)) if gm else None,
         "wall": float(us) * 1e-6,
         "commit": commit,
+        "ts": float(ts if ts is not None else time.time()),
     }
 
 
 def write_json_rows(path: str, rows: list, commit: str = None) -> None:
-    """Write CSV rows as JSON-lines trajectory records (BENCH_*.json)."""
+    """Write CSV rows as JSON-lines trajectory records (BENCH_*.json).
+
+    Rows are schema-validated (:func:`validate_rows`) before anything is
+    written, so a malformed emit name fails the run instead of poisoning
+    the trajectory file.
+    """
     commit = commit or git_commit()
+    ts = time.time()
+    records = validate_rows([parse_row(row, commit, ts) for row in rows])
     with open(path, "w") as f:
-        for row in rows:
-            f.write(json.dumps(parse_row(row, commit),
-                               sort_keys=True) + "\n")
+        for rec in records:
+            f.write(json.dumps(rec, sort_keys=True) + "\n")
 
 
 def random_matrix(n: int, seed: int = 0, dtype=np.float32):

@@ -57,6 +57,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core.backend import gemm_jnp
+from repro.obs import tracer as _obs
 
 __all__ = [
     "lu_panel", "qr_panel", "ldlt_panel",
@@ -69,6 +70,15 @@ __all__ = [
 # functions, resolved at call/trace time): `repro.core`'s package init pulls
 # in the variant registry, whose DMF modules import this module for their
 # default panels — a module-level import here would close that cycle.
+# `repro.obs` is import-safe at module level: it depends on nothing in
+# `repro` (DESIGN.md §14).
+
+
+# Each panel entry below guards its span behind a single `tr is None`
+# predicate: with tracing off, the original call runs unchanged — no name
+# formatting, no closure — preserving the bitwise-disabled contract and the
+# predicate-only overhead budget.  Spans are only meaningful eagerly; under
+# `jit` they would time tracing, not device work.
 
 
 def lu_panel(panel: jnp.ndarray):
@@ -79,7 +89,12 @@ def lu_panel(panel: jnp.ndarray):
     """
     from repro.core.lu import lu_unblocked
 
-    return lu_unblocked(panel)
+    tr = _obs.active()
+    if tr is None:
+        return lu_unblocked(panel)
+    r, c = panel.shape
+    return tr.wrap("panel", f"lu_panel[{r}x{c}]",
+                   lambda: lu_unblocked(panel))
 
 
 def ldlt_panel(panel: jnp.ndarray, nb: int, backend=None):
@@ -89,8 +104,13 @@ def ldlt_panel(panel: jnp.ndarray, nb: int, backend=None):
     from repro.core.backend import JNP_BACKEND
     from repro.core.ldlt import ldlt_panel as _ldlt_panel
 
-    return _ldlt_panel(panel, nb, backend if backend is not None
-                       else JNP_BACKEND)
+    be = backend if backend is not None else JNP_BACKEND
+    tr = _obs.active()
+    if tr is None:
+        return _ldlt_panel(panel, nb, be)
+    r, c = panel.shape
+    return tr.wrap("panel", f"ldlt_panel[{r}x{c}/{nb}]",
+                   lambda: _ldlt_panel(panel, nb, be))
 
 
 def qr_panel(panel: jnp.ndarray):
@@ -102,9 +122,16 @@ def qr_panel(panel: jnp.ndarray):
     """
     from repro.core.qr import build_t_matrix, qr_unblocked, unpack_v
 
-    packed, tau = qr_unblocked(panel)
-    v = unpack_v(packed, panel.shape[1])
-    return packed, tau, build_t_matrix(v, tau)
+    def run():
+        packed, tau = qr_unblocked(panel)
+        v = unpack_v(packed, panel.shape[1])
+        return packed, tau, build_t_matrix(v, tau)
+
+    tr = _obs.active()
+    if tr is None:
+        return run()
+    r, c = panel.shape
+    return tr.wrap("panel", f"qr_panel[{r}x{c}]", run)
 
 
 # ---------------------------------------------------------------------------
@@ -115,9 +142,24 @@ def _swap_perm(cols: jnp.ndarray, j, p) -> jnp.ndarray:
     return cols.at[j].set(p).at[p].set(j)
 
 
-@functools.partial(jax.jit, static_argnames=("steps",))
 def qrcp_panel(block: jnp.ndarray, steps: int):
     """Traced xLAQPS sweep over a trailing block (module doc for contract).
+
+    Thin eager entry over the jit-compiled sweep so an installed tracer
+    sees a ``panel`` span around the *compiled call* (the jit cache keys on
+    ``_qrcp_panel_jit`` alone — spans never force recompiles).
+    """
+    tr = _obs.active()
+    if tr is None:
+        return _qrcp_panel_jit(block, steps)
+    r, c = block.shape
+    return tr.wrap("panel", f"qrcp_panel[{r}x{c}/{steps}]",
+                   lambda: _qrcp_panel_jit(block, steps))
+
+
+@functools.partial(jax.jit, static_argnames=("steps",))
+def _qrcp_panel_jit(block: jnp.ndarray, steps: int):
+    """The jit-compiled xLAQPS sweep behind :func:`qrcp_panel`.
 
     Carry: ``(block, v, f, vn, tau, piv)`` — all fixed-shape; step ``j``
     touches rows/columns ``>= j`` through masks and dynamic gathers.  The
@@ -225,9 +267,22 @@ def qrcp_panel_eager(block: jnp.ndarray, steps: int):
 # ---------------------------------------------------------------------------
 # Hessenberg: the xLAHR2 panel, traced.
 # ---------------------------------------------------------------------------
-@functools.partial(jax.jit, static_argnames=("bk",))
 def hessenberg_panel(a: jnp.ndarray, k: int, bk: int):
     """Traced xLAHR2 sweep (module doc for contract).
+
+    Thin eager entry over the jit-compiled sweep (see :func:`qrcp_panel`
+    for the tracing rationale).
+    """
+    tr = _obs.active()
+    if tr is None:
+        return _hessenberg_panel_jit(a, k, bk)
+    return tr.wrap("panel", f"hessenberg_panel[{a.shape[0]}/{bk}]",
+                   lambda: _hessenberg_panel_jit(a, k, bk))
+
+
+@functools.partial(jax.jit, static_argnames=("bk",))
+def _hessenberg_panel_jit(a: jnp.ndarray, k: int, bk: int):
+    """The jit-compiled xLAHR2 sweep behind :func:`hessenberg_panel`.
 
     Column ``kj = k + j`` is brought current by the running right update
     (``W = A₀·V``) and the left compact-WY apply, then reduced.  The last

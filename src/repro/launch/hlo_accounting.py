@@ -19,6 +19,14 @@ then walks the call graph multiplying by **while-loop trip counts**
 (extracted from the loop-condition ``compare(iter, constant)`` pattern) so a
 body nested in two loops is scaled by both counts.  Validated against the
 scan example (exactly 10×) and the analytic 6·N·D model flops in tests.
+
+Parser fallbacks never abort the analysis: a dtype token outside
+``_DTYPE_BYTES`` is sized at 4 bytes, a ``while`` with neither a
+``known_trip_count`` annotation nor an integer constant in its condition is
+counted once — and each fallback is recorded in the returned
+``"warnings"`` list so downstream consumers (the obs attainment report)
+can surface that the numbers are lower bounds instead of silently trusting
+them.  The side-effect-free ``token`` type is skipped without a warning.
 """
 from __future__ import annotations
 
@@ -31,9 +39,12 @@ _DTYPE_BYTES = {
     "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
     "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
 }
-_SHAPE_RE = re.compile(
-    r"(pred|s8|u8|s16|u16|f16|bf16|s32|u32|f32|s64|u64|f64|c64|c128|"
-    r"f8e4m3fn|f8e5m2)\[([\d,]*)\]")
+#: Any dtype-looking token before a ``[dims]`` shape.  Tokens outside
+#: ``_DTYPE_BYTES`` fall back to 4 bytes each (warned); ``token`` — XLA's
+#: zero-byte sequencing type — is skipped silently.
+_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9_]{0,11})\[([\d,]*)\]")
+_SILENT_TYPES = frozenset(("token", "opaque"))
+_UNKNOWN_DTYPE_BYTES = 4
 _COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s+\(.*->")
 _TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
 _INSTR = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\(?.*?\)?)\s*"
@@ -58,21 +69,29 @@ _TRAFFIC_OPS = frozenset((
 ) + _COLLECTIVES + tuple(c + "-start" for c in _COLLECTIVES))
 
 
-def _shape_dims(type_str: str) -> List[Tuple[str, List[int]]]:
+def _shape_dims(type_str: str,
+                warn: Optional[set] = None) -> List[Tuple[str, List[int]]]:
     out = []
     for m in _SHAPE_RE.finditer(type_str):
+        dt = m.group(1)
+        if dt in _SILENT_TYPES:
+            continue
+        if dt not in _DTYPE_BYTES:
+            if warn is not None:
+                warn.add(f"unknown dtype {dt!r}: assumed "
+                         f"{_UNKNOWN_DTYPE_BYTES} bytes/element")
         dims = [int(d) for d in m.group(2).split(",") if d]
-        out.append((m.group(1), dims))
+        out.append((dt, dims))
     return out
 
 
-def _bytes_of(type_str: str) -> int:
+def _bytes_of(type_str: str, warn: Optional[set] = None) -> int:
     total = 0
-    for dt, dims in _shape_dims(type_str):
+    for dt, dims in _shape_dims(type_str, warn):
         n = 1
         for d in dims:
             n *= d
-        total += n * _DTYPE_BYTES[dt]
+        total += n * _DTYPE_BYTES.get(dt, _UNKNOWN_DTYPE_BYTES)
     return total
 
 
@@ -215,6 +234,7 @@ def count_instructions(hlo: str) -> int:
 def analyze_hlo(hlo: str) -> Dict[str, float]:
     comps, entry = _split_computations(hlo)
     chains = _parse_frames(hlo)
+    warnings: set = set()
     # first pass per computation: local defs + stats
     stats: Dict[str, CompStats] = {}
     for name, lines in comps.items():
@@ -243,9 +263,9 @@ def analyze_hlo(hlo: str) -> Dict[str, float]:
             # away on TPU; fusion internals are excluded via the flops-only
             # traversal below.
             if op in _TRAFFIC_OPS:
-                b = _bytes_of(type_str)
+                b = _bytes_of(type_str, warnings)
                 for nm in re.findall(r"%([\w\.\-]+)", args):
-                    b += _bytes_of(defs.get(nm, ""))
+                    b += _bytes_of(defs.get(nm, ""), warnings)
                 st.bytes += b
                 st.op_bytes[op] = st.op_bytes.get(op, 0.0) + b
                 mo = _OPNAME_RE.search(line)
@@ -262,9 +282,9 @@ def analyze_hlo(hlo: str) -> Dict[str, float]:
             if base:
                 got = 0
                 for nm in re.findall(r"%([\w\.\-]+)", args):
-                    got += _bytes_of(defs.get(nm, ""))
+                    got += _bytes_of(defs.get(nm, ""), warnings)
                 if got == 0:
-                    got = _bytes_of(type_str)
+                    got = _bytes_of(type_str, warnings)
                 st.coll[base] += got
                 st.coll_count += 1
             if op == "while":
@@ -290,11 +310,14 @@ def analyze_hlo(hlo: str) -> Dict[str, float]:
                             st.calls.append((callee, ("fused", None, "")))
         stats[name] = st
 
-    # fallback trip count: int constant in the loop-condition computation
-    def cond_trip(cond_name: str) -> int:
+    # fallback trip count: int constant in the loop-condition computation;
+    # neither annotation nor constant → count the body once, but say so.
+    def cond_trip(cond_name: str, body_name: str) -> int:
         st = stats.get(cond_name)
         if st and st.const_ints:
             return max(st.const_ints)
+        warnings.add(f"while body {body_name!r}: no known_trip_count and no "
+                     f"constant in condition {cond_name!r}; counted once")
         return 1
 
     if entry is None:
@@ -312,7 +335,7 @@ def analyze_hlo(hlo: str) -> Dict[str, float]:
             return
         for callee, (kind, trips, cond) in st.calls:
             if kind == "while":
-                t = trips if trips is not None else cond_trip(cond)
+                t = trips if trips is not None else cond_trip(cond, callee)
                 visit(callee, mf * t, mb * t, depth + 1)
             elif kind == "fused":
                 visit(callee, mf, 0.0, depth + 1)
@@ -339,4 +362,5 @@ def analyze_hlo(hlo: str) -> Dict[str, float]:
     total.update(coll)
     total["coll_bytes"] = sum(coll.values())
     total["op_bytes_detail"] = op_detail
+    total["warnings"] = sorted(warnings)
     return total

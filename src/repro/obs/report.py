@@ -1,0 +1,154 @@
+"""Derived trace metrics: overlap efficiency, critical path, attainment.
+
+Three questions the raw span list answers once the engine is instrumented
+(DESIGN.md §14):
+
+**Overlap efficiency** — the paper's look-ahead claim, quantified.  A PF
+span recorded with in-flight ``depth >= 1`` ran inside iteration *i*'s PU
+chain, which is data-independent of that iteration's bulk update TU_i^R —
+so up to ``min(chain PF time, TU_i^R time)`` of panel work can hide under
+the update.  ``overlap_efficiency`` is the hidden fraction of **all** panel
+time.  It is structural: on a serializing backend (CPU, interpret) the wall
+clock shows no speedup, but the metric still reports how much panel time
+the schedule *made hideable* — 0 for mtb/rtm by construction, rising with
+depth for ``la(d)`` until the update runs out of slack.
+
+**Critical path** — per iteration, the PU chain (depth ≥ 1 spans) and the
+bulk update (depth-0 TU) are the two concurrent lanes; everything else
+(swaps, epilogues, mtb's own-iteration PF) is serial.  ``critical_path_s``
+sums ``serial + max(lane A, lane B)``; ``ideal_speedup`` is the serialized
+span total over that — the upper bound a perfectly overlapping backend
+could realize from this exact trace.
+
+**Attainment** — the Co-Design loop (arXiv:2304.14480): join the §9
+analytical cost model (:mod:`repro.tune.model`), the trip-count-corrected
+HLO flop count (:mod:`repro.launch.hlo_accounting`), and the measured span
+times into one row per (dmf, variant, n).  ``attainment`` = modeled seconds
+/ measured seconds (1.0 = the run hit the model's roofline assumptions);
+HLO parser fallbacks (unknown dtypes, missing trip counts) are surfaced in
+the row rather than silently zeroed.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+from repro.obs.tracer import Span
+
+__all__ = ["ENGINE_CATS", "overlap", "attainment_row", "format_attainment"]
+
+#: Categories emitted by the pipeline engine itself (the timeline layer the
+#: overlap/critical-path math is defined over; driver/serve wrapper spans
+#: would double-count their enclosed engine spans).
+ENGINE_CATS = ("PF", "TU", "PU", "SWAP", "EPI")
+
+
+def _engine(spans: Sequence[Span]) -> List[Span]:
+    return [s for s in spans if s.cat in ENGINE_CATS]
+
+
+def overlap(spans: Sequence[Span]) -> Dict[str, float]:
+    """Overlap-efficiency + critical-path accounting for one traced run."""
+    eng = _engine(spans)
+    panel_s = sum(s.dur for s in eng if s.cat == "PF")
+    update_s = sum(s.dur for s in eng if s.cat in ("TU", "PU"))
+    serialized_s = sum(s.dur for s in eng)
+
+    iters = sorted({s.it for s in eng})
+    hidden_s = 0.0
+    critical_s = 0.0
+    for i in iters:
+        mine = [s for s in eng if s.it == i]
+        # lane A: the PU chain — pre-factorizations and narrow updates the
+        # schedule moved ahead (depth >= 1); lane B: the bulk update.
+        chain = sum(s.dur for s in mine if s.depth >= 1)
+        bulk = sum(s.dur for s in mine if s.cat == "TU" and s.depth == 0)
+        serial = sum(s.dur for s in mine) - chain - bulk
+        chain_pf = sum(s.dur for s in mine if s.cat == "PF" and s.depth >= 1)
+        if i >= 0:
+            hidden_s += min(chain_pf, bulk)
+        critical_s += serial + max(chain, bulk)
+
+    wall_s = (max((s.t1 for s in eng), default=0.0)
+              - min((s.t0 for s in eng), default=0.0))
+    return {
+        "overlap_efficiency": hidden_s / panel_s if panel_s > 0 else 0.0,
+        "panel_s": panel_s,
+        "update_s": update_s,
+        "hidden_s": hidden_s,
+        "serialized_s": serialized_s,
+        "critical_path_s": critical_s,
+        "ideal_speedup": serialized_s / critical_s if critical_s > 0 else 1.0,
+        "wall_s": wall_s,
+        "n_spans": float(len(eng)),
+        "n_iters": float(len([i for i in iters if i >= 0])),
+        "max_inflight": float(max((s.depth for s in eng), default=0)),
+    }
+
+
+def attainment_row(dmf: str, n: int, variant: str, schedule,
+                   spans: Sequence[Span], *, dtype="float32",
+                   backend: str = "jnp",
+                   hlo_text: Optional[str] = None) -> Dict[str, object]:
+    """One model-vs-measured join row (module doc).
+
+    ``schedule`` is a :data:`~repro.core.blocking.BlockSpec`;  ``hlo_text``
+    is optional optimized-HLO module text of the jitted factorization for
+    the compiler-side flop count (``compiled.as_text()``).
+    """
+    from repro.core.blocking import expand_schedule, panel_steps
+    from repro.tune import model
+
+    eng = _engine(spans)
+    measured_s = sum(s.dur for s in eng)
+    sched = expand_schedule(n, schedule)
+    row: Dict[str, object] = {
+        "dmf": dmf, "n": int(n), "variant": variant, "b": int(sched[0]),
+        "measured_s": measured_s,
+        "panel_s": sum(s.dur for s in eng if s.cat == "PF"),
+        "update_s": sum(s.dur for s in eng if s.cat in ("TU", "PU")),
+    }
+    try:
+        model_s = model.predict(dmf, n, dtype, variant, sched, backend)
+        flops = 0.0
+        for st in panel_steps(n, sched):
+            pf, tu, _ = model.step_costs(dmf, n, st.k, st.bk, dtype)
+            flops += pf + tu
+    except (KeyError, ValueError):
+        model_s, flops = None, None
+    row["model_s"] = model_s
+    row["model_flops"] = flops
+    row["attainment"] = (model_s / measured_s
+                         if model_s is not None and measured_s > 0 else None)
+    row["gflops"] = (flops / measured_s / 1e9
+                     if flops is not None and measured_s > 0 else None)
+    if hlo_text is not None:
+        from repro.launch.hlo_accounting import analyze_hlo
+
+        acct = analyze_hlo(hlo_text)
+        row["hlo_flops"] = acct["flops"]
+        row["hlo_gflops"] = (acct["flops"] / measured_s / 1e9
+                             if measured_s > 0 else None)
+        row["hlo_warnings"] = list(acct.get("warnings", ()))
+    return row
+
+
+def format_attainment(rows: Sequence[Dict[str, object]]) -> str:
+    """ASCII attainment table (one line per row; ``-`` for absent joins)."""
+    def num(v, scale=1.0, fmt="{:.2f}"):
+        return fmt.format(v * scale) if isinstance(v, (int, float)) else "-"
+
+    hdr = (f"{'dmf':<12} {'variant':<6} {'n':>5} {'b':>4} "
+           f"{'model_ms':>9} {'meas_ms':>9} {'attain':>7} "
+           f"{'GFLOPS':>7} {'hloGF':>7}  warnings")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        warn = r.get("hlo_warnings") or []
+        lines.append(
+            f"{r['dmf']:<12} {r['variant']:<6} {r['n']:>5} {r['b']:>4} "
+            f"{num(r.get('model_s'), 1e3):>9} "
+            f"{num(r.get('measured_s'), 1e3):>9} "
+            f"{num(r.get('attainment')):>7} "
+            f"{num(r.get('gflops')):>7} "
+            f"{num(r.get('hlo_gflops')):>7}  "
+            f"{'; '.join(warn) if warn else '-'}")
+    return "\n".join(lines)

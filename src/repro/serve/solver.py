@@ -33,6 +33,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import tracer as _obs
 from repro.serve import bucketing
 from repro.serve.bucketing import BucketKey
 from repro.serve.metrics import Metrics, throughput_summary
@@ -237,11 +238,30 @@ class SolveServer:
     def _flush(self, qkey: Tuple[BucketKey, bool],
                batch: List[SolveRequest]) -> int:
         key, cached = qkey
-        if cached:
-            xs, hits = self._run_cached(key, batch)
+        # Observability (DESIGN.md §14): one `serve` span per flushed batch
+        # when a tracer is installed — construct the tracer with
+        # ``metrics=server.metrics`` and the span-duration histograms land
+        # in the same registry snapshot() reads, so engine traces and serve
+        # summaries stay joinable.  Disabled = one predicate check.
+        tr = _obs.active()
+        if tr is None:
+            if cached:
+                xs, hits = self._run_cached(key, batch)
+            else:
+                xs = self._run_direct(key, batch)
+                hits = [False] * len(batch)
         else:
-            xs = self._run_direct(key, batch)
-            hits = [False] * len(batch)
+            name = (f"flush:{key.dmf}[{key.m}x{key.n}x{key.nrhs}]"
+                    f"{'+cache' if cached else ''}")
+            if cached:
+                xs, hits = tr.wrap("serve", name,
+                                   lambda: self._run_cached(key, batch),
+                                   batch=len(batch), cached=True)
+            else:
+                xs = tr.wrap("serve", name,
+                             lambda: self._run_direct(key, batch),
+                             batch=len(batch), cached=False)
+                hits = [False] * len(batch)
         done = self.clock()
         real = sum(bucketing.flops(r.dmf, r.a.shape[0], r.a.shape[1],
                                    r.b.shape[1]) for r in batch)

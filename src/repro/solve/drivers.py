@@ -25,6 +25,7 @@ compositions over them.  LAPACK name → meaning:
 """
 from __future__ import annotations
 
+import functools
 from typing import Optional, Union
 
 import jax.numpy as jnp
@@ -32,6 +33,7 @@ import jax.numpy as jnp
 from repro.core.backend import Backend, get_backend
 from repro.core.blocking import BlockSpec, normalize_block
 from repro.core.lookahead import deepen, get_variant
+from repro.obs import tracer as _obs
 from repro.solve.factors import (CholeskyFactors, HessenbergFactors,
                                  LDLTFactors, LUFactors, QRCPFactors,
                                  QRFactors)
@@ -53,6 +55,29 @@ def _resolve(backend: BackendLike) -> Backend:
 _static_block = normalize_block
 
 
+def _traced(fn):
+    """Driver-level observability span (DESIGN.md §14).
+
+    With no tracer installed (the default) the wrapper is a single
+    predicate check in front of the original call — bitwise invisible.
+    With a tracer, the whole driver call becomes one ``drive`` span (the
+    engine's PF/TU spans nest inside it in the exported timeline), tagged
+    with the operand shape and the requested scheduling variant.
+    """
+
+    @functools.wraps(fn)
+    def wrapper(a, *args, **kw):
+        tr = _obs.active()
+        if tr is None:
+            return fn(a, *args, **kw)
+        shape = "x".join(str(d) for d in getattr(a, "shape", ()))
+        return tr.wrap("drive", f"{fn.__name__}[{shape}]",
+                       lambda: fn(a, *args, **kw),
+                       driver=fn.__name__,
+                       variant=str(kw.get("variant", "la")))
+    return wrapper
+
+
 def _deepen(variant: str, depth: int) -> str:
     """Fold ``depth=`` into the variant name (``("la", 2)`` → ``"la2"``).
 
@@ -67,6 +92,7 @@ def _deepen(variant: str, depth: int) -> str:
 # ---------------------------------------------------------------------------
 # Factor steps — factor once, reuse the object for many solves.
 # ---------------------------------------------------------------------------
+@_traced
 def lu_factor(a: jnp.ndarray, block: BlockSpec = 128, *, variant: str = "la",
               depth: int = 1, backend: BackendLike = "jnp") -> LUFactors:
     be = _resolve(backend)
@@ -75,6 +101,7 @@ def lu_factor(a: jnp.ndarray, block: BlockSpec = 128, *, variant: str = "la",
                                  backend=be)
 
 
+@_traced
 def cholesky_factor(a: jnp.ndarray, block: BlockSpec = 128, *, variant: str = "la",
                     depth: int = 1, backend: BackendLike = "jnp") -> CholeskyFactors:
     be = _resolve(backend)
@@ -82,6 +109,7 @@ def cholesky_factor(a: jnp.ndarray, block: BlockSpec = 128, *, variant: str = "l
     return CholeskyFactors(l=l, block=_static_block(block), backend=be)
 
 
+@_traced
 def qr_factor(a: jnp.ndarray, block: BlockSpec = 128, *, variant: str = "la",
               depth: int = 1, backend: BackendLike = "jnp") -> QRFactors:
     be = _resolve(backend)
@@ -91,6 +119,7 @@ def qr_factor(a: jnp.ndarray, block: BlockSpec = 128, *, variant: str = "la",
                      block=_static_block(block), backend=be)
 
 
+@_traced
 def ldlt_factor(a: jnp.ndarray, block: BlockSpec = 128, *, variant: str = "la",
                 depth: int = 1, backend: BackendLike = "jnp") -> LDLTFactors:
     be = _resolve(backend)
@@ -99,6 +128,7 @@ def ldlt_factor(a: jnp.ndarray, block: BlockSpec = 128, *, variant: str = "la",
                        backend=be)
 
 
+@_traced
 def geqp3(a: jnp.ndarray, block: BlockSpec = 128, *,
           variant: Optional[str] = None,
           local: bool = False, depth: int = 1,
@@ -132,6 +162,7 @@ def geqp3(a: jnp.ndarray, block: BlockSpec = 128, *,
                        block=_static_block(block), backend=be)
 
 
+@_traced
 def gehrd(a: jnp.ndarray, block: BlockSpec = 128, *, variant: str = "mtb",
           backend: BackendLike = "jnp") -> HessenbergFactors:
     """Hessenberg reduction step (LAPACK GEHRD → :class:`HessenbergFactors`).
@@ -150,6 +181,7 @@ def gehrd(a: jnp.ndarray, block: BlockSpec = 128, *, variant: str = "mtb",
 # ---------------------------------------------------------------------------
 # One-shot drivers.
 # ---------------------------------------------------------------------------
+@_traced
 def gesv(a: jnp.ndarray, b: jnp.ndarray, block: BlockSpec = 128, *,
          variant: str = "la", depth: int = 1,
          backend: BackendLike = "jnp") -> jnp.ndarray:
@@ -158,6 +190,7 @@ def gesv(a: jnp.ndarray, b: jnp.ndarray, block: BlockSpec = 128, *,
                      backend=backend).solve(b)
 
 
+@_traced
 def posv(a: jnp.ndarray, b: jnp.ndarray, block: BlockSpec = 128, *,
          variant: str = "la", depth: int = 1,
          backend: BackendLike = "jnp") -> jnp.ndarray:
@@ -166,6 +199,7 @@ def posv(a: jnp.ndarray, b: jnp.ndarray, block: BlockSpec = 128, *,
                            backend=backend).solve(b)
 
 
+@_traced
 def gels(a: jnp.ndarray, b: jnp.ndarray, block: BlockSpec = 128, *,
          variant: str = "la", depth: int = 1,
          backend: BackendLike = "jnp", pivot: bool = False,
@@ -203,6 +237,7 @@ def gels(a: jnp.ndarray, b: jnp.ndarray, block: BlockSpec = 128, *,
                      backend=backend).solve(b)
 
 
+@_traced
 def getri(a: jnp.ndarray, block: BlockSpec = 128, *, variant: str = "la",
           depth: int = 1, backend: BackendLike = "jnp",
           method: str = "lu") -> jnp.ndarray:
@@ -224,6 +259,7 @@ def getri(a: jnp.ndarray, block: BlockSpec = 128, *, variant: str = "la",
     raise ValueError(f"method must be 'lu' or 'gj', got {method!r}")
 
 
+@_traced
 def gecon(a: jnp.ndarray, block: BlockSpec = 128, *, variant: str = "la",
           depth: int = 1, backend: BackendLike = "jnp",
           iters: int = 5) -> jnp.ndarray:

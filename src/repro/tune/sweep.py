@@ -46,8 +46,8 @@ from repro.tune import model
 from repro.tune.cache import TuneCache, TuneConfig, cache_key, default_cache
 from repro.tune.schedule import is_uniform, tail_schedule
 
-__all__ = ["Candidate", "search", "DEFAULT_BLOCKS", "BASELINE_BLOCK",
-           "BASELINE_VARIANT"]
+__all__ = ["Candidate", "CandidateTrace", "search", "DEFAULT_BLOCKS",
+           "BASELINE_BLOCK", "BASELINE_VARIANT"]
 
 DEFAULT_BLOCKS: Tuple[int, ...] = (32, 48, 64, 96, 128, 192, 256)
 BASELINE_BLOCK = 128          # the repo's hardcoded default at every call site
@@ -67,6 +67,28 @@ class Candidate:
         b0 = self.schedule[0]
         tail = "uniform" if is_uniform(self.schedule) else "tail"
         return f"{self.variant}/b{b0}/{tail}/{self.backend}"
+
+
+@dataclasses.dataclass
+class CandidateTrace:
+    """One measured candidate's execution trace + its §9 predicted cost.
+
+    Produced by :func:`search` when a ``trace_sink`` list is passed
+    (DESIGN.md §14): after the timed jit measurement, each candidate gets
+    one *eager* run under :func:`repro.obs.tracer.trace` so the span
+    timeline (PF/TU/PU with in-flight depth) is recorded alongside the
+    model's prediction — the co-design model-vs-measured confrontation,
+    per candidate.  ``overlap`` is :func:`repro.obs.report.overlap` of the
+    spans; ``predicted_s`` is None for unmodeled (dmf, schedule) pairs.
+    """
+
+    dmf: str
+    n: int
+    candidate: Candidate
+    measured_s: float
+    predicted_s: Optional[float]
+    spans: list
+    overlap: dict
 
 
 def _test_matrix(dmf: str, n: int, dtype, seed: int) -> jnp.ndarray:
@@ -159,6 +181,31 @@ def _candidates(dmf: str, n: int, dtype, blocks: Sequence[int],
     return out
 
 
+def _trace_candidates(dmf, n, dtype, a, timings) -> list:
+    """One eager traced run per measured candidate (module doc of
+    :class:`CandidateTrace`)."""
+    from repro.core.lookahead import get_variant
+    from repro.obs import report as obs_report
+    from repro.obs import tracer as obs_tracer
+
+    out = []
+    for cand, measured_s in timings.items():
+        fn = get_variant(dmf, cand.variant)
+        be = get_backend(cand.backend)
+        with obs_tracer.trace() as trc:
+            jax.block_until_ready(fn(a, cand.schedule, backend=be))
+        try:
+            predicted = model.predict(dmf, n, dtype, cand.variant,
+                                      cand.schedule, cand.backend)
+        except (KeyError, ValueError):
+            predicted = None
+        out.append(CandidateTrace(
+            dmf=dmf, n=n, candidate=cand, measured_s=measured_s,
+            predicted_s=predicted, spans=list(trc.spans),
+            overlap=obs_report.overlap(trc.spans)))
+    return out
+
+
 def search(
     dmf: str,
     n: int,
@@ -174,6 +221,7 @@ def search(
     force: bool = False,
     seed: int = 0,
     verbose: bool = False,
+    trace_sink: Optional[list] = None,
 ) -> TuneConfig:
     """Tune ``dmf`` at size ``n`` and persist the winner (module doc).
 
@@ -181,6 +229,12 @@ def search(
     key is cold or ``force=True``.  The measured set always contains the
     fixed ``b=128`` ``la`` baseline, so ``result.seconds <=
     result.baseline_seconds`` on the machine that ran the search.
+
+    ``trace_sink``: pass a list to additionally record one
+    :class:`CandidateTrace` per measured candidate (an eager traced run +
+    the §9 predicted cost — the observability hook, DESIGN.md §14).  The
+    traced runs happen *after* the timed measurements, so they never
+    perturb the numbers the cache persists.
     """
     from repro.core.lookahead import TUNABLE
 
@@ -228,6 +282,10 @@ def search(
             print(f"tune: {cand.label()}: {timings[cand] * 1e3:.2f} ms")
     if not timings:
         raise RuntimeError(f"no tuning candidate succeeded for {dmf} n={n}")
+
+    if trace_sink is not None:
+        trace_sink.extend(
+            _trace_candidates(dmf, n, dtype, a, timings))
 
     # one entry per cold backend: tuned() dispatches on the *caller's*
     # backend, so each key must record the best candidate measured there
