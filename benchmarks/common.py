@@ -2,9 +2,12 @@
 
 All wall-clock numbers here are REAL measurements on the CPU backend (the
 paper's experiments are CPU experiments — repro band 5/5).  Kernel-level
-Pallas timings are excluded: interpret mode executes the kernel body in
-Python, so its wall-clock is meaningless; kernels are validated for
-correctness in tests and analyzed via the dry-run rooflines instead.
+Pallas rows (``--kernels`` → BENCH_kernels.json) are the one exception:
+interpret mode executes the kernel body in Python, so their CPU wall-clock
+is meaningless as a speed comparison — those rows carry
+``derived="interpret"`` (gflops null) and pin the schema/candidate set; on
+a TPU backend the same rows carry real GFLOPS.  Kernels are validated for
+correctness in tests and analyzed via the dry-run rooflines.
 """
 from __future__ import annotations
 

@@ -47,6 +47,12 @@ def _groups(args):
     ]
     if not args.skip_distributed:
         groups.append(("distributed", bench_distributed.run))
+    if args.kernels:
+        # ISSUE 8: the Pallas kernel layer (BLIS-GEMM blocking sweep,
+        # traced-vs-pallas panels, fused-vs-composed PU) — opt-in because
+        # interpret mode makes these slow and their CPU wall-clock is not a
+        # speed comparison (bench_gemm.run_kernels docstring).
+        groups.append(("kernels", bench_gemm.run_kernels))
     return groups
 
 
@@ -58,6 +64,10 @@ def main(argv=None) -> None:
     ap.add_argument("--skip-tune", action="store_true",
                     help="omit the tuned-vs-fixed row (no tuner search, no "
                          "write to the persistent tune cache)")
+    ap.add_argument("--kernels", action="store_true",
+                    help="include the Pallas kernel-layer group (BLIS-GEMM "
+                         "blocking sweep, traced-vs-pallas panels, "
+                         "fused-vs-composed PU -> BENCH_kernels.json rows)")
     ap.add_argument("--only", default=None, metavar="NAME",
                     help="run only benchmark groups whose name contains NAME")
     ap.add_argument("--csv", default=None, metavar="PATH",

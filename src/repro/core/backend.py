@@ -13,7 +13,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Callable
+from typing import Callable, Mapping, Optional
 
 import jax
 import jax.numpy as jnp
@@ -40,8 +40,7 @@ _GEMM_MQ = 32
 _GEMM_NQ = 32
 
 
-@jax.jit
-def gemm_jnp(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+def _gemm_impl(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
     """C = A·B with f32 accumulation for bf16 inputs.
 
     jit-wrapped so an *eager* driver call costs one cached executable per
@@ -84,6 +83,15 @@ def gemm_jnp(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
         out = lax.fori_loop(0, kp // _GEMM_KQ, body,
                             jnp.zeros((mp, np_), acc))
     return out[:m, :n].astype(a.dtype)
+
+
+#: jit entry point (same rationale as :data:`trsm_jnp` below).  The unjitted
+#: body ``_gemm_impl`` stays reachable for callers that must embed the exact
+#: same op sequence inside another staged context — the Pallas panel kernels
+#: trace the shared sweep bodies into a kernel, and an inner ``pjit`` there
+#: would re-stage rather than inline.  jit == eager is bitwise for this body
+#: (pinned by tests/test_serve_solver.py), so both spellings agree.
+gemm_jnp = functools.wraps(_gemm_impl)(jax.jit(_gemm_impl))
 
 
 #: Width of the substitution diagonal blocks inside :func:`trsm_jnp`.
@@ -160,11 +168,23 @@ trsm_jnp = functools.wraps(_trsm_impl)(jax.jit(
 
 @dataclasses.dataclass(frozen=True)
 class Backend:
-    """BLAS-like vtable the DMF drivers are written against."""
+    """BLAS-like vtable the DMF drivers are written against.
+
+    ``panel_fns`` / ``fused_pu`` are optional per-DMF kernel registries
+    (keyed by ``StepOps.name``): when set, :func:`repro.core.pipeline.
+    factorize` resolves a default ``panel_fn=`` / ``fused_pu=`` from them
+    for callers that passed none — this is how ``backend="pallas"`` routes
+    every driver through the VMEM-resident panel kernels and the fused
+    PU(k+1) pipeline without per-call plumbing.  ``None`` (the jnp default)
+    leaves the DMFs' own unblocked panels in place, preserving the
+    bit-pinned legacy op sequence.
+    """
 
     name: str
     gemm: Callable[..., jnp.ndarray]
     trsm: Callable[..., jnp.ndarray]
+    panel_fns: Optional[Mapping[str, Callable]] = None
+    fused_pu: Optional[Mapping[str, Callable]] = None
 
     def update(self, c: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
         """Rank-k update ``C - A·B`` — the trailing-update workhorse."""

@@ -210,8 +210,13 @@ def _make_la_mb(dmf: str, la: Callable, depth: int = 1) -> Callable:
 
     def la_mb(a, b=128, **kw):
         # forward b by keyword so callers may use either fn(a, 32) or
-        # fn(a, b=[48, 32, 16]); an explicit fused_pu= kwarg wins.
-        kw.setdefault("fused_pu", fused)
+        # fn(a, b=[48, 32, 16]); an explicit fused_pu= kwarg wins, then the
+        # backend's own fused-PU registry (Backend.fused_pu — a tuner
+        # kernel-blocking backend carries its kernels along), then the
+        # default Pallas registry.
+        reg = getattr(kw.get("backend"), "fused_pu", None)
+        kw.setdefault("fused_pu",
+                      reg.get(dmf, fused) if reg is not None else fused)
         return la(a, b=b, **kw)
 
     return la_mb
@@ -235,6 +240,12 @@ def _make_tuned(dmf: str, table: Dict[str, Callable]) -> Callable:
         cfg = tune.tuned(dmf, a.shape, dtype=a.dtype, backend=bname)
         # block is positional: band_reduction names the parameter w, not b
         if cfg is not None:
+            if getattr(cfg, "kernel_blocks", None) and bname == "pallas":
+                # the winner was measured at a pinned BLIS (bm, bn, bk) —
+                # dispatch on the same kernel-blocking backend
+                from repro.kernels import ops as kops
+
+                kw["backend"] = kops.make_pallas_backend(cfg.kernel_blocks)
             return get_variant(dmf, cfg.variant)(a, cfg.schedule, **kw)
         fallback = table.get("la", table["mtb"])
         return fallback(a, b if b is not None else 128, **kw)

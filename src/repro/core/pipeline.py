@@ -163,7 +163,20 @@ def factorize(
     ``variant`` ∈ {``"mtb"``, ``"rtm"``, ``"la"``}; ``depth`` (``la`` only)
     is the number of panels kept in flight — ``depth=1`` is the paper's
     Listing 5, bit-identical to the pre-refactor ``*_lookahead`` drivers.
+
+    When the caller passes no ``panel_fn``, the backend's per-DMF panel
+    registry (``Backend.panel_fns``, keyed by ``ops.name``) supplies the
+    default — this is how ``backend="pallas"`` routes every variant through
+    the VMEM-resident panel kernels.  Bitwise-invisible on the interpret
+    backend: each Pallas panel traces the DMF's default op sequence (and
+    falls back to it beyond the VMEM budget).  ``fused_pu`` stays an
+    explicit opt-in (the ``la_mb`` variant resolves it from the backend's
+    ``fused_pu`` registry) so plain ``la`` keeps the composed
+    update+factor PU chain — the tuner arbitrates fused-vs-composed as the
+    ``la``-vs-``la_mb`` axis.
     """
+    if panel_fn is None and backend.panel_fns is not None:
+        panel_fn = backend.panel_fns.get(ops.name)
     if variant == "mtb":
         return _run_mtb(ops, a, b, backend, panel_fn)
     if variant == "rtm":

@@ -20,10 +20,11 @@ dimension is innermost (sequential on a TensorCore) so the f32 accumulator
 lives in VMEM across the K loop and C is written back exactly once — the
 analogue of BLIS keeping C micro-tiles in registers.
 
-Block-shape selection (the ``n_c, k_c, m_c`` analogue) is in
-:func:`pick_blocks`: multiples of (8, 128) for f32 / (16, 128) for bf16,
-sized so A+B tiles + accumulator fit the ~16 MiB/core VMEM budget with
-double buffering.
+Block-shape selection (the ``n_c, k_c, m_c`` analogue) lives in
+:func:`repro.tune.model.gemm_blocks` — derived from the §9 machine record
+(:data:`repro.tune.model.MACHINE`: VMEM budget, lane/sublane tiling) so the
+kernel layer quotes no machine numbers of its own; :func:`pick_blocks` is
+the thin delegate the kernels and the tuner's kernel-blocking axis share.
 """
 from __future__ import annotations
 
@@ -34,11 +35,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-# v5e VMEM is 16 MiB/core; leave headroom for double buffering + spills.
-VMEM_BUDGET_BYTES = 12 * 1024 * 1024
+from repro.tune.model import MACHINE, gemm_blocks
 
-_LANE = 128          # MXU/VPU lane width — last dim multiples
-_SUBLANE = {jnp.dtype(jnp.float32): 8, jnp.dtype(jnp.bfloat16): 16}
+#: Re-exported from the machine record (single source of truth) — kept under
+#: the historical name for callers/tests that size against the GEMM budget.
+VMEM_BUDGET_BYTES = MACHINE.vmem_budget_bytes
 
 
 def _round_up(x: int, m: int) -> int:
@@ -47,23 +48,12 @@ def _round_up(x: int, m: int) -> int:
 
 def pick_blocks(m: int, n: int, k: int, dtype,
                 target=(512, 512, 512)) -> tuple[int, int, int]:
-    """Choose (bm, bn, bk): hardware-aligned, VMEM-resident (BLIS §2 analogue)."""
-    itemsize = jnp.dtype(dtype).itemsize
-    sub = _SUBLANE.get(jnp.dtype(dtype), 8)
-    bm = min(_round_up(m, sub), target[0])
-    bn = min(_round_up(n, _LANE), target[1])
-    bk = min(_round_up(k, _LANE), target[2])
-    # shrink bk first (stream more K steps) until the working set fits:
-    # A(bm,bk) + B(bk,bn) double-buffered + f32 accumulator (bm,bn).
-    def footprint(bm, bn, bk):
-        return 2 * (bm * bk + bk * bn) * itemsize + bm * bn * 4
-    while footprint(bm, bn, bk) > VMEM_BUDGET_BYTES and bk > _LANE:
-        bk //= 2
-    while footprint(bm, bn, bk) > VMEM_BUDGET_BYTES and bn > _LANE:
-        bn //= 2
-    while footprint(bm, bn, bk) > VMEM_BUDGET_BYTES and bm > sub:
-        bm //= 2
-    return bm, bn, bk
+    """Choose (bm, bn, bk): hardware-aligned, VMEM-resident (BLIS §2 analogue).
+
+    Delegates to :func:`repro.tune.model.gemm_blocks` — the §9 roofline
+    machine record is the one place the VMEM budget and tile grid live.
+    """
+    return gemm_blocks(m, n, k, dtype, target=target)
 
 
 def _gemm_kernel(a_ref, b_ref, o_ref, acc_ref, *, ksteps: int):

@@ -73,20 +73,40 @@ def _lu_factor_inplace(a: jnp.ndarray):
 # ---------------------------------------------------------------------------
 # LU: PU(k+1) = TRSM + GEMM + GETF2, one kernel.
 # ---------------------------------------------------------------------------
-def _fused_lu_pu_kernel(l11_ref, l21_ref, a1l_ref, a2l_ref,
-                        u12_ref, out_ref, piv_ref):
-    l11 = l11_ref[...].astype(jnp.float32)
-    l21 = l21_ref[...].astype(jnp.float32)
+def _lu_pu_body(l11, l21, a1l, a2l):
+    """The fused LU PU(k+1) op sequence on plain values (f32 compute).
+
+    Shared by the Pallas kernel (tracing it over VMEM refs) and the eager
+    ``fused_lu_panel_update_ref`` twin, so the ``ops.py`` VMEM-budget
+    fallback is bitwise transparent on the interpret backend.
+    """
+    l11 = l11.astype(jnp.float32)
+    l21 = l21.astype(jnp.float32)
     # 1. U12 = L11⁻¹ · A1L            (unit-lower substitution)
-    u12 = _substitute(l11, a1l_ref[...].astype(jnp.float32), unit=True)
+    u12 = _substitute(l11, a1l.astype(jnp.float32), unit=True)
     # 2. panel = A2L − L21 · U12      (MXU contraction, TU_k^L)
-    panel = a2l_ref[...].astype(jnp.float32) - jnp.dot(
+    panel = a2l.astype(jnp.float32) - jnp.dot(
         l21, u12, preferred_element_type=jnp.float32)
     # 3. PF_{k+1}                     (GETF2 with partial pivoting)
     packed, piv = _lu_factor_inplace(panel)
+    return u12, packed, piv
+
+
+def _fused_lu_pu_kernel(l11_ref, l21_ref, a1l_ref, a2l_ref,
+                        u12_ref, out_ref, piv_ref):
+    u12, packed, piv = _lu_pu_body(
+        l11_ref[...], l21_ref[...], a1l_ref[...], a2l_ref[...])
     u12_ref[...] = u12.astype(u12_ref.dtype)
     out_ref[...] = packed.astype(out_ref.dtype)
     piv_ref[...] = piv
+
+
+def fused_lu_panel_update_ref(l11, l21, a1l, a2l):
+    """Eager twin of :func:`fused_lu_panel_update` — same op sequence,
+    no ``pallas_call``.  Bitwise-matches the kernel on the interpret
+    backend; used as the over-budget fallback in ``ops.py``."""
+    u12, packed, piv = _lu_pu_body(l11, l21, a1l, a2l)
+    return u12.astype(a1l.dtype), packed.astype(a2l.dtype), piv[:, 0]
 
 
 def fused_lu_panel_update(l11, l21, a1l, a2l, *, interpret: bool = False):
@@ -140,10 +160,15 @@ def _chol_factor_top(a: jnp.ndarray, nb: int) -> jnp.ndarray:
     return lax.fori_loop(0, nb, body, a)
 
 
-def _fused_chol_pu_kernel(lrow_ref, l21_ref, panel_ref, out_ref, *, bn: int):
-    lrow = lrow_ref[...].astype(jnp.float32)        # (bn, b)
-    l21 = l21_ref[...].astype(jnp.float32)          # (m, b)
-    panel = panel_ref[...].astype(jnp.float32)      # (m, bn)
+def _chol_pu_body(lrow, l21, panel, bn):
+    """The fused Cholesky PU(k+1) op sequence on plain values (f32 compute).
+
+    Shared by the Pallas kernel and the eager
+    ``fused_cholesky_panel_update_ref`` twin (bitwise-transparent fallback).
+    """
+    lrow = lrow.astype(jnp.float32)                 # (bn, b)
+    l21 = l21.astype(jnp.float32)                   # (m, b)
+    panel = panel.astype(jnp.float32)               # (m, bn)
     # 1. TU_k^L : panel −= L21 · lrowᵀ
     panel = panel - jnp.dot(l21, lrow.T, preferred_element_type=jnp.float32)
     # 2. PF_{k+1}: factor diag block (tril: match the oracle's zeroed
@@ -151,10 +176,19 @@ def _fused_chol_pu_kernel(lrow_ref, l21_ref, panel_ref, out_ref, *, bn: int):
     top = jnp.tril(_chol_factor_top(panel[:bn], bn))
     if panel.shape[0] > bn:                         # static shape check
         rest = _substitute(top, panel[bn:].T, unit=False).T  # X·L11ᵀ = A21
-        out = jnp.concatenate([top, rest])
-    else:
-        out = top
+        return jnp.concatenate([top, rest])
+    return top
+
+
+def _fused_chol_pu_kernel(lrow_ref, l21_ref, panel_ref, out_ref, *, bn: int):
+    out = _chol_pu_body(lrow_ref[...], l21_ref[...], panel_ref[...], bn)
     out_ref[...] = out.astype(out_ref.dtype)
+
+
+def fused_cholesky_panel_update_ref(lrow, l21, panel):
+    """Eager twin of :func:`fused_cholesky_panel_update` — same op sequence,
+    no ``pallas_call``; the over-budget fallback in ``ops.py``."""
+    return _chol_pu_body(lrow, l21, panel, lrow.shape[0]).astype(panel.dtype)
 
 
 def fused_cholesky_panel_update(lrow, l21, panel, *, interpret: bool = False):

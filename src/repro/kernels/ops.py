@@ -7,8 +7,20 @@ entry points compile natively.  Toggle explicitly with
 ``set_interpret(True/False)`` if needed.
 
 ``PALLAS_BACKEND`` plugs into :mod:`repro.core.backend` so every DMF driver
-can run on top of the paper-analogous BLIS kernels; ``FUSED_PU`` is the
-registry the ``la_mb`` variant (look-ahead + malleable) resolves through.
+can run on top of the paper-analogous BLIS kernels; its ``panel_fns`` /
+``fused_pu`` registries are how ``backend="pallas"`` routes the drivers
+through the VMEM-resident panel kernels (``FUSED_PU`` is what the ``la_mb``
+variant resolves through).
+
+VMEM-budget fallback (DESIGN.md §15): each wrapper checks the kernel's VMEM
+footprint at the input dtype against :data:`VMEM_PANEL_BUDGET` (from the §9
+machine record, :data:`repro.tune.model.MACHINE`) and falls back to the
+traced panel / composed update for shapes that don't fit — the paper sizes
+``b`` to the cache for the same reason.  The fallback is *bitwise
+transparent* on the interpret backend (each Pallas kernel traces the same
+op sequence as its fallback) and *observable*: with a tracer installed
+(:mod:`repro.obs`) the wrapper emits a zero-duration span tagged
+``meta={"fallback": "vmem"}`` instead of silently rerouting.
 """
 from __future__ import annotations
 
@@ -19,17 +31,21 @@ import jax
 from repro.core.backend import Backend, trsm_jnp
 from repro.kernels import blis_gemm as _bg
 from repro.kernels import fused_panel_update as _fpu
+from repro.kernels import panel_hessenberg as _phs
 from repro.kernels import panel_lu as _plu
-from repro.kernels import panels as _panels
 from repro.kernels import panel_qr as _pqr
+from repro.kernels import panel_qrcp as _pqrcp
+from repro.kernels import panels as _panels
 from repro.kernels import trsm as _tr
+from repro.obs import tracer as _obs
+from repro.tune.model import MACHINE
 
 # interpret=True on CPU (validation), False on TPU (deployment).
 _INTERPRET = jax.default_backend() == "cpu"
 
-# largest panel footprint (bytes of f32) we allow a single-cell kernel to
-# claim in VMEM before falling back to the composed path.
-VMEM_PANEL_BUDGET = 10 * 1024 * 1024
+# largest working set (bytes, at the input dtype) a single-cell kernel may
+# claim in VMEM before falling back — single-sourced from the machine record.
+VMEM_PANEL_BUDGET = MACHINE.vmem_panel_budget_bytes
 
 
 def set_interpret(flag: bool) -> None:
@@ -37,14 +53,30 @@ def set_interpret(flag: bool) -> None:
     _INTERPRET = flag
 
 
-def _f32_bytes(*shapes) -> int:
+def _nbytes(itemsize: int, *shapes) -> int:
+    """Footprint of ``shapes`` at ``itemsize`` bytes per element."""
     total = 0
     for s in shapes:
         n = 1
         for d in s:
             n *= d
-        total += 4 * n
+        total += itemsize * n
     return total
+
+
+def _note_fallback(name: str, *shapes) -> None:
+    """Tag a VMEM-budget fallback on the installed tracer (if any).
+
+    Zero-duration span, ``meta={"fallback": "vmem"}`` — the observable
+    record that a Pallas wrapper rerouted to its traced/composed twin.
+    """
+    tr = _obs.active()
+    if tr is None:
+        return
+    t = tr.clock()
+    dims = ",".join("x".join(str(d) for d in s) for s in shapes)
+    tr.add(_obs.Span("panel", f"{name}[{dims}]->fallback", t, t,
+                     meta={"fallback": "vmem"}))
 
 
 # ---------------------------------------------------------------------------
@@ -84,52 +116,88 @@ def lu_solve_small(lu, b):
     VMEM residency of the packed factor.  Falls back to the two XLA
     triangular solves when the factor exceeds the VMEM budget.
     """
-    if _f32_bytes(lu.shape, b.shape, b.shape) > VMEM_PANEL_BUDGET:
+    if _nbytes(b.dtype.itemsize, lu.shape, b.shape, b.shape) \
+            > VMEM_PANEL_BUDGET:
+        _note_fallback("lu_solve_small", lu.shape, b.shape)
         y = trsm_jnp(lu, b, side="left", lower=True, unit_diagonal=True)
         return trsm_jnp(lu, y, side="left", lower=False)
     return _tr.lu_solve_small(lu, b, interpret=_INTERPRET)
 
 
 # ---------------------------------------------------------------------------
-# Panel factorizations (the sequential bottleneck, VMEM-resident)
+# Panel factorizations (the sequential bottleneck, VMEM-resident).
+#
+# Each wrapper's fallback is the *traced* panel from ``repro.kernels.panels``
+# — the Pallas kernel body traces the same op sequence over its VMEM refs,
+# so crossing the budget boundary is bitwise invisible on the interpret
+# backend (pinned by tests/test_kernels_pallas.py).
 # ---------------------------------------------------------------------------
 def lu_panel(panel):
-    """GETF2 panel kernel with jnp fallback for panels beyond VMEM."""
-    if _f32_bytes(panel.shape) > VMEM_PANEL_BUDGET:
-        from repro.core.lu import lu_unblocked
-
-        return lu_unblocked(panel)
+    """GETF2 panel kernel; traced-panel fallback beyond the VMEM budget."""
+    if _nbytes(panel.dtype.itemsize, panel.shape, panel.shape) \
+            > VMEM_PANEL_BUDGET:
+        _note_fallback("lu_panel", panel.shape)
+        return _panels.lu_panel(panel)
     return _plu.lu_panel(panel, interpret=_INTERPRET)
 
 
 def qr_panel(panel):
-    """GEQR2+LARFT panel kernel with jnp fallback."""
-    if _f32_bytes(panel.shape) > VMEM_PANEL_BUDGET:
-        from repro.kernels import ref
-
-        return ref.qr_panel(panel)
+    """GEQR2+LARFT panel kernel; traced-panel fallback."""
+    m, nb = panel.shape
+    if _nbytes(panel.dtype.itemsize, (m, nb), (m, nb), (nb, nb)) \
+            > VMEM_PANEL_BUDGET:
+        _note_fallback("qr_panel", panel.shape)
+        return _panels.qr_panel(panel)
     return _pqr.qr_panel(panel, interpret=_INTERPRET)
 
 
+def qrcp_panel(block, steps):
+    """xLAQPS panel kernel (in-core norm downdate + pivot argmax).
+
+    Serves both the ``qrcp`` contract (full trailing block) and the
+    ``qrcp_local`` windowed-pivoting contract (bare window) — same as the
+    traced ``panels.qrcp_panel`` it falls back to.
+    """
+    r, c = block.shape
+    if _nbytes(block.dtype.itemsize,
+               (r, c), (r, c), (r, steps), (c, steps)) > VMEM_PANEL_BUDGET:
+        _note_fallback("qrcp_panel", block.shape)
+        return _panels.qrcp_panel(block, steps)
+    return _pqrcp.qrcp_panel(block, steps, interpret=_INTERPRET)
+
+
+def hessenberg_panel(a, k, bk):
+    """xLAHR2 panel kernel (whole matrix + V/T/W aux VMEM-resident)."""
+    n = a.shape[0]
+    if _nbytes(a.dtype.itemsize,
+               (n, n), (n, n), (n, bk), (n, bk), (bk, bk)) \
+            > VMEM_PANEL_BUDGET:
+        _note_fallback("hessenberg_panel", a.shape)
+        return _panels.hessenberg_panel(a, k, bk)
+    return _phs.hessenberg_panel(a, k, bk, interpret=_INTERPRET)
+
+
 # ---------------------------------------------------------------------------
-# Fused panel updates — LA_MB (malleable) building blocks
+# Fused panel updates — LA_MB (malleable) building blocks.  Fallbacks are
+# the eager ``_ref`` twins tracing the identical op sequence (bitwise on
+# the interpret backend) — NOT the composed ``ref.py`` oracles.
 # ---------------------------------------------------------------------------
 def fused_lu_panel_update(l11, l21, a1l, a2l):
-    if _f32_bytes(l11.shape, l21.shape, a1l.shape, a2l.shape, a2l.shape) \
+    if _nbytes(a2l.dtype.itemsize,
+               l11.shape, l21.shape, a1l.shape, a2l.shape, a2l.shape) \
             > VMEM_PANEL_BUDGET:
-        from repro.kernels import ref
-
-        return ref.fused_lu_panel_update(l11, l21, a1l, a2l)
+        _note_fallback("fused_lu_pu", l21.shape, a2l.shape)
+        return _fpu.fused_lu_panel_update_ref(l11, l21, a1l, a2l)
     return _fpu.fused_lu_panel_update(l11, l21, a1l, a2l,
                                       interpret=_INTERPRET)
 
 
 def fused_cholesky_panel_update(lrow, l21, panel):
-    if _f32_bytes(lrow.shape, l21.shape, panel.shape, panel.shape) \
+    if _nbytes(panel.dtype.itemsize,
+               lrow.shape, l21.shape, panel.shape, panel.shape) \
             > VMEM_PANEL_BUDGET:
-        from repro.kernels import ref
-
-        return ref.fused_cholesky_panel_update(lrow, l21, panel)
+        _note_fallback("fused_chol_pu", l21.shape, panel.shape)
+        return _fpu.fused_cholesky_panel_update_ref(lrow, l21, panel)
     return _fpu.fused_cholesky_panel_update(lrow, l21, panel,
                                             interpret=_INTERPRET)
 
@@ -149,21 +217,22 @@ FUSED_PU = {
 #
 #     lu_tiled(a, 128, panel_fn=kops.PANEL_KERNELS["lu"])
 #
-# Two families share the registry: the Pallas VMEM-resident kernels (lu/qr
-# — this module's wrappers, interpret mode on CPU) and the traced pure-XLA
-# microkernels from ``repro.kernels.panels`` (ldlt / qrcp / qrcp_local /
-# hessenberg — ``lax.fori_loop`` bodies, O(1) trace in the panel width;
-# those are also the DMFs' *defaults*, so the entries here exist for
-# explicit selection and for symmetry of the registry).  The traced lu/qr
-# forms stay reachable as ``panels.TRACED_PANELS["lu"/"qr"]`` — the bare
-# keys resolve to the Pallas kernels, matching the pre-existing contract.
-# cholesky and gauss_jordan have no entry: their panels are backend TRSM /
-# a latency-trivial diagonal inverse.
+# All five panel contracts now resolve to VMEM-resident Pallas kernels
+# (lu / qr / qrcp / qrcp_local / hessenberg — each with the traced-panel
+# fallback above); ldlt stays traced from ``panels.TRACED_PANELS`` (its
+# panel is a backend-TRSM diagonal sweep, nothing to pin in VMEM).  The
+# traced forms stay reachable as ``panels.TRACED_PANELS[...]`` for explicit
+# selection (the tuner's traced-vs-pallas panel axis).  cholesky and
+# gauss_jordan have no entry: their panels are backend TRSM / a
+# latency-trivial diagonal inverse.
 PANEL_KERNELS = {
     **{k: v for k, v in _panels.TRACED_PANELS.items()
-       if k not in ("lu", "qr")},
+       if k not in ("lu", "qr", "qrcp", "qrcp_local", "hessenberg")},
     "lu": lu_panel,
     "qr": qr_panel,
+    "qrcp": qrcp_panel,
+    "qrcp_local": qrcp_panel,
+    "hessenberg": hessenberg_panel,
 }
 
 
@@ -180,4 +249,22 @@ def _backend_trsm(t, b, *, side="left", lower=True, trans=False,
                 unit_diagonal=unit_diagonal)
 
 
-PALLAS_BACKEND = Backend(name="pallas", gemm=_backend_gemm, trsm=_backend_trsm)
+def make_pallas_backend(blocks=None) -> Backend:
+    """A Pallas backend with an explicit BLIS GEMM blocking.
+
+    ``blocks=None`` → per-shape :func:`repro.tune.model.gemm_blocks` (the
+    §9-derived default).  The tuner's kernel-blocking axis instantiates one
+    backend per ``(bm, bn, bk)`` candidate; every backend carries the panel
+    and fused-PU registries so ``factorize`` / ``la_mb`` resolve the
+    VMEM-resident kernels without per-call plumbing.
+    """
+    if blocks is None:
+        g = _backend_gemm
+    else:
+        def g(a, b, blocks=tuple(blocks)):
+            return gemm(a, b, blocks=blocks)
+    return Backend(name="pallas", gemm=g, trsm=_backend_trsm,
+                   panel_fns=PANEL_KERNELS, fused_pu=FUSED_PU)
+
+
+PALLAS_BACKEND = make_pallas_backend()

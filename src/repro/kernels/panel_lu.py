@@ -6,6 +6,12 @@ matters is *never touching HBM* during the column loop.  This kernel holds
 the whole (m × nb) panel in VMEM, runs the pivot-search / swap / rank-1 loop
 there, and writes the packed result plus the pivot vector once.
 
+The kernel body traces :func:`repro.core.lu.lu_unblocked` — the exact
+routine the jnp drivers use as their default panel — over the VMEM-resident
+value, so the Pallas panel is **bitwise identical** to the jnp panel on the
+interpret backend (the transparency guarantee behind the VMEM-budget
+fallback in ``ops.py``) and runs in the input dtype (f64 included).
+
 The wrapper enforces the VMEM budget (panels larger than VMEM fall back to
 the jnp path in ``ops.py`` — in the DMF the panel is chosen to fit, exactly
 as the paper sizes b to the cache).
@@ -14,44 +20,15 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-from jax import lax
 from jax.experimental import pallas as pl
 
 
 def _lu_panel_kernel(a_ref, out_ref, piv_ref):
-    a = a_ref[...].astype(jnp.float32)
-    m, nb = a.shape
-    rows = lax.broadcasted_iota(jnp.int32, (m, 1), 0)       # (m, 1)
-    cols = lax.broadcasted_iota(jnp.int32, (1, nb), 1)      # (1, nb)
-    steps = min(m, nb)
+    from repro.core.lu import lu_unblocked
 
-    def body(j, carry):
-        a, piv = carry
-        colj = lax.dynamic_slice_in_dim(a, j, 1, axis=1)    # (m, 1)
-        cand = jnp.where(rows < j, -jnp.inf, jnp.abs(colj))
-        p = jnp.argmax(cand, axis=0)[0].astype(jnp.int32)
-        piv = lax.dynamic_update_slice_in_dim(
-            piv, p[None, None], j, axis=0)
-        # swap rows j <-> p
-        rj = lax.dynamic_slice_in_dim(a, j, 1, axis=0)
-        rp = lax.dynamic_slice_in_dim(a, p, 1, axis=0)
-        a = lax.dynamic_update_slice_in_dim(a, rj, p, axis=0)
-        a = lax.dynamic_update_slice_in_dim(a, rp, j, axis=0)
-        # rank-1 update with masked l / u-row
-        pivval = lax.dynamic_slice(a, (j, j), (1, 1))       # (1, 1)
-        colj = lax.dynamic_slice_in_dim(a, j, 1, axis=1)
-        l = jnp.where(rows > j, colj / pivval, 0.0)         # (m, 1)
-        rowj = lax.dynamic_slice_in_dim(a, j, 1, axis=0)
-        u = jnp.where(cols > j, rowj, 0.0)                  # (1, nb)
-        a = a - l * u
-        newcol = jnp.where(rows > j, l, lax.dynamic_slice_in_dim(a, j, 1, 1))
-        a = lax.dynamic_update_slice_in_dim(a, newcol, j, axis=1)
-        return a, piv
-
-    piv0 = jnp.zeros((nb, 1), jnp.int32)
-    a, piv = lax.fori_loop(0, steps, body, (a, piv0))
-    out_ref[...] = a.astype(out_ref.dtype)
-    piv_ref[...] = piv
+    packed, piv = lu_unblocked(a_ref[...])
+    out_ref[...] = packed
+    piv_ref[...] = piv[:, None]
 
 
 def lu_panel(panel: jnp.ndarray, *, interpret: bool = False):
@@ -61,17 +38,18 @@ def lu_panel(panel: jnp.ndarray, *, interpret: bool = False):
     :func:`repro.core.lu.lu_unblocked` (panel-relative 0-based pivots).
     """
     m, nb = panel.shape
+    steps = min(m, nb)
     out, piv = pl.pallas_call(
         _lu_panel_kernel,
         grid=(1,),
         in_specs=[pl.BlockSpec((m, nb), lambda i: (0, 0))],
         out_specs=[
             pl.BlockSpec((m, nb), lambda i: (0, 0)),
-            pl.BlockSpec((nb, 1), lambda i: (0, 0)),
+            pl.BlockSpec((steps, 1), lambda i: (0, 0)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((m, nb), panel.dtype),
-            jax.ShapeDtypeStruct((nb, 1), jnp.int32),
+            jax.ShapeDtypeStruct((steps, 1), jnp.int32),
         ],
         interpret=interpret,
     )(panel)

@@ -4,71 +4,28 @@ Computes the packed panel, tau, *and* the compact-WY ``T`` matrix in a single
 VMEM-resident kernel — in the blocked QR the panel+T is the sequential
 bottleneck the paper's look-ahead hides, and building T in the same kernel
 saves a second pass over V.
+
+The kernel body traces :func:`repro.core.qr.qr_unblocked` +
+:func:`~repro.core.qr.build_t_matrix` — the same routines behind the traced
+``panels.qr_panel`` — so the Pallas panel is **bitwise identical** to the
+jnp panel on the interpret backend and runs in the input dtype (f64
+included); the ``ops.py`` VMEM-budget fallback is therefore transparent.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-from jax import lax
 from jax.experimental import pallas as pl
 
 
 def _qr_panel_kernel(a_ref, out_ref, tau_ref, t_ref):
-    a = a_ref[...].astype(jnp.float32)
-    m, nb = a.shape
-    rows = lax.broadcasted_iota(jnp.int32, (m, 1), 0)
-    cols = lax.broadcasted_iota(jnp.int32, (1, nb), 1)
-    steps = min(m, nb)
+    from repro.core.qr import build_t_matrix, qr_unblocked, unpack_v
 
-    def house(j, carry):
-        a, tau = carry
-        colj = lax.dynamic_slice_in_dim(a, j, 1, axis=1)    # (m, 1)
-        x = jnp.where(rows >= j, colj, 0.0)
-        alpha = lax.dynamic_slice(a, (j, j), (1, 1))        # (1, 1)
-        xnorm = jnp.sqrt(jnp.sum(x * x))
-        sign = jnp.where(alpha >= 0, 1.0, -1.0)
-        beta = -sign * xnorm
-        safe = xnorm > 0
-        tau_j = jnp.where(safe, (beta - alpha) / beta, 0.0)  # (1, 1)
-        denom = jnp.where(safe, alpha - beta, 1.0)
-        v = jnp.where(rows > j, x / denom, 0.0)
-        v = jnp.where(rows == j, 1.0, v)                    # (m, 1), v[j]=1
-        # apply H_j = I − tau v vᵀ to columns > j
-        w = tau_j * jnp.dot(v.T, a, preferred_element_type=jnp.float32)
-        w = jnp.where(cols > j, w, 0.0)                     # (1, nb)
-        a = a - v * w
-        # pack: beta on the diagonal, v below
-        newcol = jnp.where(rows > j, v,
-                           lax.dynamic_slice_in_dim(a, j, 1, axis=1))
-        newcol = jnp.where(rows == j, jnp.where(safe, beta, alpha), newcol)
-        a = lax.dynamic_update_slice_in_dim(a, newcol, j, axis=1)
-        tau = lax.dynamic_update_slice_in_dim(tau, tau_j, j, axis=0)
-        return a, tau
-
-    tau0 = jnp.zeros((nb, 1), jnp.float32)
-    a, tau = lax.fori_loop(0, steps, house, (a, tau0))
-
-    # ---- LARFT (forward columnwise) in the same kernel -------------------
-    v = jnp.where((rows > cols) & (cols < nb), a, 0.0)      # strictly-below part
-    v = v + jnp.where((rows == cols), 1.0, 0.0) * jnp.where(rows < nb, 1.0, 0.0)
-    vtv = jnp.dot(v.T, v, preferred_element_type=jnp.float32)  # (nb, nb)
-    tcols = lax.broadcasted_iota(jnp.int32, (nb, 1), 0)
-
-    def larft(j, t):
-        rhs = lax.dynamic_slice_in_dim(vtv, j, 1, axis=1)   # (nb, 1)
-        rhs = jnp.where(tcols < j, rhs, 0.0)
-        tau_j = lax.dynamic_slice_in_dim(tau, j, 1, axis=0)  # (1, 1)
-        newcol = -tau_j * jnp.dot(t, rhs,
-                                  preferred_element_type=jnp.float32)
-        newcol = jnp.where(tcols < j, newcol, 0.0)
-        newcol = jnp.where(tcols == j, tau_j, newcol)
-        return lax.dynamic_update_slice_in_dim(t, newcol, j, axis=1)
-
-    t = lax.fori_loop(0, nb, larft, jnp.zeros((nb, nb), jnp.float32))
-
-    out_ref[...] = a.astype(out_ref.dtype)
-    tau_ref[...] = tau.astype(tau_ref.dtype)
-    t_ref[...] = t.astype(t_ref.dtype)
+    packed, tau = qr_unblocked(a_ref[...])
+    v = unpack_v(packed, a_ref.shape[1])
+    out_ref[...] = packed
+    tau_ref[...] = tau[:, None]
+    t_ref[...] = build_t_matrix(v, tau)
 
 
 def qr_panel(panel: jnp.ndarray, *, interpret: bool = False):

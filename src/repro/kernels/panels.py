@@ -50,13 +50,11 @@ while QRCP and Hessenberg — pinned to tolerances, not bits — switch.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core.backend import gemm_jnp
+from repro.core.backend import _gemm_impl
 from repro.obs import tracer as _obs
 
 __all__ = [
@@ -65,6 +63,18 @@ __all__ = [
     "hessenberg_panel", "hessenberg_panel_eager",
     "TRACED_PANELS",
 ]
+
+# The QRCP/Hessenberg loop bodies below (``_qrcp_sweep`` /
+# ``_hessenberg_sweep``) are plain traceable functions shared with the
+# VMEM-resident Pallas kernels (``kernels/panel_qrcp.py`` /
+# ``kernels/panel_hessenberg.py``): the kernel bodies trace the *same*
+# sweep over VMEM-resident values, which is what makes the Pallas panels
+# bitwise-match these traced panels on the interpret backend (and makes
+# the VMEM-budget fallback in ``kernels/ops.py`` transparent).  They call
+# the unjitted ``_gemm_impl`` — inside this module's ``jax.jit`` wrappers
+# it inlines to the identical HLO as the jitted ``gemm_jnp`` entry, and
+# inside a Pallas kernel an inner ``pjit`` would re-stage instead of
+# inline.
 
 # NB: the `repro.core` imports below are deliberately *lazy* (inside the
 # functions, resolved at call/trace time): `repro.core`'s package init pulls
@@ -157,9 +167,8 @@ def qrcp_panel(block: jnp.ndarray, steps: int):
                    lambda: _qrcp_panel_jit(block, steps))
 
 
-@functools.partial(jax.jit, static_argnames=("steps",))
-def _qrcp_panel_jit(block: jnp.ndarray, steps: int):
-    """The jit-compiled xLAQPS sweep behind :func:`qrcp_panel`.
+def _qrcp_sweep(block: jnp.ndarray, steps: int):
+    """The xLAQPS sweep body (shared: jit wrapper + Pallas kernel).
 
     Carry: ``(block, v, f, vn, tau, piv)`` — all fixed-shape; step ``j``
     touches rows/columns ``>= j`` through masks and dynamic gathers.  The
@@ -189,7 +198,7 @@ def _qrcp_panel_jit(block: jnp.ndarray, steps: int):
         f = jnp.take(f, permv, axis=0)
         vn = jnp.take(vn, permv)
         # --- bring column j current: rows j: get reflectors 0..j−1 -------
-        upd = gemm_jnp(v, f[j, :][:, None])[:, 0]
+        upd = _gemm_impl(v, f[j, :][:, None])[:, 0]
         colj = (b[:, j] - jnp.where(rows >= j, upd, 0.0)).astype(dtype)
         # --- reflector j --------------------------------------------------
         vj, tau_j, beta = householder_vector(colj, j)
@@ -199,10 +208,10 @@ def _qrcp_panel_jit(block: jnp.ndarray, steps: int):
         b = b.at[:, j].set(newcol.astype(dtype))
         # --- F(:, j) = tau·(B₀ᵀ·v − F·(Vᵀ·v))  (xLAQPS incremental F) ----
         vj2 = vj[:, None]
-        w = (gemm_jnp(b.T, vj2) - gemm_jnp(f, gemm_jnp(v.T, vj2)))[:, 0]
+        w = (_gemm_impl(b.T, vj2) - _gemm_impl(f, _gemm_impl(v.T, vj2)))[:, 0]
         f = f.at[:, j].set((tau_j * w).astype(dtype))
         # --- pivot row j of every trailing column (completes row j) ------
-        rowj = gemm_jnp(v[j, :][None, :], f.T)[0]
+        rowj = _gemm_impl(v[j, :][None, :], f.T)[0]
         rowj = b[j, :] - rowj
         b = b.at[j, :].set(jnp.where(cols > j, rowj, b[j, :]).astype(dtype))
         # --- exact norm downdate: ‖B[j+1:, i]‖² = ‖B[j:, i]‖² − B[j,i]² --
@@ -213,12 +222,16 @@ def _qrcp_panel_jit(block: jnp.ndarray, steps: int):
         block,
         jnp.zeros((r, steps), dtype),
         jnp.zeros((c, steps), dtype),
-        gemm_jnp(jnp.ones((1, r), dtype), block * block)[0],
+        _gemm_impl(jnp.ones((1, r), dtype), block * block)[0],
         jnp.zeros((steps,), dtype),
         jnp.zeros((steps,), jnp.int32),
     )
     b, v, f, _, tau, piv = lax.fori_loop(0, steps, body, carry0)
     return b, v, f, tau, piv
+
+
+#: The jit-compiled xLAQPS sweep behind :func:`qrcp_panel`.
+_qrcp_panel_jit = jax.jit(_qrcp_sweep, static_argnames=("steps",))
 
 
 def qrcp_panel_eager(block: jnp.ndarray, steps: int):
@@ -280,9 +293,8 @@ def hessenberg_panel(a: jnp.ndarray, k: int, bk: int):
                    lambda: _hessenberg_panel_jit(a, k, bk))
 
 
-@functools.partial(jax.jit, static_argnames=("bk",))
-def _hessenberg_panel_jit(a: jnp.ndarray, k: int, bk: int):
-    """The jit-compiled xLAHR2 sweep behind :func:`hessenberg_panel`.
+def _hessenberg_sweep(a: jnp.ndarray, k: int, bk: int):
+    """The xLAHR2 sweep body (shared: jit wrapper + Pallas kernel).
 
     Column ``kj = k + j`` is brought current by the running right update
     (``W = A₀·V``) and the left compact-WY apply, then reduced.  The last
@@ -333,6 +345,10 @@ def _hessenberg_panel_jit(a: jnp.ndarray, k: int, bk: int):
         jnp.zeros((bk,), dtype),
     )
     return lax.fori_loop(0, bk, body, carry0)
+
+
+#: The jit-compiled xLAHR2 sweep behind :func:`hessenberg_panel`.
+_hessenberg_panel_jit = jax.jit(_hessenberg_sweep, static_argnames=("bk",))
 
 
 def hessenberg_panel_eager(a: jnp.ndarray, k: int, bk: int):

@@ -56,6 +56,10 @@ class TuneConfig:
     seconds: float                   # measured wall-clock of the winner
     baseline_seconds: float          # measured fixed-b la baseline
     depth: int = 1                   # look-ahead depth of the winner
+    #: BLIS GEMM blocking (bm, bn, bk) of the winner — None means the
+    #: backend's per-shape default (repro.tune.model.gemm_blocks); only
+    #: meaningful for Pallas backends (the tuner's kernel-blocking axis).
+    kernel_blocks: Optional[Tuple[int, int, int]] = None
     from_cache: bool = False         # True when returned without measuring
 
     def __post_init__(self):
@@ -67,6 +71,10 @@ class TuneConfig:
         d.pop("from_cache")
         d["shape"] = list(self.shape)
         d["schedule"] = list(self.schedule)
+        if self.kernel_blocks is None:
+            d.pop("kernel_blocks")           # pre-ISSUE-8 schema compatible
+        else:
+            d["kernel_blocks"] = list(self.kernel_blocks)
         return d
 
     @classmethod
@@ -81,11 +89,14 @@ class TuneConfig:
         depth = d.get("depth", None)
         if depth is None:
             depth = parse_variant(d["variant"])[1]
+        kb = d.get("kernel_blocks")          # absent in pre-ISSUE-8 entries
         return cls(dmf=d["dmf"], shape=tuple(d["shape"]), dtype=d["dtype"],
                    backend=d["backend"], variant=d["variant"],
                    schedule=tuple(d["schedule"]), seconds=d["seconds"],
                    baseline_seconds=d["baseline_seconds"],
-                   depth=int(depth), from_cache=from_cache)
+                   depth=int(depth),
+                   kernel_blocks=tuple(kb) if kb else None,
+                   from_cache=from_cache)
 
 
 def cache_key(dmf: str, shape: ShapeLike, dtype, backend: str,

@@ -20,14 +20,119 @@ search, and the search always measures the fixed-``b`` baseline too.
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, Sequence, Tuple
+import dataclasses
+from typing import Callable, Dict, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 
 from repro.core.blocking import BlockSpec, panel_steps
 from repro.launch.roofline import HBM_BW, PEAK_FLOPS
 
-__all__ = ["predict", "rank", "step_costs"]
+__all__ = ["Machine", "MACHINE", "gemm_attainment", "gemm_blocks", "predict",
+           "rank", "step_costs"]
+
+
+# ---------------------------------------------------------------------------
+# The machine description — ONE source of truth for the §9-style roofline
+# constants AND the VMEM geometry the Pallas kernels block for.  The paper's
+# §2 sizes (n_c, k_c, m_c) from cache capacities and §6.1 quotes the machine
+# table once; everything downstream (``repro.kernels.blis_gemm.pick_blocks``,
+# the VMEM panel budget in ``repro.kernels.ops``, the GEMM attainment term
+# of :func:`predict`) derives from this record instead of re-quoting
+# numbers.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Machine:
+    """Roofline + memory-hierarchy constants of the target chip (v5e)."""
+
+    peak_flops: float = PEAK_FLOPS        # bf16 FLOP/s per chip
+    hbm_bw: float = HBM_BW                # bytes/s per chip
+    vmem_bytes: int = 16 * 1024 * 1024    # VMEM per core
+    #: working-set ceiling for the BLIS GEMM tiles (double-buffered A_c/B_c
+    #: + f32 accumulator) — vmem_bytes minus headroom for spills/pipeline.
+    vmem_budget_bytes: int = 12 * 1024 * 1024
+    #: ceiling for a whole-panel single-cell kernel (panel + outputs); the
+    #: ``ops.py`` wrappers fall back to the traced panels above this.
+    vmem_panel_budget_bytes: int = 10 * 1024 * 1024
+    lane: int = 128                       # MXU/VPU lane width (last dim)
+    sublane_f32: int = 8                  # second-minor tile, f32
+    sublane_bf16: int = 16                # second-minor tile, bf16
+    mxu: int = 128                        # systolic array edge
+
+    def sublane(self, dtype) -> int:
+        dt = jnp.dtype(dtype)
+        if dt == jnp.dtype(jnp.bfloat16):
+            return self.sublane_bf16
+        return self.sublane_f32
+
+    @property
+    def ridge_flops_per_byte(self) -> float:
+        """Arithmetic intensity at which compute and HBM traffic balance."""
+        return self.peak_flops / self.hbm_bw
+
+
+MACHINE = Machine()
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def gemm_blocks(m: int, n: int, k: int, dtype,
+                target=(512, 512, 512),
+                machine: Machine = MACHINE) -> Tuple[int, int, int]:
+    """(bm, bn, bk) for the BLIS five-loop kernel, derived from ``machine``.
+
+    The §2/§9 derivation: align to the (sublane, lane) tile grid, then
+    shrink until the double-buffered A_c/B_c tiles plus the f32 accumulator
+    fit the VMEM budget — shrinking ``bk`` first (stream more K steps; K is
+    the sequential grid dim so this costs latency, not traffic), then ``bn``
+    then ``bm``.  ``repro.kernels.blis_gemm.pick_blocks`` delegates here —
+    the kernel layer holds no machine numbers of its own.
+    """
+    itemsize = jnp.dtype(dtype).itemsize
+    sub = machine.sublane(dtype)
+    lane = machine.lane
+    bm = min(_round_up(m, sub), target[0])
+    bn = min(_round_up(n, lane), target[1])
+    bk = min(_round_up(k, lane), target[2])
+
+    def footprint(bm, bn, bk):
+        return 2 * (bm * bk + bk * bn) * itemsize + bm * bn * 4
+
+    while footprint(bm, bn, bk) > machine.vmem_budget_bytes and bk > lane:
+        bk //= 2
+    while footprint(bm, bn, bk) > machine.vmem_budget_bytes and bn > lane:
+        bn //= 2
+    while footprint(bm, bn, bk) > machine.vmem_budget_bytes and bm > sub:
+        bm //= 2
+    return bm, bn, bk
+
+
+def gemm_attainment(m: int, n: int, k: int, dtype,
+                    blocks: Optional[Tuple[int, int, int]] = None,
+                    machine: Machine = MACHINE) -> float:
+    """Roofline attainment (fraction of peak) of a blocked m×k·k×n GEMM.
+
+    Traffic model of the five-loop structure: every A tile is re-read once
+    per ``bn`` column block and every B tile once per ``bm`` row block
+    (C is written exactly once — the accumulator stays in VMEM across K):
+
+        bytes = itemsize · (m·k·⌈n/bn⌉ + k·n·⌈m/bm⌉) + m·n·itemsize
+
+    Attainment = min(1, intensity / ridge) with intensity = 2mnk / bytes —
+    the §9 ingredient :func:`predict` uses to scale GEMM efficiency per
+    kernel-blocking candidate.
+    """
+    if blocks is None:
+        blocks = gemm_blocks(m, n, k, dtype, machine=machine)
+    bm, bn, _ = blocks
+    itemsize = jnp.dtype(dtype).itemsize
+    n_reads = -(-n // max(bn, 1))
+    m_reads = -(-m // max(bm, 1))
+    traffic = itemsize * (m * k * n_reads + k * n * m_reads) + m * n * itemsize
+    intensity = 2.0 * m * n * k / max(traffic, 1.0)
+    return min(1.0, intensity / machine.ridge_flops_per_byte)
 
 # Effective fraction of bf16 peak for BLAS-3 trailing updates, per backend.
 # The Pallas kernels run interpreted on CPU (DESIGN.md §2) — heavily derated
@@ -148,8 +253,14 @@ def step_costs(dmf: str, n: int, k: int, bk: int,
 
 
 def predict(dmf: str, n: int, dtype, variant: str, schedule: BlockSpec,
-            backend: str = "jnp") -> float:
+            backend: str = "jnp",
+            kernel_blocks: Optional[Tuple[int, int, int]] = None) -> float:
     """Modeled seconds for one factorization under ``schedule``.
+
+    ``kernel_blocks`` is the tuner's kernel-blocking axis: for a Pallas
+    backend it scales the GEMM efficiency by the roofline attainment of the
+    dominant trailing-update shape under that (bm, bn, bk) — so candidates
+    differing only in kernel blocking get distinct §9 predictions.
 
     Raises ValueError for schedules the DMF would reject (band reduction's
     uniform-bandwidth rule, checked by the same core helper the drivers
@@ -164,6 +275,12 @@ def predict(dmf: str, n: int, dtype, variant: str, schedule: BlockSpec,
     base, depth = parse_variant(variant)
     peak = _peak_flops(dtype)
     gemm_eff = GEMM_EFF.get(backend, 0.5)
+    if backend.startswith("pallas"):
+        # dominant TU shape: the first iteration's bulk (r × b) · (b × r)
+        steps0 = list(panel_steps(n, schedule))
+        b0 = steps0[0].bk if steps0 else int(n)
+        r0 = max(n - b0, 1)
+        gemm_eff *= gemm_attainment(r0, r0, b0, dtype, blocks=kernel_blocks)
     total = 0.0
     for st in panel_steps(n, schedule):
         pf_fl, tu_fl, tu_by = step_costs(dmf, n, st.k, st.bk, dtype)
@@ -193,13 +310,15 @@ def rank(dmf: str, n: int, dtype,
     """Candidates sorted by modeled time (ascending).
 
     Each candidate needs ``.variant``, ``.schedule``, ``.backend``
-    attributes (see :class:`repro.tune.sweep.Candidate`); candidates whose
+    attributes (see :class:`repro.tune.sweep.Candidate`); an optional
+    ``.kernel_blocks`` feeds the Pallas attainment term.  Candidates whose
     schedule :func:`predict` rejects as invalid for the DMF (band
     reduction's uniform-bandwidth rule) sort last rather than raising.
     """
     def score(c):
         try:
-            return predict(dmf, n, dtype, c.variant, c.schedule, c.backend)
+            return predict(dmf, n, dtype, c.variant, c.schedule, c.backend,
+                           kernel_blocks=getattr(c, "kernel_blocks", None))
         except (KeyError, ValueError):
             return float("inf")
 

@@ -62,11 +62,19 @@ class Candidate:
     variant: str
     schedule: Tuple[int, ...]
     backend: str
+    #: BLIS GEMM blocking (bm, bn, bk) — the kernel-blocking axis (ISSUE 8).
+    #: None = the backend's per-shape default (``model.gemm_blocks``); only
+    #: enumerated for Pallas backends, where the blocking is a real knob.
+    kernel_blocks: Optional[Tuple[int, int, int]] = None
 
     def label(self) -> str:
         b0 = self.schedule[0]
         tail = "uniform" if is_uniform(self.schedule) else "tail"
-        return f"{self.variant}/b{b0}/{tail}/{self.backend}"
+        lbl = f"{self.variant}/b{b0}/{tail}/{self.backend}"
+        if self.kernel_blocks is not None:
+            bm, bn, bk = self.kernel_blocks
+            lbl += f"/kb{bm}x{bn}x{bk}"
+        return lbl
 
 
 @dataclasses.dataclass
@@ -117,15 +125,42 @@ def _time_fn(fn, *args, warmup: int = 1, repeats: int = 3) -> float:
         return float(np.median(times))
 
 
+def _candidate_backend(cand: Candidate):
+    """Backend instance for a candidate — kernel-blocking candidates get a
+    Pallas backend pinned to their (bm, bn, bk)."""
+    if cand.kernel_blocks is not None:
+        from repro.kernels import ops as kops
+
+        return kops.make_pallas_backend(cand.kernel_blocks)
+    return get_backend(cand.backend)
+
+
 def _measure(dmf: str, cand: Candidate, a: jnp.ndarray, *,
              warmup: int, repeats: int) -> float:
     """Median seconds for one candidate (jit-compiled, block_until_ready)."""
     from repro.core.lookahead import get_variant
 
     fn = get_variant(dmf, cand.variant)
-    be = get_backend(cand.backend)
+    be = _candidate_backend(cand)
     timed = jax.jit(lambda x: fn(x, cand.schedule, backend=be))
     return _time_fn(timed, a, warmup=warmup, repeats=repeats)
+
+
+def _kernel_block_axis(n: int, b0: int, dtype) -> list:
+    """Kernel-blocking values to sweep for a Pallas candidate.
+
+    ``None`` (the per-shape ``gemm_blocks`` default) plus the §9-derived
+    blockings for the dominant trailing-update shape at two targets —
+    deduplicated, so small problems (where every target collapses to the
+    same aligned blocking) contribute a single candidate.
+    """
+    r = max(n - b0, 1)
+    axis = [None]
+    for target in ((512, 512, 512), (256, 256, 256)):
+        kb = model.gemm_blocks(r, r, b0, dtype, target=target)
+        if kb not in axis:
+            axis.append(kb)
+    return axis
 
 
 def _candidates(dmf: str, n: int, dtype, blocks: Sequence[int],
@@ -177,7 +212,16 @@ def _candidates(dmf: str, n: int, dtype, blocks: Sequence[int],
                                 continue
                         except (KeyError, ValueError):
                             pass          # unmodeled DMF/schedule: measure
-                    out.append(Candidate(variant=v, schedule=s, backend=be))
+                    if be.startswith("pallas"):
+                        # kernel-blocking axis: the BLIS (bm, bn, bk) is a
+                        # real knob only where our Pallas GEMM runs
+                        for kb in _kernel_block_axis(n, s[0], dtype):
+                            out.append(Candidate(variant=v, schedule=s,
+                                                 backend=be,
+                                                 kernel_blocks=kb))
+                    else:
+                        out.append(Candidate(variant=v, schedule=s,
+                                             backend=be))
     return out
 
 
@@ -191,12 +235,13 @@ def _trace_candidates(dmf, n, dtype, a, timings) -> list:
     out = []
     for cand, measured_s in timings.items():
         fn = get_variant(dmf, cand.variant)
-        be = get_backend(cand.backend)
+        be = _candidate_backend(cand)
         with obs_tracer.trace() as trc:
             jax.block_until_ready(fn(a, cand.schedule, backend=be))
         try:
             predicted = model.predict(dmf, n, dtype, cand.variant,
-                                      cand.schedule, cand.backend)
+                                      cand.schedule, cand.backend,
+                                      kernel_blocks=cand.kernel_blocks)
         except (KeyError, ValueError):
             predicted = None
         out.append(CandidateTrace(
@@ -298,6 +343,7 @@ def search(
             dmf=dmf, shape=(n, n), dtype=jnp.dtype(dtype).name,
             backend=be, variant=best.variant, schedule=best.schedule,
             depth=parse_variant(best.variant)[1],
+            kernel_blocks=best.kernel_blocks,
             seconds=mine[best],
             baseline_seconds=mine.get(baselines[be], mine[best]))
         cache.put(cache_key(dmf, n, dtype, be), hits[be])

@@ -1,0 +1,269 @@
+"""ISSUE 8: VMEM-resident Pallas panels, fused PU, and §9-derived blocking.
+
+Four contracts under test (filename carries the ``pallas`` token, so the
+whole module routes to the slow ``-m pallas`` CI lane):
+
+* **Bitwise transparency** — every Pallas panel wrapper in
+  ``kernels/ops.py`` produces *bit-identical* output to its traced
+  (pure-XLA) counterpart on the interpret backend, across f32/f64 and
+  ragged shapes.  This is by construction: the kernel bodies trace the
+  same functions as the fallbacks, so the VMEM-budget fallback is
+  invisible to numerics.
+* **VMEM fallback boundary** — shrinking ``kops.VMEM_PANEL_BUDGET``
+  crosses the Pallas→traced boundary without changing a single bit, and
+  the rejection is *reported*: a zero-duration ``panel`` span tagged
+  ``meta={"fallback": "vmem"}`` when a tracer is installed (satellite b —
+  no silent fallbacks).
+* **Fused ≡ composed** — the fused PU(k+1) Pallas kernels match their
+  extracted ``*_ref`` bodies bitwise, and the ``la_mb`` engine path with
+  ``backend="pallas"`` resolves them via ``Backend.fused_pu``.
+* **One source of machine truth** — ``blis_gemm.pick_blocks`` delegates
+  to ``repro.tune.model.gemm_blocks`` (no duplicated §9 constants), and
+  the tuner's kernel-blocking axis records a §9 prediction per candidate
+  and round-trips through the cache JSON.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core  # noqa: F401  (import order: core before kernels)
+from repro import obs
+from repro.core.lookahead import FACTORIZATIONS, get_variant, list_variants
+from repro.kernels import blis_gemm as bg
+from repro.kernels import fused_panel_update as fpu
+from repro.kernels import ops as kops
+from repro.kernels import panels
+from repro.tune.model import MACHINE, gemm_attainment, gemm_blocks
+
+from conformance import CHECKS, make_input, tolerance, Case
+from conftest import PALLAS_MAX_N
+
+jax.config.update("jax_enable_x64", True)
+
+
+def _rand(m, n, seed=0, dtype=np.float64):
+    return jnp.asarray(np.random.default_rng(seed)
+                       .standard_normal((m, n)).astype(dtype))
+
+
+def _assert_bitwise(got, want):
+    for g, w in zip(got, want):
+        assert jnp.asarray(g).dtype == jnp.asarray(w).dtype
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+# ---------------------------------------------------------------------------
+# Pallas panel ≡ traced panel, bitwise, f32/f64 × ragged shapes.
+# ---------------------------------------------------------------------------
+DTYPES = (np.float32, np.float64)
+PANEL_SHAPES = ((24, 8), (16, 16), (8, 16), (17, 5))
+
+
+@pytest.mark.parametrize("dtype", DTYPES, ids=["f32", "f64"])
+@pytest.mark.parametrize("shape", PANEL_SHAPES)
+def test_lu_panel_bitwise(shape, dtype):
+    panel = _rand(*shape, seed=1, dtype=dtype)
+    _assert_bitwise(kops.lu_panel(panel), panels.TRACED_PANELS["lu"](panel))
+
+
+@pytest.mark.parametrize("dtype", DTYPES, ids=["f32", "f64"])
+@pytest.mark.parametrize("shape", PANEL_SHAPES)
+def test_qr_panel_bitwise(shape, dtype):
+    panel = _rand(*shape, seed=2, dtype=dtype)
+    _assert_bitwise(kops.qr_panel(panel), panels.TRACED_PANELS["qr"](panel))
+
+
+@pytest.mark.parametrize("dtype", DTYPES, ids=["f32", "f64"])
+@pytest.mark.parametrize("shape,steps", [((24, 24), 8), ((16, 24), 8),
+                                         ((24, 16), 16)])
+def test_qrcp_panel_bitwise(shape, steps, dtype):
+    block = _rand(*shape, seed=3, dtype=dtype)
+    _assert_bitwise(kops.qrcp_panel(block, steps),
+                    panels.qrcp_panel(block, steps))
+
+
+@pytest.mark.parametrize("dtype", DTYPES, ids=["f32", "f64"])
+@pytest.mark.parametrize("k,bk", [(0, 8), (8, 8), (16, 4)])
+def test_hessenberg_panel_bitwise(k, bk, dtype):
+    a = _rand(24, 24, seed=4, dtype=dtype)
+    _assert_bitwise(kops.hessenberg_panel(a, k, bk),
+                    panels.hessenberg_panel(a, k, bk))
+
+
+# ---------------------------------------------------------------------------
+# VMEM-budget fallback: bitwise-invisible, and reported via repro.obs.
+# ---------------------------------------------------------------------------
+def test_vmem_fallback_is_bitwise_invisible(monkeypatch):
+    panel = _rand(24, 8, seed=5)
+    via_pallas = kops.lu_panel(panel)
+    monkeypatch.setattr(kops, "VMEM_PANEL_BUDGET", 1)  # reject everything
+    via_traced = kops.lu_panel(panel)
+    _assert_bitwise(via_traced, via_pallas)
+    _assert_bitwise(via_traced, panels.TRACED_PANELS["lu"](panel))
+
+
+@pytest.mark.parametrize("name,call", [
+    ("lu_panel", lambda: kops.lu_panel(_rand(16, 8, seed=6))),
+    ("qr_panel", lambda: kops.qr_panel(_rand(16, 8, seed=6))),
+    ("qrcp_panel", lambda: kops.qrcp_panel(_rand(16, 16, seed=6), 8)),
+    ("hessenberg_panel",
+     lambda: kops.hessenberg_panel(_rand(16, 16, seed=6), 0, 8)),
+])
+def test_vmem_fallback_emits_obs_span(monkeypatch, name, call):
+    monkeypatch.setattr(kops, "VMEM_PANEL_BUDGET", 1)
+    with obs.trace() as tr:
+        call()
+    falls = [s for s in tr.spans if s.meta.get("fallback") == "vmem"]
+    assert falls, [s.name for s in tr.spans]
+    assert falls[0].cat == "panel"
+    assert name in falls[0].name
+    assert falls[0].dur == 0.0                  # marker span, not a timing
+
+
+def test_within_budget_emits_no_fallback_span():
+    with obs.trace() as tr:
+        kops.lu_panel(_rand(16, 8, seed=7))
+    assert not [s for s in tr.spans if "fallback" in s.meta]
+
+
+def test_budget_boundary_straddle(monkeypatch):
+    """Footprints straddling the budget pick opposite paths, same bits."""
+    panel = _rand(16, 8, seed=8)                # f64: in+out = 2*16*8*8 B
+    fp = 2 * 16 * 8 * panel.dtype.itemsize
+    ref = panels.TRACED_PANELS["lu"](panel)
+    for budget, expect_fallback in ((fp, False), (fp - 1, True)):
+        monkeypatch.setattr(kops, "VMEM_PANEL_BUDGET", budget)
+        with obs.trace() as tr:
+            out = kops.lu_panel(panel)
+        fell = any(s.meta.get("fallback") == "vmem" for s in tr.spans)
+        assert fell == expect_fallback, budget
+        _assert_bitwise(out, ref)
+
+
+# ---------------------------------------------------------------------------
+# Fused PU(k+1) ≡ composed reference, bitwise (same body, one pallas_call).
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", DTYPES, ids=["f32", "f64"])
+def test_fused_lu_pu_bitwise_vs_ref(dtype):
+    rng = np.random.default_rng(9)
+    b, m = 8, 16
+    l11 = jnp.asarray(np.tril(rng.standard_normal((b, b)), -1)
+                      + np.eye(b), dtype)
+    l21 = jnp.asarray(0.1 * rng.standard_normal((m, b)), dtype)
+    a1l = jnp.asarray(rng.standard_normal((b, b)), dtype)
+    a2l = jnp.asarray(rng.standard_normal((m, b)), dtype)
+    _assert_bitwise(kops.fused_lu_panel_update(l11, l21, a1l, a2l),
+                    fpu.fused_lu_panel_update_ref(l11, l21, a1l, a2l))
+
+
+@pytest.mark.parametrize("dtype", DTYPES, ids=["f32", "f64"])
+def test_fused_cholesky_pu_bitwise_vs_ref(dtype):
+    rng = np.random.default_rng(10)
+    b, m = 8, 16
+    g = rng.standard_normal((2 * b, 2 * b))
+    spd = g @ g.T + 4 * b * np.eye(2 * b)
+    lrow = jnp.asarray(0.1 * rng.standard_normal((b, b)), dtype)
+    l21 = jnp.asarray(0.1 * rng.standard_normal((m, b)), dtype)
+    panel = jnp.asarray(spd[:m, :b], dtype)
+    _assert_bitwise(kops.fused_cholesky_panel_update(lrow, l21, panel),
+                    fpu.fused_cholesky_panel_update_ref(lrow, l21, panel))
+
+
+def test_la_mb_resolves_fused_pu_from_pallas_backend():
+    from repro.core.backend import get_backend
+
+    be = get_backend("pallas")
+    assert be.fused_pu is not None
+    assert be.fused_pu["lu"] is kops.fused_lu_panel_update
+    assert be.fused_pu["cholesky"] is kops.fused_cholesky_panel_update
+    # the engine path: la_mb + backend="pallas" runs end to end and
+    # reconstructs (fused kernels accumulate in f32 — tolerance, not bits)
+    n, b = 16, 8
+    a = jnp.asarray(make_input("lu", n, n, seed=11, dtype=np.float32))
+    fac, piv = get_variant("lu", "la_mb")(a, b, backend=be)
+    CHECKS["lu"](a, (fac, piv),
+                 tolerance(Case("lu", "la_mb", "pallas", "float32",
+                                "psmall")), b, "pallas")
+
+
+# ---------------------------------------------------------------------------
+# Conformance: every DMF runs through backend="pallas" at PALLAS_MAX_N.
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dmf", FACTORIZATIONS)
+def test_every_dmf_pallas_backend_at_cap(dmf):
+    from repro.core.backend import get_backend
+
+    n, b = PALLAS_MAX_N, 8
+    a = jnp.asarray(make_input(dmf, n, n, seed=12, dtype=np.float32))
+    variant = "la" if "la" in list_variants(dmf) else "mtb"
+    out = get_variant(dmf, variant)(a, b, backend=get_backend("pallas"))
+    # conformance.tolerance scaled to this n (f32 compute path throughout)
+    tol = 200.0 * n * float(jnp.finfo(np.float32).eps)
+    CHECKS[dmf](a, out, tol, b, "pallas")
+
+
+def test_factorize_auto_injects_backend_panel_fn():
+    """backend="pallas" resolves panel_fn from Backend.panel_fns — and the
+    injection is bitwise-invisible vs passing the Pallas panel explicitly."""
+    from repro.core.backend import get_backend
+
+    be = get_backend("pallas")
+    a = _rand(16, 16, seed=13, dtype=np.float32)
+    auto = get_variant("lu", "mtb")(a, 8, backend=be)
+    explicit = get_variant("lu", "mtb")(a, 8, backend=be,
+                                        panel_fn=kops.lu_panel)
+    _assert_bitwise(auto, explicit)
+
+
+# ---------------------------------------------------------------------------
+# §9-derived blocking: one source of machine truth, tuner axis, predictions.
+# ---------------------------------------------------------------------------
+def test_pick_blocks_single_source_of_truth():
+    assert bg.VMEM_BUDGET_BYTES == MACHINE.vmem_budget_bytes
+    assert kops.VMEM_PANEL_BUDGET == MACHINE.vmem_panel_budget_bytes
+    for mnk in ((512, 512, 512), (384, 256, 128), (64, 64, 64)):
+        for dt in (jnp.float32, jnp.float64):
+            assert bg.pick_blocks(*mnk, dt) == gemm_blocks(*mnk, dt)
+
+
+def test_gemm_blocks_aligned_and_within_budget():
+    for mnk, dt in (((2048, 2048, 2048), jnp.float32),
+                    ((1024, 512, 256), jnp.float64),
+                    ((96, 200, 72), jnp.float32)):
+        bm, bn, bk = gemm_blocks(*mnk, dt)
+        itemsize = jnp.dtype(dt).itemsize
+        assert bm % MACHINE.sublane(dt) == 0
+        assert bn % MACHINE.lane == 0
+        fp = 2 * (bm * bk + bk * bn) * itemsize + bm * bn * 4
+        assert fp <= MACHINE.vmem_budget_bytes, (mnk, dt)
+
+
+def test_gemm_attainment_model_sanity():
+    att = gemm_attainment(2048, 2048, 2048, jnp.float32)
+    assert 0.0 < att <= 1.0
+    # fragmenting into tiny blocks inflates traffic -> lower attainment
+    tiny = gemm_attainment(2048, 2048, 2048, jnp.float32,
+                           blocks=(8, 128, 128))
+    assert tiny < att
+
+
+def test_tuner_kernel_block_axis_and_cache_roundtrip(tmp_path):
+    from repro.tune import TuneCache, TuneConfig, search
+
+    sink = []
+    cache = TuneCache(tmp_path / "tune.json")
+    cfg = search("lu", PALLAS_MAX_N, jnp.float32, blocks=(16,),
+                 backends=("pallas",), repeats=1, warmup=0, cache=cache,
+                 trace_sink=sink)
+    labels = [t.candidate.label() for t in sink]
+    kb = [t for t in sink if t.candidate.kernel_blocks is not None]
+    assert any("/kb" in lb for lb in labels), labels
+    assert kb, labels
+    for t in kb:                       # §9 prediction recorded per candidate
+        assert t.predicted_s is not None and t.predicted_s > 0
+    # the winning config round-trips kernel_blocks through the cache JSON
+    again = TuneConfig.from_json(cfg.to_json())
+    assert again.kernel_blocks == cfg.kernel_blocks
+    if cfg.kernel_blocks is not None:
+        assert isinstance(cfg.kernel_blocks, tuple)

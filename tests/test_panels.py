@@ -78,15 +78,21 @@ def test_hessenberg_panel_traced_matches_eager():
 
 
 def test_panel_registry_covers_traced_family():
-    # the traced microkernels are registered and selectable via panel_fn=
+    # every panel contract is registered and selectable via panel_fn=
     for dmf in ("ldlt", "qrcp", "qrcp_local", "hessenberg"):
         assert dmf in kops.PANEL_KERNELS, dmf
-    assert kops.PANEL_KERNELS["qrcp"] is panels.qrcp_panel
-    assert kops.PANEL_KERNELS["qrcp_local"] is panels.qrcp_panel
-    assert kops.PANEL_KERNELS["hessenberg"] is panels.hessenberg_panel
-    # lu/qr keep their Pallas VMEM kernels on the bare keys; the traced
+    # ISSUE 8: the bare keys resolve to the VMEM-resident Pallas wrappers
+    # (with the budget-checked traced fallback built in); the traced
     # pure-XLA forms stay reachable through TRACED_PANELS
-    assert kops.PANEL_KERNELS["lu"] is not panels.TRACED_PANELS["lu"]
+    assert kops.PANEL_KERNELS["qrcp"] is kops.qrcp_panel
+    assert kops.PANEL_KERNELS["qrcp_local"] is kops.qrcp_panel
+    assert kops.PANEL_KERNELS["hessenberg"] is kops.hessenberg_panel
+    for dmf in ("lu", "qr", "qrcp", "qrcp_local", "hessenberg"):
+        assert kops.PANEL_KERNELS[dmf] is not panels.TRACED_PANELS[dmf], dmf
+    assert panels.TRACED_PANELS["qrcp"] is panels.qrcp_panel
+    assert panels.TRACED_PANELS["hessenberg"] is panels.hessenberg_panel
+    # ldlt has no Pallas form yet — still the traced microkernel
+    assert kops.PANEL_KERNELS["ldlt"] is panels.TRACED_PANELS["ldlt"]
     a = _rand(32, seed=34)
     fac, piv = get_variant("lu", "mtb")(
         a, 16, panel_fn=panels.TRACED_PANELS["lu"])
