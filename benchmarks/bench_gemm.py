@@ -58,7 +58,6 @@ def run_kernels(n: int = 64, b: int = 16, gemm_n: int = 256):
 
     import numpy as np
 
-    import repro.core  # noqa: F401  (import order: core before kernels)
     from repro.kernels import ops as kops
     from repro.kernels import panels, ref
     from repro.tune.model import gemm_blocks

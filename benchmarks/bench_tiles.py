@@ -1,0 +1,156 @@
+"""Tile-DAG scheduling (DESIGN.md §16): tiled vs la, plus tuner arbitration.
+
+Two questions, one row set (``tiles_*`` → BENCH_tiles.json):
+
+1. **Where does the tile DAG pay?**  Paired eager wall clock of
+   ``variant="tiled"`` against ``variant="la"`` over square / tall / wide
+   shapes.  Eager (not jitted) measurement is deliberate: the tile
+   executor is an eager wavefront loop over jitted task bodies, and la's
+   engine likewise dispatches eagerly over jitted backend primitives —
+   the *dispatch structure* of the schedule is exactly what differs
+   (under one enclosing jit XLA flattens both to near-identical
+   programs).  The repeats are interleaved A/B so clock drift cancels.
+   Expected shape of the result: tiled loses tall shapes (the TSQRT
+   chain re-factors stacked tiles the panel sweep factors once) and
+   wins wide ones (a single tile row degenerates the DAG to
+   GEQRT + UNMQRs — fewer dispatches than the pipeline's per-iteration
+   machinery).
+
+2. **Does ``variant="tuned"`` arbitrate to the tile schedule?**  The best
+   wide-shape tiled win is planted as a :class:`TuneConfig`
+   (``variant="tiled"``, ``tile=b``) in a scratch cache, and the same
+   factorization is re-timed through ``variant="tuned"`` dispatch.  The
+   resolution is *verified structurally* — tiled QR returns the
+   :class:`~repro.core.tiles.TileQR` factored form, so the output type
+   proves which schedule ran — and the row's ``derived`` field records
+   ``resolved=tiled``.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, gflops
+
+#: (dmf, (m, n), b) per shape class.  Small sizes: both engines run
+#: eagerly here (module doc) and CI's tiles-smoke wall budget is tight.
+SQUARE = (("cholesky", (128, 128), 64),
+          ("cholesky", (192, 192), 96),
+          ("qr", (192, 192), 64))
+TALL = (("qr", (256, 64), 64),)
+WIDE = (("qr", (32, 256), 32),
+        ("qr", (48, 288), 48),
+        ("qr", (64, 256), 64),
+        ("qr", (64, 320), 64),
+        ("qr", (64, 384), 64))
+
+
+def _flops(dmf: str, m: int, n: int) -> float:
+    if dmf == "cholesky":
+        return m ** 3 / 3.0
+    k = min(m, n)  # Householder QR: 2·k²·(max − k/3)
+    return 2.0 * k * k * (max(m, n) - k / 3.0)
+
+
+def _matrix(dmf: str, m: int, n: int, seed: int = 7):
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((m, n)).astype(np.float32)
+    if dmf == "cholesky":
+        a = a @ a.T + m * np.eye(m, dtype=np.float32)
+    return jax.numpy.asarray(a)
+
+
+def _paired(fa, fb, a, reps: int):
+    """Interleaved eager medians (seconds) for two functions of ``a``."""
+    for f in (fa, fb):
+        jax.block_until_ready(f(a))
+        jax.block_until_ready(f(a))
+    ta, tb = [], []
+    for _ in range(reps):
+        for f, acc in ((fa, ta), (fb, tb)):
+            t0 = time.perf_counter()
+            jax.block_until_ready(f(a))
+            acc.append(time.perf_counter() - t0)
+    return float(np.median(ta)), float(np.median(tb))
+
+
+def _name(dmf: str, variant: str, m: int, n: int, b: int) -> str:
+    shape = f"_{m}x{n}" if m != n else ""
+    return f"tiles_{dmf}-{variant}{shape}_n{n}_b{b}"
+
+
+def run(reps: int = 9):
+    from repro.core.backend import get_backend
+    from repro.core.lookahead import get_variant
+
+    be = get_backend("jnp")
+    rows, wide_ratios = [], []
+    for cls, cases in (("square", SQUARE), ("tall", TALL), ("wide", WIDE)):
+        for dmf, (m, n), b in cases:
+            a = _matrix(dmf, m, n)
+            fl = _flops(dmf, m, n)
+            fns = [(lambda f: lambda x: f(x, b, backend=be))(
+                get_variant(dmf, v)) for v in ("tiled", "la")]
+            t_tiled, t_la = _paired(fns[0], fns[1], a, reps)
+            for v, t in (("tiled", t_tiled), ("la", t_la)):
+                rows.append(emit(_name(dmf, v, m, n, b), t,
+                                 f"{gflops(fl, t):.2f}GFLOPS"))
+            if cls == "wide":
+                wide_ratios.append((t_la / t_tiled, dmf, (m, n), b,
+                                    t_tiled, t_la))
+    rows += _arbitration(wide_ratios, reps)
+    return rows
+
+
+def _arbitration(wide_ratios, reps: int):
+    """Plant the best wide tiled win as a cache entry, dispatch "tuned".
+
+    Falls back to the least-bad wide shape when la won everywhere this
+    run (timing noise) — the row still pins the resolve path, and the
+    honest tiled-vs-la comparison lives in the paired rows above.
+    """
+    import os
+    import tempfile
+
+    import jax.numpy as jnp
+
+    from repro.core.blocking import expand_schedule
+    from repro.core.lookahead import get_variant
+    from repro.core.tiles import TileQR
+    from repro.tune.cache import (TuneCache, TuneConfig, cache_key,
+                                  set_default_cache)
+
+    if not wide_ratios:
+        return []
+    ratio, dmf, (m, n), b, t_tiled, t_la = max(wide_ratios)
+    cache = TuneCache(path=os.path.join(tempfile.mkdtemp(prefix="tiles_arb_"),
+                                        "tune.json"))
+    cfg = TuneConfig(dmf=dmf, shape=(m, n), dtype="float32", backend="jnp",
+                     variant="tiled", schedule=expand_schedule(n, b),
+                     seconds=t_tiled, baseline_seconds=t_la, tile=b)
+    cache.put(cache_key(dmf, (m, n), jnp.float32, "jnp"), cfg)
+    old = set_default_cache(cache)
+    try:
+        fn = get_variant(dmf, "tuned")
+        a = _matrix(dmf, m, n)
+        out = fn(a, b, backend="jnp")
+        resolved = "tiled" if isinstance(out, TileQR) else "other"
+        jax.block_until_ready(out)
+        ts = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(a, b, backend="jnp"))
+            ts.append(time.perf_counter() - t0)
+        t = float(np.median(ts))
+    finally:
+        set_default_cache(old)
+        cache.clear()
+    return [emit(_name(dmf, "tuned", m, n, b), t,
+                 f"resolved={resolved};la/tiled={ratio:.3f};"
+                 f"{gflops(_flops(dmf, m, n), t):.2f}GFLOPS")]
+
+
+if __name__ == "__main__":
+    run()

@@ -8,7 +8,8 @@ bench_qr → Fig 7; bench_svd → Fig 8; bench_cholesky → §3.1 generality;
 bench_blocksizes → §6.1 block-size choice + tuned-vs-fixed (repro.tune);
 bench_distributed → §4 at pod scale (schedule evidence from the optimized
 HLO); bench_solve → §8 ("a considerable fraction of LAPACK"): driver +
-batched solve throughput.
+batched solve throughput; bench_tiles (``--tiles``) → DESIGN.md §16
+tile-DAG scheduling vs the pipeline variants.
 
 ``--only`` substring-filters the benchmark groups (so the tuner and CI can
 run targeted sweeps); ``--csv`` writes the aggregated rows to a file.
@@ -53,6 +54,12 @@ def _groups(args):
         # interpret mode makes these slow and their CPU wall-clock is not a
         # speed comparison (bench_gemm.run_kernels docstring).
         groups.append(("kernels", bench_gemm.run_kernels))
+    if args.tiles:
+        # ISSUE 9: tile-DAG schedule vs the pipeline variants + the tuner
+        # arbitration row (bench_tiles module doc) — opt-in because the
+        # paired measurements run eagerly and CI gives them their own job.
+        from benchmarks import bench_tiles
+        groups.append(("tiles", bench_tiles.run))
     return groups
 
 
@@ -68,6 +75,10 @@ def main(argv=None) -> None:
                     help="include the Pallas kernel-layer group (BLIS-GEMM "
                          "blocking sweep, traced-vs-pallas panels, "
                          "fused-vs-composed PU -> BENCH_kernels.json rows)")
+    ap.add_argument("--tiles", action="store_true",
+                    help="include the tile-DAG scheduling group (tiled vs la "
+                         "paired rows + the tuned-arbitration row -> "
+                         "BENCH_tiles.json rows)")
     ap.add_argument("--only", default=None, metavar="NAME",
                     help="run only benchmark groups whose name contains NAME")
     ap.add_argument("--csv", default=None, metavar="PATH",

@@ -36,7 +36,7 @@ import re
 from typing import Callable, Dict, Tuple
 
 from repro.core import (band_reduction, cholesky, gauss_jordan, hessenberg,
-                        ldlt, lu, qr, qrcp)
+                        ldlt, lu, qr, qrcp, tiles)
 from repro.core.pipeline import supports_depth
 
 # variant base name -> per-DMF callable
@@ -49,11 +49,13 @@ _REGISTRY: Dict[str, Dict[str, Callable]] = {
     "cholesky": {
         "mtb": cholesky.cholesky_blocked,
         "rtm": cholesky.cholesky_tiled,
+        "tiled": tiles.cholesky_tiles,
         "la": cholesky.cholesky_lookahead,
     },
     "qr": {
         "mtb": qr.qr_blocked,
         "rtm": qr.qr_tiled,
+        "tiled": tiles.qr_tiles,
         "la": qr.qr_lookahead,
     },
     "ldlt": {
@@ -98,7 +100,7 @@ LOOKAHEAD_EXCLUDED: Dict[str, str] = {
     "hessenberg": hessenberg.HESSENBERG_OPS.la_unsafe,
 }
 
-VARIANTS = ("mtb", "rtm", "la", "la_mb")
+VARIANTS = ("mtb", "rtm", "tiled", "la", "la_mb")
 FACTORIZATIONS = tuple(_REGISTRY)
 
 #: Variants resolved by composition rather than a registry row: ``la_mb``
@@ -268,11 +270,14 @@ def get_variant(dmf: str, variant: str) -> Callable:
         raise KeyError(f"unknown DMF {dmf!r}; expected one of {FACTORIZATIONS}")
     table = _REGISTRY[dmf]
     base, depth = parse_variant(variant)
-    if base in ("la", "la_mb") and dmf in LOOKAHEAD_EXCLUDED:
+    if base in ("la", "la_mb", "tiled") and dmf in LOOKAHEAD_EXCLUDED:
+        # "tiled" shares the exclusion: a panel that reads the whole
+        # trailing block (la_unsafe) has no valid tile decomposition either
+        # (repro.core.tiles.make_tiled enforces the same gate structurally).
         raise KeyError(
-            f"variant {variant!r} not available for {dmf!r}: look-ahead is "
-            f"excluded by policy — {LOOKAHEAD_EXCLUDED[dmf]}; "
-            f"have {list_variants(dmf)}")
+            f"variant {variant!r} not available for {dmf!r}: look-ahead "
+            f"(and tile-DAG) scheduling is excluded by policy — "
+            f"{LOOKAHEAD_EXCLUDED[dmf]}; have {list_variants(dmf)}")
     if base == "la_mb":
         return _make_la_mb(dmf, table["la"], depth)
     if base == "tuned":

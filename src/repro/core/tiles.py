@@ -1,0 +1,515 @@
+"""Tile-DAG scheduling backend (``variant="tiled"``) — DESIGN.md §16.
+
+The paper positions static look-ahead *against* runtime task-DAG schedulers
+(§2, §6.4's RTM rows).  This module implements the alternative the tiled-QR
+papers describe (Buttari/Langou/Kurzak/Dongarra, PAPERS.md): decompose the
+matrix into b×b tiles, emit one task per tile operation, derive the
+dependency DAG from the data each task reads and writes, and execute the DAG
+in topological **wavefronts** instead of the panel+update pipeline.
+
+Lowering from :class:`~repro.core.pipeline.StepOps` (§16):
+
+* ``factor``  →  the diagonal task kinds: ``GEQRT`` (compact-WY tile QR,
+  reusing :func:`repro.core.qr._hooked_factor_panel` so the ``panel_fn=``
+  kernel hook — and therefore the Pallas panel routing — carries over) and
+  ``POTRF`` (reusing :func:`repro.core.cholesky.cholesky_panel`).
+* ``update``/``tiles``  →  the off-diagonal kinds: ``UNMQR``/``TSMQR``
+  (block-reflector applies via :func:`repro.core.qr.apply_qt_blocked`) and
+  ``TRSM``/``SYRK``/``GEMM`` (``backend.trsm`` / ``backend.update`` — the
+  exact per-tile ops the RTM ``tiles`` hook already issues).
+* The StepOps *policy* surface gates eligibility: :func:`make_tiled`
+  refuses declarations carrying ``la_unsafe`` (same exclusion set as
+  look-ahead — a panel that reads the whole trailing block has no tile
+  decomposition either) and declarations without a ``tiles`` hook.
+
+Determinism.  Task keys are canonical ``(k, i, j)`` triples, unique within
+a program; wavefront w holds every task whose dependency depth is w, sorted
+by key.  The executor runs waves in order and tasks within a wave in key
+order, so the reduction order — in particular the flat TSQRT chain down a
+tile column — is **fixed**: two runs of the same tiled schedule are bitwise
+identical (pinned by ``tests/test_tiles.py``).
+
+Numerics per task kind (the conformance tolerance policy —
+``tests/conformance.py``):
+
+* ``POTRF``/``TRSM``/``SYRK``/``GEMM`` reuse the Cholesky StepOps task
+  bodies verbatim on tile operands; the canonical GEMM/TRSM kernels are
+  invariant under M/N row- and column-splitting (DESIGN.md §13), so tiled
+  Cholesky is **bitwise** equal to the rtm/mtb drivers at the same block
+  size (pinned by test).
+* ``GEQRT``/``TSQRT``/``UNMQR``/``TSMQR`` implement *incremental* tile QR —
+  a different factorization algorithm than GEQRF (different reflector set),
+  so R and Q are checked to the conformance tolerance against reconstruction
+  (``Q·R ≈ A``, orthonormality, triangularity) rather than bitwise against
+  the blocked packed output.  The single-tile degenerate case (tile ≥
+  matrix) *is* GEQRF and is pinned bitwise.  ``TSQRT`` is the
+  non-structured spelling: GEQR2 on the stacked ``[R_kk; A_ik]`` pair —
+  bitwise-reusing the existing panel kernels at the cost of the triangular
+  flop savings (documented trade-off, §16).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.core import qr as _qr
+from repro.core.backend import Backend, JNP_BACKEND
+from repro.core.blocking import BlockSpec, expand_schedule
+from repro.core.cholesky import CHOLESKY_OPS, cholesky_panel
+from repro.core.pipeline import StepOps
+from repro.core.pytree import register_factors_pytree
+from repro.core.qr import QR_OPS
+from repro.obs import tracer as _obs
+
+__all__ = [
+    "TileTask",
+    "TileDag",
+    "build_dag",
+    "tile_grid",
+    "TileReflector",
+    "TileQR",
+    "qr_apply_qt",
+    "qr_form_q",
+    "qr_tiles",
+    "cholesky_tiles",
+    "make_tiled",
+    "TILE_PROGRAMS",
+    "TILE_TASK_KINDS",
+]
+
+#: Every task kind a tile program may emit (the §9 cost model and the obs
+#: report key off these names).
+TILE_TASK_KINDS = ("GEQRT", "TSQRT", "UNMQR", "TSMQR",
+                   "POTRF", "TRSM", "SYRK", "GEMM")
+
+
+# ---------------------------------------------------------------------------
+# Task graph: tasks, dependencies, wavefronts.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class TileTask:
+    """One tile operation.
+
+    ``key`` is the canonical ``(k, i, j)`` identity (unique within a
+    program; sortable — the fixed reduction order).  ``reads``/``writes``
+    name symbolic resources: ``("A", i, j)`` for tile *values* and
+    ``("V", k, i)`` for reflector *contexts*.  Keeping V separate from A is
+    what exposes the classic tiled-QR parallelism: ``UNMQR(k, j)`` reads
+    only ``("V", k, k)``, so it does not serialize against the ``TSQRT``
+    chain rewriting tile ``(k, k)``.
+    """
+
+    kind: str
+    key: Tuple[int, int, int]
+    reads: Tuple[Tuple, ...]
+    writes: Tuple[Tuple, ...]
+    run: Callable[[Dict[str, Any]], Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class TileDag:
+    """Tasks + dependency edges + wavefront schedule (all deterministic)."""
+
+    tasks: Tuple[TileTask, ...]
+    deps: Dict[Tuple[int, int, int], frozenset]
+    wave: Dict[Tuple[int, int, int], int]
+    waves: Tuple[Tuple[TileTask, ...], ...]
+
+    @property
+    def depth(self) -> int:
+        """Critical-path length in tasks (number of wavefronts)."""
+        return len(self.waves)
+
+
+def build_dag(tasks: List[TileTask]) -> TileDag:
+    """Derive RAW/WAR/WAW dependencies by dataflow over symbolic resources.
+
+    ``tasks`` must arrive in a valid sequential (program) order; the
+    builder tracks the last writer and the readers-since-last-write of
+    every resource, exactly the analysis an OpenMP ``depend(in/out)``
+    runtime performs on the clauses the StepOps hooks imply.
+    """
+    keys = [t.key for t in tasks]
+    if len(set(keys)) != len(keys):
+        raise ValueError("tile task keys must be unique within a program")
+    deps: Dict[Tuple[int, int, int], set] = {t.key: set() for t in tasks}
+    last_writer: Dict[Tuple, Tuple[int, int, int]] = {}
+    readers: Dict[Tuple, List[Tuple[int, int, int]]] = {}
+    for t in tasks:
+        d = deps[t.key]
+        for res in t.reads + t.writes:          # RAW (and WAW via writes)
+            w = last_writer.get(res)
+            if w is not None and w != t.key:
+                d.add(w)
+        for res in t.writes:                    # WAR
+            for rd in readers.get(res, ()):
+                if rd != t.key:
+                    d.add(rd)
+        for res in t.reads:
+            readers.setdefault(res, []).append(t.key)
+        for res in t.writes:
+            last_writer[res] = t.key
+            readers[res] = []                   # deps now chain via the writer
+    wave: Dict[Tuple[int, int, int], int] = {}
+    for t in tasks:                             # program order ⇒ deps resolved
+        d = deps[t.key]
+        wave[t.key] = 0 if not d else 1 + max(wave[k] for k in d)
+    nwaves = 1 + max(wave.values()) if wave else 0
+    buckets: List[List[TileTask]] = [[] for _ in range(nwaves)]
+    for t in tasks:
+        buckets[wave[t.key]].append(t)
+    waves = tuple(tuple(sorted(w, key=lambda t: t.key)) for w in buckets)
+    return TileDag(tasks=tuple(tasks),
+                   deps={k: frozenset(v) for k, v in deps.items()},
+                   wave=wave, waves=waves)
+
+
+def run_dag(dag: TileDag, st: Dict[str, Any]) -> None:
+    """Execute wavefronts in order, tasks within a wave in key order.
+
+    Emits one ``repro.obs`` span per task (category ``TILE``) tagged with
+    the task kind and its DAG depth (``dag_depth`` = wavefront index), so
+    :func:`repro.obs.report.tile_dag` can reconstruct the critical path.
+    """
+    tr = _obs.active()
+    for w, tasks in enumerate(dag.waves):
+        for t in tasks:
+            if tr is None:
+                t.run(st)
+            else:
+                tr.wrap("TILE", f"{t.kind}{t.key}", lambda t=t: t.run(st),
+                        step=t.key[0], it=w, kind=t.kind, dag_depth=w)
+
+
+def tile_grid(n: int, b: BlockSpec) -> Tuple[Tuple[int, int], ...]:
+    """``(offset, width)`` per tile along one axis (sums to ``n`` exactly)."""
+    out, k = [], 0
+    for w in expand_schedule(n, b):
+        out.append((k, w))
+        k += w
+    return tuple(out)
+
+
+# ---------------------------------------------------------------------------
+# Compact-WY tile QR: GEQRT / TSQRT / UNMQR / TSMQR.
+# ---------------------------------------------------------------------------
+def _run_geqrt(k: int):
+    def run(st):
+        packed, _tau, pnl = _qr._hooked_factor_panel(
+            st["tiles"][(k, k)], st["panel_fn"])
+        st["tiles"][(k, k)] = jnp.triu(packed)
+        st["ctx"][(k, k)] = pnl
+        return st["tiles"][(k, k)]
+    return run
+
+
+def _run_unmqr(k: int, j: int):
+    def run(st):
+        out = _qr.apply_qt_blocked(st["ctx"][(k, k)], st["tiles"][(k, j)],
+                                   st["backend"])
+        st["tiles"][(k, j)] = out
+        return out
+    return run
+
+
+def _run_tsqrt(k: int, i: int):
+    def run(st):
+        top, bot = st["tiles"][(k, k)], st["tiles"][(i, k)]
+        packed, _tau, pnl = _qr._hooked_factor_panel(
+            jnp.concatenate([top, bot], axis=0), st["panel_fn"])
+        rk = top.shape[0]
+        st["tiles"][(k, k)] = jnp.triu(packed[:rk])
+        st["tiles"][(i, k)] = jnp.zeros_like(bot)   # annihilated exactly
+        st["ctx"][(k, i)] = pnl
+        return st["tiles"][(k, k)]
+    return run
+
+
+def _run_tsmqr(k: int, i: int, j: int):
+    def run(st):
+        top, bot = st["tiles"][(k, j)], st["tiles"][(i, j)]
+        c = _qr.apply_qt_blocked(st["ctx"][(k, i)],
+                                 jnp.concatenate([top, bot], axis=0),
+                                 st["backend"])
+        rk = top.shape[0]
+        st["tiles"][(k, j)] = c[:rk]
+        st["tiles"][(i, j)] = c[rk:]
+        return c
+    return run
+
+
+def _qr_tasks(nrt: int, nct: int) -> List[TileTask]:
+    """The tile-QR task program over an ``nrt × nct`` tile grid."""
+    tasks: List[TileTask] = []
+    for k in range(min(nrt, nct)):
+        tasks.append(TileTask("GEQRT", (k, k, k),
+                              reads=(("A", k, k),),
+                              writes=(("A", k, k), ("V", k, k)),
+                              run=_run_geqrt(k)))
+        for j in range(k + 1, nct):
+            tasks.append(TileTask("UNMQR", (k, k, j),
+                                  reads=(("V", k, k), ("A", k, j)),
+                                  writes=(("A", k, j),),
+                                  run=_run_unmqr(k, j)))
+        for i in range(k + 1, nrt):
+            tasks.append(TileTask("TSQRT", (k, i, k),
+                                  reads=(("A", k, k), ("A", i, k)),
+                                  writes=(("A", k, k), ("A", i, k),
+                                          ("V", k, i)),
+                                  run=_run_tsqrt(k, i)))
+            for j in range(k + 1, nct):
+                tasks.append(TileTask("TSMQR", (k, i, j),
+                                      reads=(("V", k, i), ("A", k, j),
+                                             ("A", i, j)),
+                                      writes=(("A", k, j), ("A", i, j)),
+                                      run=_run_tsmqr(k, i, j)))
+    return tasks
+
+
+# ---------------------------------------------------------------------------
+# Tile-QR result: R + the ordered reflector chain (no GEQRF packed form —
+# incremental QR has a different reflector set; DESIGN.md §16).
+# ---------------------------------------------------------------------------
+@functools.partial(register_factors_pytree, data_fields=("v", "t"),
+                   meta_fields=("col", "rows0", "rows1"))
+@dataclasses.dataclass(frozen=True)
+class TileReflector:
+    """One compact-WY block reflector ``I − V·T·Vᵀ`` over a row subset.
+
+    ``rows0`` is the (start, stop) row span of the diagonal tile; ``rows1``
+    the span of the annihilated tile for TSQRT factors (None for GEQRT).
+    """
+
+    v: jnp.ndarray
+    t: jnp.ndarray
+    col: int
+    rows0: Tuple[int, int]
+    rows1: Optional[Tuple[int, int]]
+
+
+@functools.partial(register_factors_pytree, data_fields=("r", "factors"),
+                   meta_fields=())
+@dataclasses.dataclass(frozen=True)
+class TileQR:
+    """Tiled QR output: full upper-trapezoidal ``r`` (m × n) plus the
+    reflector chain in factorization order (``Q = H_0·H_1·…``)."""
+
+    r: jnp.ndarray
+    factors: Tuple[TileReflector, ...]
+
+    @property
+    def shape(self) -> Tuple[int, int]:
+        return self.r.shape
+
+    @property
+    def dtype(self):
+        return self.r.dtype
+
+
+def _gather_rows(f: TileReflector, c: jnp.ndarray) -> jnp.ndarray:
+    r0, r1 = f.rows0
+    if f.rows1 is None:
+        return c[r0:r1]
+    s0, s1 = f.rows1
+    return jnp.concatenate([c[r0:r1], c[s0:s1]], axis=0)
+
+
+def _scatter_rows(f: TileReflector, c: jnp.ndarray,
+                  cr: jnp.ndarray) -> jnp.ndarray:
+    r0, r1 = f.rows0
+    c = c.at[r0:r1].set(cr[: r1 - r0])
+    if f.rows1 is not None:
+        s0, s1 = f.rows1
+        c = c.at[s0:s1].set(cr[r1 - r0:])
+    return c
+
+
+def qr_apply_qt(tqr: TileQR, c: jnp.ndarray, *,
+                backend: Backend = JNP_BACKEND) -> jnp.ndarray:
+    """``Qᵀ·C`` from a :class:`TileQR` (ORMQR analogue, forward order)."""
+    vec = c.ndim == 1
+    if vec:
+        c = c[:, None]
+    for f in tqr.factors:
+        cr = _gather_rows(f, c)
+        w = backend.gemm(f.t.T, backend.gemm(f.v.T, cr))
+        c = _scatter_rows(f, c, (cr - backend.gemm(f.v, w)).astype(c.dtype))
+    return c[:, 0] if vec else c
+
+
+def qr_form_q(tqr: TileQR, *, backend: Backend = JNP_BACKEND) -> jnp.ndarray:
+    """Form Q (m × m) explicitly from a :class:`TileQR` (ORGQR analogue)."""
+    m = tqr.r.shape[0]
+    q = jnp.eye(m, dtype=tqr.r.dtype)
+    for f in reversed(tqr.factors):
+        qr_rows = _gather_rows(f, q)
+        w = backend.gemm(f.t, backend.gemm(f.v.T, qr_rows))
+        q = _scatter_rows(f, q,
+                          (qr_rows - backend.gemm(f.v, w)).astype(q.dtype))
+    return q
+
+
+# ---------------------------------------------------------------------------
+# Tiled Cholesky: POTRF / TRSM / SYRK / GEMM (lower tiles only).
+# ---------------------------------------------------------------------------
+def _run_potrf(k: int):
+    def run(st):
+        tile = st["tiles"][(k, k)]
+        fn = st["panel_fn"] or cholesky_panel
+        st["tiles"][(k, k)] = fn(tile, tile.shape[0], st["backend"])
+        return st["tiles"][(k, k)]
+    return run
+
+
+def _run_trsm(k: int, i: int):
+    def run(st):
+        be = st["backend"]
+        out = be.trsm(st["tiles"][(k, k)], st["tiles"][(i, k)],
+                      side="right", lower=True, trans=True)
+        st["tiles"][(i, k)] = out
+        return out
+    return run
+
+
+def _run_syrk(k: int, j: int):
+    def run(st):
+        be = st["backend"]
+        lj = st["tiles"][(j, k)]
+        out = be.update(st["tiles"][(j, j)], lj, lj.T)
+        st["tiles"][(j, j)] = out
+        return out
+    return run
+
+
+def _run_gemm(k: int, i: int, j: int):
+    def run(st):
+        be = st["backend"]
+        out = be.update(st["tiles"][(i, j)], st["tiles"][(i, k)],
+                        st["tiles"][(j, k)].T)
+        st["tiles"][(i, j)] = out
+        return out
+    return run
+
+
+def _cholesky_tasks(nt: int) -> List[TileTask]:
+    """The tile-Cholesky task program over an ``nt × nt`` lower tile grid."""
+    tasks: List[TileTask] = []
+    for k in range(nt):
+        tasks.append(TileTask("POTRF", (k, k, k),
+                              reads=(("A", k, k),),
+                              writes=(("A", k, k),),
+                              run=_run_potrf(k)))
+        for i in range(k + 1, nt):
+            tasks.append(TileTask("TRSM", (k, i, k),
+                                  reads=(("A", k, k), ("A", i, k)),
+                                  writes=(("A", i, k),),
+                                  run=_run_trsm(k, i)))
+        for j in range(k + 1, nt):
+            tasks.append(TileTask("SYRK", (k, j, j),
+                                  reads=(("A", j, k), ("A", j, j)),
+                                  writes=(("A", j, j),),
+                                  run=_run_syrk(k, j)))
+            for i in range(j + 1, nt):
+                tasks.append(TileTask("GEMM", (k, i, j),
+                                      reads=(("A", i, k), ("A", j, k),
+                                             ("A", i, j)),
+                                      writes=(("A", i, j),),
+                                      run=_run_gemm(k, i, j)))
+    return tasks
+
+
+# ---------------------------------------------------------------------------
+# Drivers.
+# ---------------------------------------------------------------------------
+def _qr_tiles(a: jnp.ndarray, b: BlockSpec = 128, *,
+              backend: Backend = JNP_BACKEND,
+              panel_fn: Optional[Callable] = None) -> TileQR:
+    """Tiled compact-WY QR (``variant="tiled"``).  Returns :class:`TileQR`."""
+    m, n = a.shape
+    rows, cols = tile_grid(m, b), tile_grid(n, b)
+    if panel_fn is None and backend.panel_fns:
+        panel_fn = backend.panel_fns.get("qr")
+    dag = build_dag(_qr_tasks(len(rows), len(cols)))
+    tiles = {(bi, bj): a[ri:ri + mi, cj:cj + nj]
+             for bi, (ri, mi) in enumerate(rows)
+             for bj, (cj, nj) in enumerate(cols)}
+    st = {"tiles": tiles, "ctx": {}, "backend": backend, "panel_fn": panel_fn}
+    run_dag(dag, st)
+    r = jnp.zeros_like(a)
+    for bi, (ri, mi) in enumerate(rows):
+        for bj, (cj, nj) in enumerate(cols):
+            r = r.at[ri:ri + mi, cj:cj + nj].set(tiles[(bi, bj)])
+    factors = []
+    for (k, i) in sorted(st["ctx"]):
+        pnl = st["ctx"][(k, i)]
+        r0 = (rows[k][0], rows[k][0] + rows[k][1])
+        r1 = None if i == k else (rows[i][0], rows[i][0] + rows[i][1])
+        factors.append(TileReflector(v=pnl.v, t=pnl.t, col=k,
+                                     rows0=r0, rows1=r1))
+    return TileQR(r=jnp.triu(r), factors=tuple(factors))
+
+
+def _cholesky_tiles(a: jnp.ndarray, b: BlockSpec = 128, *,
+                    backend: Backend = JNP_BACKEND,
+                    panel_fn: Optional[Callable] = None) -> jnp.ndarray:
+    """Tiled Cholesky (``variant="tiled"``).  Returns lower-triangular L."""
+    n = a.shape[0]
+    if a.shape[1] != n:
+        raise ValueError(f"cholesky requires a square matrix, got {a.shape}")
+    grid = tile_grid(n, b)
+    if panel_fn is None and backend.panel_fns:
+        panel_fn = backend.panel_fns.get("cholesky")
+    dag = build_dag(_cholesky_tasks(len(grid)))
+    tiles = {(bi, bj): a[ri:ri + mi, cj:cj + nj]
+             for bi, (ri, mi) in enumerate(grid)
+             for bj, (cj, nj) in enumerate(grid)
+             if bi >= bj}
+    st = {"tiles": tiles, "ctx": {}, "backend": backend, "panel_fn": panel_fn}
+    run_dag(dag, st)
+    out = jnp.zeros_like(a)
+    for bi, (ri, mi) in enumerate(grid):
+        for bj, (cj, nj) in enumerate(grid):
+            if bi > bj:
+                out = out.at[ri:ri + mi, cj:cj + nj].set(tiles[(bi, bj)])
+            elif bi == bj:
+                out = out.at[ri:ri + mi, cj:cj + nj].set(
+                    jnp.tril(tiles[(bi, bj)]))
+    return out
+
+
+#: StepOps name → (task-program builder, driver).  The builders are exposed
+#: so the §9 cost model and tests can enumerate the task multiset without
+#: running anything.
+TILE_PROGRAMS: Dict[str, Tuple[Callable, Callable]] = {
+    "qr": (_qr_tasks, _qr_tiles),
+    "cholesky": (_cholesky_tasks, _cholesky_tiles),
+}
+
+
+def make_tiled(ops: StepOps) -> Callable:
+    """Resolve the tiled driver for a StepOps declaration, policy-checked.
+
+    Mirrors the look-ahead legality gate: a declaration carrying
+    ``la_unsafe`` (panel reads the whole trailing block) has no valid tile
+    decomposition either, and a declaration without a ``tiles`` hook never
+    named its per-tile fragmentation.
+    """
+    if ops.la_unsafe:
+        raise ValueError(
+            f"cannot emit a tile DAG for {ops.name!r}: {ops.la_unsafe}")
+    if ops.tiles is None:
+        raise ValueError(
+            f"cannot emit a tile DAG for {ops.name!r}: its StepOps "
+            f"declaration names no per-tile fragmentation (tiles hook)")
+    if ops.name not in TILE_PROGRAMS:
+        raise KeyError(
+            f"no tile task program registered for {ops.name!r}; "
+            f"have {tuple(TILE_PROGRAMS)}")
+    return TILE_PROGRAMS[ops.name][1]
+
+
+qr_tiles = make_tiled(QR_OPS)
+cholesky_tiles = make_tiled(CHOLESKY_OPS)

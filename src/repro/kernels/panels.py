@@ -54,8 +54,27 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core.backend import _gemm_impl
 from repro.obs import tracer as _obs
+
+
+def _gemm_impl(a, b):
+    """Lazy alias of :func:`repro.core.backend._gemm_impl` (the unjitted
+    canonical GEMM body).
+
+    Resolved at call/trace time, NOT at import time: a module-level
+    ``from repro.core.backend import _gemm_impl`` closed the import cycle
+    ``kernels.panels → core.backend → core/__init__ → core.lookahead →
+    core.hessenberg → kernels.panels`` whenever this module was the first
+    ``repro`` import (the PR 8 "scripts must import repro.core first"
+    gotcha).  A function wrapper — unlike a module ``__getattr__``, which
+    never intercepts global-name lookups inside function bodies — keeps
+    every existing call site working unchanged, and inside a traced sweep
+    body it still inlines to the identical HLO as the jitted ``gemm_jnp``
+    entry (the bitwise contract the Pallas kernels rely on).
+    """
+    from repro.core import backend as _backend
+
+    return _backend._gemm_impl(a, b)
 
 __all__ = [
     "lu_panel", "qr_panel", "ldlt_panel",

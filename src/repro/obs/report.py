@@ -34,7 +34,8 @@ from typing import Dict, List, Optional, Sequence
 
 from repro.obs.tracer import Span
 
-__all__ = ["ENGINE_CATS", "overlap", "attainment_row", "format_attainment"]
+__all__ = ["ENGINE_CATS", "overlap", "tile_dag", "attainment_row",
+           "format_attainment"]
 
 #: Categories emitted by the pipeline engine itself (the timeline layer the
 #: overlap/critical-path math is defined over; driver/serve wrapper spans
@@ -82,6 +83,44 @@ def overlap(spans: Sequence[Span]) -> Dict[str, float]:
         "n_spans": float(len(eng)),
         "n_iters": float(len([i for i in iters if i >= 0])),
         "max_inflight": float(max((s.depth for s in eng), default=0)),
+    }
+
+
+def tile_dag(spans: Sequence[Span]) -> Dict[str, float]:
+    """Critical-path accounting for a tiled run (DESIGN.md §16).
+
+    The tile executor (:func:`repro.core.tiles.run_dag`) tags every task
+    span with its wavefront index (``meta["dag_depth"]``).  Tasks within a
+    wavefront are mutually independent by construction, so a perfectly
+    parallel backend would run each wave in its longest task:
+    ``critical_path_s = Σ_w max(dur)``.  ``ideal_speedup`` (serialized
+    total over that) is the DAG analogue of :func:`overlap`'s metric —
+    comparable numbers for arbitrating ``la`` depth vs tile granularity.
+    Spans tagged ``traced=True`` (recorded under jit) are dropped.
+    """
+    tile = [s for s in spans
+            if s.cat == "TILE" and not s.meta.get("traced")]
+    serialized_s = sum(s.dur for s in tile)
+    waves: Dict[int, List[Span]] = {}
+    for s in tile:
+        waves.setdefault(int(s.meta.get("dag_depth", 0)), []).append(s)
+    critical_s = sum(max(s.dur for s in w) for w in waves.values())
+    kinds: Dict[str, float] = {}
+    for s in tile:
+        k = s.meta.get("kind", "?")
+        kinds[k] = kinds.get(k, 0.0) + s.dur
+    wall_s = (max((s.t1 for s in tile), default=0.0)
+              - min((s.t0 for s in tile), default=0.0))
+    return {
+        "serialized_s": serialized_s,
+        "critical_path_s": critical_s,
+        "ideal_speedup": serialized_s / critical_s if critical_s > 0 else 1.0,
+        "wall_s": wall_s,
+        "n_tasks": float(len(tile)),
+        "n_waves": float(len(waves)),
+        "max_wave_width": float(max((len(w) for w in waves.values()),
+                                    default=0)),
+        "kind_s": kinds,
     }
 
 

@@ -38,22 +38,28 @@ Tracing under ``jax.jit`` is meaningless by construction (hook calls fire
 once at trace time and measure tracing, not execution); install the tracer
 around **eager** driver calls — the backend-level jit entry points
 (``repro.core.backend``) keep eager runs one-cached-executable-per-shape
-fast.  Fences are no-ops on abstract values, so an accidentally traced jit
-still produces correct *results*, just useless span times.
+fast.  An accidentally traced jit still produces correct *results*, and
+instead of silently fabricating wall times the recorder now **detects**
+abstract (tracer) values at the fence point: the span is tagged
+``meta["traced"] = True`` (so reports can drop it) and a one-time
+``RuntimeWarning`` points at the eager entry points
+(``tests/test_obs.py`` pins both).
 """
 from __future__ import annotations
 
 import contextlib
 import dataclasses
 import time
+import warnings
 from typing import Any, Callable, Dict, List, Optional
 
 __all__ = ["Span", "Tracer", "trace", "active"]
 
 #: Span categories emitted by the instrumented layers.  Engine categories
-#: mirror the paper's task names; the outer layers add their own lanes.
-CATEGORIES = ("PF", "TU", "PU", "SWAP", "EPI", "panel", "drive", "sweep",
-              "serve")
+#: mirror the paper's task names (``TILE`` = one tile-DAG task,
+#: DESIGN.md §16); the outer layers add their own lanes.
+CATEGORIES = ("PF", "TU", "PU", "SWAP", "EPI", "TILE", "panel", "drive",
+              "sweep", "serve")
 
 #: The currently installed tracer (None = tracing disabled, the default).
 #: Instrumented sites read this through :func:`active` — one predicate
@@ -91,9 +97,44 @@ class Span:
         return self.t1 - self.t0
 
 
+#: One-time latch for the trace-under-jit warning (per process; reset via
+#: :func:`_reset_traced_warning` in tests).
+_TRACED_WARNED = False
+
+
+def _reset_traced_warning() -> None:
+    global _TRACED_WARNED
+    _TRACED_WARNED = False
+
+
+def _is_abstract(value: Any) -> bool:
+    """True when ``value`` contains abstract (jit-trace-time) leaves."""
+    try:
+        import jax
+
+        return any(isinstance(leaf, jax.core.Tracer)
+                   for leaf in jax.tree_util.tree_leaves(value))
+    except Exception:
+        return False
+
+
+def _note_traced(name: str) -> None:
+    """One-time warning that spans are being recorded at jit-trace time."""
+    global _TRACED_WARNED
+    if not _TRACED_WARNED:
+        _TRACED_WARNED = True
+        warnings.warn(
+            f"repro.obs: span {name!r} recorded under jit tracing — its "
+            f"times measure tracing, not execution (span tagged "
+            f"traced=True).  Install the tracer around eager driver calls; "
+            f"the jit entry points in repro.core.backend keep eager runs "
+            f"fast.",
+            RuntimeWarning, stacklevel=4)
+
+
 def _fence(value: Any) -> None:
     """Block until ``value``'s arrays are computed; silently a no-op for
-    non-array pytrees and abstract (tracer) values."""
+    non-array pytrees."""
     try:
         import jax
 
@@ -138,10 +179,16 @@ class Tracer:
         """
         t0 = self.clock()
         out = thunk()
-        if self.fence:
+        meta = dict(meta)
+        if _is_abstract(out):
+            # under jit: fencing is impossible and the timestamps would be
+            # trace-time fabrications — tag the span and warn once instead
+            meta["traced"] = True
+            _note_traced(name)
+        elif self.fence:
             _fence(out)
         self.add(Span(cat, name, t0, self.clock(), step=step, it=it,
-                      depth=depth, meta=dict(meta)))
+                      depth=depth, meta=meta))
         return out
 
     @contextlib.contextmanager
@@ -154,10 +201,14 @@ class Tracer:
         try:
             yield
         finally:
-            if self.fence and fence_on is not None:
+            meta = dict(meta)
+            if fence_on is not None and _is_abstract(fence_on):
+                meta["traced"] = True
+                _note_traced(name)
+            elif self.fence and fence_on is not None:
                 _fence(fence_on)
             self.add(Span(cat, name, t0, self.clock(), step=step, it=it,
-                          depth=depth, meta=dict(meta)))
+                          depth=depth, meta=meta))
 
     # -- queries --------------------------------------------------------
     def by_cat(self, cat: str) -> List[Span]:

@@ -1,7 +1,8 @@
 """LAPACK-style driver routines built on the DMF layer (DESIGN.md §8).
 
 Every driver accepts ``variant=`` (one of the scheduling strategies the
-paper evaluates — ``mtb``/``rtm``/``la``/``la_mb``, plus ``"tuned"`` which
+paper evaluates — ``mtb``/``rtm``/``la``/``la_mb``, the tile-DAG backend
+``tiled`` (DESIGN.md §16), plus ``"tuned"`` which
 resolves the autotuned (variant, block schedule) pair from the
 :mod:`repro.tune` cache, all through
 :func:`repro.core.lookahead.get_variant`), ``depth=`` (look-ahead depth —
@@ -34,9 +35,10 @@ from repro.core.backend import Backend, get_backend
 from repro.core.blocking import BlockSpec, normalize_block
 from repro.core.lookahead import deepen, get_variant
 from repro.obs import tracer as _obs
+from repro.core.tiles import TileQR
 from repro.solve.factors import (CholeskyFactors, HessenbergFactors,
                                  LDLTFactors, LUFactors, QRCPFactors,
-                                 QRFactors)
+                                 QRFactors, TiledQRFactors)
 
 __all__ = [
     "lu_factor", "cholesky_factor", "qr_factor", "ldlt_factor",
@@ -111,10 +113,15 @@ def cholesky_factor(a: jnp.ndarray, block: BlockSpec = 128, *, variant: str = "l
 
 @_traced
 def qr_factor(a: jnp.ndarray, block: BlockSpec = 128, *, variant: str = "la",
-              depth: int = 1, backend: BackendLike = "jnp") -> QRFactors:
+              depth: int = 1, backend: BackendLike = "jnp"
+              ) -> Union[QRFactors, TiledQRFactors]:
     be = _resolve(backend)
-    packed, taus = get_variant("qr", _deepen(variant, depth))(a, block,
-                                                             backend=be)
+    out = get_variant("qr", _deepen(variant, depth))(a, block, backend=be)
+    if isinstance(out, TileQR):
+        # variant="tiled" (or "tuned" resolving to a cached tiled winner)
+        # returns the tile-DAG factored form, not the GEQRF packed layout
+        return TiledQRFactors(tqr=out, block=_static_block(block), backend=be)
+    packed, taus = out
     return QRFactors(packed=packed, taus=taus,
                      block=_static_block(block), backend=be)
 

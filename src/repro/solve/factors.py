@@ -26,10 +26,11 @@ from repro.core.lu import permutation_from_pivots
 from repro.core.pytree import register_factors_pytree
 from repro.core.qr import build_t_matrix, unpack_v
 from repro.core.blocking import panel_steps
+from repro.core.tiles import TileQR, qr_apply_qt as _tiles_apply_qt
 from repro.solve.triangular import lu_solve_packed, trsm_blocked
 
-__all__ = ["LUFactors", "CholeskyFactors", "QRFactors", "LDLTFactors",
-           "QRCPFactors", "HessenbergFactors"]
+__all__ = ["LUFactors", "CholeskyFactors", "QRFactors", "TiledQRFactors",
+           "LDLTFactors", "QRCPFactors", "HessenbergFactors"]
 
 
 def _as_matrix(b: jnp.ndarray) -> tuple[jnp.ndarray, bool]:
@@ -196,6 +197,67 @@ class QRFactors:
         if self.m != self.n:
             raise ValueError("inverse requires a square matrix")
         return self.solve(jnp.eye(self.n, dtype=self.packed.dtype))
+
+
+@functools.partial(register_factors_pytree,
+                   data_fields=("tqr",),
+                   meta_fields=("block", "backend"))
+@dataclasses.dataclass(frozen=True)
+class TiledQRFactors:
+    """Tile-DAG QR output (``variant="tiled"``, DESIGN.md §16).
+
+    Wraps the :class:`~repro.core.tiles.TileQR` factored form — explicit R
+    plus the per-tile compact-WY reflector contexts produced by the
+    GEQRT/TSQRT task chain.  The reflectors are *not* the GEQRF packed
+    layout (the TSQRT chain couples tile rows pairwise), so this object
+    delegates ``Qᵀ·C`` to :func:`repro.core.tiles.qr_apply_qt` instead of
+    the panel-sweep ORMQR in :class:`QRFactors`; the downstream triangular
+    solve is shared.  Same factor-once/solve-many and pytree contract as
+    every other factor object — ``tqr`` is itself a registered pytree, so
+    jit/vmap see through both layers.
+    """
+
+    tqr: TileQR
+    block: int = 128
+    backend: Backend = JNP_BACKEND
+
+    @property
+    def m(self) -> int:
+        return self.tqr.r.shape[0]
+
+    @property
+    def n(self) -> int:
+        return self.tqr.r.shape[1]
+
+    def apply_qt(self, c: jnp.ndarray) -> jnp.ndarray:
+        """``Qᵀ·C`` via the stored tile reflector contexts."""
+        return _tiles_apply_qt(self.tqr, c, backend=self.backend)
+
+    def solve(self, b: jnp.ndarray) -> jnp.ndarray:
+        """Least-squares solution ``argmin‖A·X − B‖₂`` (m ≥ n)."""
+        if self.m < self.n:
+            raise ValueError("TiledQRFactors.solve requires m >= n "
+                             "(underdetermined systems need LQ)")
+        b, was_vec = _as_matrix(b)
+        qtb = self.apply_qt(b)
+        r = self.tqr.r[: self.n]          # assembled upper-triangular
+        x = trsm_blocked(r, qtb[: self.n], lower=False, block=self.block,
+                         backend=self.backend)
+        return x[:, 0] if was_vec else x
+
+    def logdet(self) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """slogdet magnitude of a *square* A from its tiled QR form.
+
+        Unlike :class:`QRFactors` the reflector count with nontrivial τ is
+        spread across GEQRT/TSQRT contexts, so ``det Q``'s sign is not
+        cheaply recoverable — only ``|det A| = Π|r_jj|`` is exposed and the
+        sign is reported as 0 (unknown), matching slogdet's convention for
+        "sign unavailable".
+        """
+        if self.m != self.n:
+            raise ValueError("logdet requires a square matrix")
+        d = jnp.diagonal(self.tqr.r)
+        return jnp.zeros((), d.dtype), jnp.sum(jnp.log(jnp.abs(d)))
 
 
 @functools.partial(register_factors_pytree,

@@ -60,6 +60,9 @@ class TuneConfig:
     #: backend's per-shape default (repro.tune.model.gemm_blocks); only
     #: meaningful for Pallas backends (the tuner's kernel-blocking axis).
     kernel_blocks: Optional[Tuple[int, int, int]] = None
+    #: Tile size of a ``variant="tiled"`` winner (the tuner's
+    #: tile-granularity axis, DESIGN.md §16) — None for pipeline variants.
+    tile: Optional[int] = None
     from_cache: bool = False         # True when returned without measuring
 
     def __post_init__(self):
@@ -75,6 +78,8 @@ class TuneConfig:
             d.pop("kernel_blocks")           # pre-ISSUE-8 schema compatible
         else:
             d["kernel_blocks"] = list(self.kernel_blocks)
+        if self.tile is None:
+            d.pop("tile")                    # pre-ISSUE-9 schema compatible
         return d
 
     @classmethod
@@ -90,12 +95,16 @@ class TuneConfig:
         if depth is None:
             depth = parse_variant(d["variant"])[1]
         kb = d.get("kernel_blocks")          # absent in pre-ISSUE-8 entries
+        tile = d.get("tile")                 # absent in pre-ISSUE-9 entries
+        # unknown *future* keys are dropped here by construction (explicit
+        # field list) — a newer writer's cache loads in an older reader
         return cls(dmf=d["dmf"], shape=tuple(d["shape"]), dtype=d["dtype"],
                    backend=d["backend"], variant=d["variant"],
                    schedule=tuple(d["schedule"]), seconds=d["seconds"],
                    baseline_seconds=d["baseline_seconds"],
                    depth=int(depth),
                    kernel_blocks=tuple(kb) if kb else None,
+                   tile=int(tile) if tile else None,
                    from_cache=from_cache)
 
 

@@ -25,11 +25,11 @@ from typing import Callable, Dict, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 
-from repro.core.blocking import BlockSpec, panel_steps
+from repro.core.blocking import BlockSpec, expand_schedule, panel_steps
 from repro.launch.roofline import HBM_BW, PEAK_FLOPS
 
 __all__ = ["Machine", "MACHINE", "gemm_attainment", "gemm_blocks", "predict",
-           "rank", "step_costs"]
+           "rank", "step_costs", "TILE_TASK_COSTS"]
 
 
 # ---------------------------------------------------------------------------
@@ -143,6 +143,9 @@ PANEL_EFF = 0.01
 # Fixed per-iteration dispatch cost and the RTM per-tile task overhead.
 STEP_OVERHEAD_S = 2e-6
 RTM_TASK_OVERHEAD_S = 1e-6
+# Per-task dispatch cost of the tile-DAG executor (DESIGN.md §16) — same
+# order as the RTM fragmentation it generalizes.
+TILE_TASK_OVERHEAD_S = 1e-6
 
 
 def _peak_flops(dtype) -> float:
@@ -244,6 +247,71 @@ STEP_COSTS: Dict[str, Callable] = {
 }
 
 
+# ---------------------------------------------------------------------------
+# §9 cost entries for the tile task kinds (DESIGN.md §16).  Each entry maps
+# the tile widths (w_k, w_i, w_j) of a task keyed (k, i, j) to
+# (flops, bytes, class): "panel" tasks are the sequential fori-loop kernels
+# (GEQR2/LARFT, unblocked Cholesky) running at PANEL_EFF; "gemm" tasks are
+# BLAS-3 tile ops at the backend's GEMM efficiency with an HBM traffic term.
+# ---------------------------------------------------------------------------
+TILE_TASK_COSTS: Dict[str, Callable] = {
+    # GEQR2 + T build on the w_k × w_k diagonal tile
+    "GEQRT": lambda wk, wi, wj, it: (4.0 * wk * wk * wk, 0.0, "panel"),
+    # GEQR2 + T on the stacked (w_k + w_i) × w_k pair (non-structured TSQRT)
+    "TSQRT": lambda wk, wi, wj, it: (4.0 * (wk + wi) * wk * wk, 0.0, "panel"),
+    # WY apply (two GEMMs) of w_k reflectors to a w_k × w_j tile
+    "UNMQR": lambda wk, wi, wj, it: (4.0 * wk * wk * wj,
+                                     3.0 * wk * wj * it, "gemm"),
+    # WY apply to the stacked (w_k + w_i) × w_j tile pair
+    "TSMQR": lambda wk, wi, wj, it: (4.0 * (wk + wi) * wk * wj,
+                                     3.0 * (wk + wi) * wj * it, "gemm"),
+    # unblocked Cholesky of the w_k × w_k diagonal tile
+    "POTRF": lambda wk, wi, wj, it: (wk * wk * wk / 3.0, 0.0, "panel"),
+    # triangular solve against the w_i × w_k tile
+    "TRSM": lambda wk, wi, wj, it: (wi * wk * wk,
+                                    3.0 * wi * wk * it, "gemm"),
+    # symmetric rank-w_k update of the w_j × w_j diagonal tile
+    "SYRK": lambda wk, wi, wj, it: (2.0 * wj * wj * wk,
+                                    3.0 * wj * wj * it, "gemm"),
+    # rank-w_k update of the w_i × w_j tile
+    "GEMM": lambda wk, wi, wj, it: (2.0 * wi * wj * wk,
+                                    3.0 * wi * wj * it, "gemm"),
+}
+
+
+def _predict_tiled(dmf: str, n: int, dtype, schedule: BlockSpec,
+                   peak: float, gemm_eff: float) -> float:
+    """Modeled seconds for the tile-DAG executor (serial-sum over tasks).
+
+    Enumerates the same task program the executor runs
+    (:data:`repro.core.tiles.TILE_PROGRAMS`) over the square-n tile grid
+    and prices each task by its kind's §9 entry plus the per-task dispatch
+    overhead.  The executor runs wavefronts serially on this backend, so
+    the sum — not the critical path — is the wall-clock model (the DAG
+    critical path is what :func:`repro.obs.report.tile_dag` measures).
+    """
+    from repro.core.tiles import TILE_PROGRAMS
+
+    if dmf not in TILE_PROGRAMS:
+        raise KeyError(f"no tiled task program (or cost model) for {dmf!r}")
+    widths = expand_schedule(n, schedule)
+    nt = len(widths)
+    builder = TILE_PROGRAMS[dmf][0]
+    tasks = builder(nt, nt) if dmf == "qr" else builder(nt)
+    itemsize = jnp.dtype(dtype).itemsize
+    total = 0.0
+    for t in tasks:
+        k, i, j = t.key
+        fl, byts, cls = TILE_TASK_COSTS[t.kind](widths[k], widths[i],
+                                                widths[j], itemsize)
+        eff = PANEL_EFF if cls == "panel" else gemm_eff
+        task_t = fl / (peak * eff)
+        if byts:
+            task_t = max(task_t, byts / HBM_BW)
+        total += task_t + TILE_TASK_OVERHEAD_S
+    return total
+
+
 def step_costs(dmf: str, n: int, k: int, bk: int,
                dtype=jnp.float32) -> Tuple[float, float, float]:
     """(panel_flops, update_flops, update_bytes) for iteration ``k``."""
@@ -281,6 +349,8 @@ def predict(dmf: str, n: int, dtype, variant: str, schedule: BlockSpec,
         b0 = steps0[0].bk if steps0 else int(n)
         r0 = max(n - b0, 1)
         gemm_eff *= gemm_attainment(r0, r0, b0, dtype, blocks=kernel_blocks)
+    if base == "tiled":
+        return _predict_tiled(dmf, n, dtype, schedule, peak, gemm_eff)
     total = 0.0
     for st in panel_steps(n, schedule):
         pf_fl, tu_fl, tu_by = step_costs(dmf, n, st.k, st.bk, dtype)

@@ -66,6 +66,10 @@ class Candidate:
     #: None = the backend's per-shape default (``model.gemm_blocks``); only
     #: enumerated for Pallas backends, where the blocking is a real knob.
     kernel_blocks: Optional[Tuple[int, int, int]] = None
+    #: Tile size — the tile-granularity axis (ISSUE 9): set for
+    #: ``variant="tiled"`` candidates (the leading width of the schedule,
+    #: which the tile grid is built from), None for pipeline variants.
+    tile: Optional[int] = None
 
     def label(self) -> str:
         b0 = self.schedule[0]
@@ -74,6 +78,8 @@ class Candidate:
         if self.kernel_blocks is not None:
             bm, bn, bk = self.kernel_blocks
             lbl += f"/kb{bm}x{bn}x{bk}"
+        if self.tile is not None:
+            lbl += f"/t{self.tile}"
         return lbl
 
 
@@ -212,16 +218,21 @@ def _candidates(dmf: str, n: int, dtype, blocks: Sequence[int],
                                 continue
                         except (KeyError, ValueError):
                             pass          # unmodeled DMF/schedule: measure
+                    # tile-granularity axis: a "tiled" candidate's grid is
+                    # built from its schedule — record the leading tile size
+                    # so the cache entry names the granularity explicitly
+                    tile = s[0] if base == "tiled" else None
                     if be.startswith("pallas"):
                         # kernel-blocking axis: the BLIS (bm, bn, bk) is a
                         # real knob only where our Pallas GEMM runs
                         for kb in _kernel_block_axis(n, s[0], dtype):
                             out.append(Candidate(variant=v, schedule=s,
                                                  backend=be,
-                                                 kernel_blocks=kb))
+                                                 kernel_blocks=kb,
+                                                 tile=tile))
                     else:
                         out.append(Candidate(variant=v, schedule=s,
-                                             backend=be))
+                                             backend=be, tile=tile))
     return out
 
 
@@ -344,6 +355,7 @@ def search(
             backend=be, variant=best.variant, schedule=best.schedule,
             depth=parse_variant(best.variant)[1],
             kernel_blocks=best.kernel_blocks,
+            tile=best.tile,
             seconds=mine[best],
             baseline_seconds=mine.get(baselines[be], mine[best]))
         cache.put(cache_key(dmf, n, dtype, be), hits[be])

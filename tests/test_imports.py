@@ -1,0 +1,79 @@
+"""Import-order regression matrix (ISSUE 9 satellite 1).
+
+PR 8 shipped a latent cycle: ``repro.kernels.panels`` did a module-level
+``from repro.core.backend import _gemm_impl``, and ``repro.core.backend``
+(via ``repro.core.__init__`` → ``lookahead`` → ``hessenberg``) imports
+``repro.kernels.panels`` — so whichever module was imported *first*
+determined whether the program crashed with a partially-initialized
+module.  The tier-1 suite never caught it because ``conftest`` imports
+``repro.core`` first, hiding the order dependence.
+
+The fix (a lazy ``_gemm_impl`` call-time wrapper in panels.py) is pinned
+two ways: every public ``repro`` module must import cleanly as the FIRST
+repro import of a fresh interpreter, and the wrapper must still compute
+the canonical GEMM bitwise.
+"""
+import os
+import pkgutil
+import subprocess
+import sys
+from concurrent.futures import ThreadPoolExecutor
+from pathlib import Path
+
+SRC = Path(__file__).resolve().parent.parent / "src"
+# modest parallelism: the point is hiding subprocess startup latency, and
+# over-subscribing a small CI box makes every import pay contention
+_WORKERS = min(4, (os.cpu_count() or 1) + 1)
+
+
+def _public_modules():
+    """Every importable ``repro`` module, ``_``-prefixed names skipped."""
+    import repro
+
+    mods = ["repro"]
+    for m in pkgutil.walk_packages(repro.__path__, prefix="repro."):
+        if any(part.startswith("_") for part in m.name.split(".")):
+            continue
+        mods.append(m.name)
+    return sorted(mods)
+
+
+def _import_first(mod):
+    """Import ``mod`` as the first repro import of a fresh interpreter."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(SRC) + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, "-c", f"import {mod}"],
+        capture_output=True, text=True, timeout=240, env=env,
+    )
+    return mod, proc.returncode, proc.stderr
+
+
+def test_every_public_module_imports_first():
+    mods = _public_modules()
+    # the two modules whose order-dependence motivated this matrix
+    assert "repro.kernels.panels" in mods
+    assert "repro.core.tiles" in mods
+    assert len(mods) > 80
+    with ThreadPoolExecutor(max_workers=_WORKERS) as pool:
+        results = list(pool.map(_import_first, mods))
+    failures = [f"{m}: {err.strip().splitlines()[-1] if err else rc}"
+                for m, rc, err in results if rc != 0]
+    assert not failures, "modules that fail as first import:\n" + \
+        "\n".join(failures)
+
+
+def test_panels_first_then_backend_bitwise():
+    """The lazy wrapper resolves to the canonical GEMM body bitwise."""
+    import numpy as np
+
+    from repro.kernels import panels as p
+
+    # importing backend *after* panels must hand the wrapper the real impl
+    from repro.core import backend as B
+
+    rng = np.random.default_rng(0)
+    a = rng.standard_normal((7, 5)).astype(np.float32)
+    b = rng.standard_normal((5, 3)).astype(np.float32)
+    assert np.array_equal(np.asarray(p._gemm_impl(a, b)),
+                          np.asarray(B._gemm_impl(a, b)))

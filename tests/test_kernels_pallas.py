@@ -27,7 +27,6 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-import repro.core  # noqa: F401  (import order: core before kernels)
 from repro import obs
 from repro.core.lookahead import FACTORIZATIONS, get_variant, list_variants
 from repro.kernels import blis_gemm as bg

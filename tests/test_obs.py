@@ -400,3 +400,87 @@ def test_serve_flush_spans_share_server_registry():
     assert serve_spans and "gesv" in serve_spans[0].name
     snap = srv.metrics.snapshot()
     assert snap["hist.span.serve.count"] >= 1.0
+
+
+# ---------------------------------------------------------------------------
+# Trace-under-jit detection (ISSUE 9 satellite 2).
+# ---------------------------------------------------------------------------
+def test_trace_under_jit_warns_once_and_tags_spans():
+    import warnings as _warnings
+
+    obs_tracer._reset_traced_warning()
+    a = np.eye(8, dtype=np.float32) * 4.0
+    chol = get_variant("cholesky", "mtb")
+
+    with trace() as tr:
+        # a FRESH jit wrapper forces a retrace with the tracer installed;
+        # the instrumented sites see jax.core.Tracer values, not numbers
+        with pytest.warns(RuntimeWarning, match="under jit tracing"):
+            out = jax.jit(lambda x: chol(x, 4))(a)
+    assert np.allclose(out, 2.0 * np.eye(8))
+    traced = [s for s in tr.spans if s.meta.get("traced")]
+    assert traced, "expected spans tagged traced=True under jit"
+    # times under tracing measure trace time, never fenced execution
+    for s in traced:
+        assert s.meta["traced"] is True
+
+    # the warning is a one-time latch: a second traced run stays silent
+    with trace():
+        with _warnings.catch_warnings(record=True) as rec:
+            _warnings.simplefilter("always")
+            jax.jit(lambda x: chol(x, 4))(a)  # fresh lambda → fresh trace
+    assert not [w for w in rec if "under jit tracing" in str(w.message)]
+    obs_tracer._reset_traced_warning()
+
+
+def test_eager_trace_does_not_warn_or_tag():
+    import warnings as _warnings
+
+    obs_tracer._reset_traced_warning()
+    a = jax.numpy.asarray(np.eye(8, dtype=np.float32) * 4.0)
+    with trace() as tr:
+        with _warnings.catch_warnings(record=True) as rec:
+            _warnings.simplefilter("always")
+            get_variant("cholesky", "mtb")(a, 4)
+    assert not [w for w in rec if "under jit tracing" in str(w.message)]
+    assert not [s for s in tr.spans if s.meta.get("traced")]
+
+
+# ---------------------------------------------------------------------------
+# Tile-DAG critical-path report (ISSUE 9 tentpole, synthetic spans).
+# ---------------------------------------------------------------------------
+def _tile_span(kind, t0, t1, *, wave, traced=False):
+    meta = {"kind": kind, "dag_depth": wave}
+    if traced:
+        meta["traced"] = True
+    return Span("TILE", f"{kind}(. . .)", t0, t1, step=0, it=wave, meta=meta)
+
+
+def test_tile_dag_report_synthetic():
+    spans = [
+        _tile_span("GEQRT", 0.0, 1.0, wave=0),
+        _tile_span("UNMQR", 1.0, 3.0, wave=1),
+        _tile_span("TSQRT", 3.0, 3.5, wave=1),
+        # a span recorded under jit tracing must not pollute the numbers
+        _tile_span("GEQRT", 0.0, 50.0, wave=0, traced=True),
+        # nor does non-TILE engine work
+        Span("drive", "qr_factor", 0.0, 100.0),
+    ]
+    rep = obs_report.tile_dag(spans)
+    assert rep["serialized_s"] == pytest.approx(3.5)
+    # per-wave max: 1.0 (wave 0) + 2.0 (wave 1)
+    assert rep["critical_path_s"] == pytest.approx(3.0)
+    assert rep["ideal_speedup"] == pytest.approx(3.5 / 3.0)
+    assert rep["wall_s"] == pytest.approx(3.5)
+    assert rep["n_tasks"] == 3.0
+    assert rep["n_waves"] == 2.0
+    assert rep["max_wave_width"] == 2.0
+    assert rep["kind_s"] == {"GEQRT": pytest.approx(1.0),
+                             "UNMQR": pytest.approx(2.0),
+                             "TSQRT": pytest.approx(0.5)}
+
+
+def test_tile_dag_report_empty():
+    rep = obs_report.tile_dag([Span("drive", "qr_factor", 0.0, 1.0)])
+    assert rep["n_tasks"] == 0.0
+    assert rep["ideal_speedup"] == 1.0

@@ -110,7 +110,7 @@ def test_lookahead_excluded_dmfs_advertise_no_la():
         assert "mtb" in advertised and "rtm" in advertised
         assert not any(v.startswith("la") for v in advertised)
         for name in ("la", "la2", "la_mb", "la_mb3"):
-            with pytest.raises(KeyError, match="look-ahead is excluded"):
+            with pytest.raises(KeyError, match="scheduling is excluded by policy"):
                 get_variant(dmf, name)
 
 

@@ -22,6 +22,7 @@ from repro.core import lu as L
 from repro.core.blocking import max_width, num_panels, panel_steps
 from repro.core.ldlt import unpack_ldlt
 from repro.core.qr import form_q
+from repro.core.tiles import TileQR, qr_form_q
 
 jax.config.update("jax_enable_x64", True)
 
@@ -60,9 +61,12 @@ def _check_cholesky(a, lout, tol):
 
 
 def _check_qr(a, out, tol, sched):
-    packed, taus = out
-    q = form_q(packed, taus, sched)
-    r = jnp.triu(packed)
+    if isinstance(out, TileQR):
+        # variant="tiled" returns the tile-DAG factored form (DESIGN.md §16)
+        q, r = qr_form_q(out), out.r
+    else:
+        packed, taus = out
+        q, r = form_q(packed, taus, sched), jnp.triu(packed)
     assert jnp.linalg.norm(q @ r - a) / jnp.linalg.norm(a) < tol
     assert jnp.linalg.norm(q.T @ q - jnp.eye(a.shape[0], dtype=a.dtype)) < tol
 

@@ -217,9 +217,9 @@ def test_gehrd_similarity_object():
 
 def test_new_drivers_reject_lookahead_variant():
     a = _rand((24, 24), 66, np.float64)
-    with pytest.raises(KeyError, match="look-ahead is excluded"):
+    with pytest.raises(KeyError, match="scheduling is excluded by policy"):
         geqp3(a, 8, variant="la")
-    with pytest.raises(KeyError, match="look-ahead is excluded"):
+    with pytest.raises(KeyError, match="scheduling is excluded by policy"):
         gehrd(a, 8, variant="la2")
     with pytest.raises(ValueError, match="local=True"):
         geqp3(a, 8, depth=2)              # global QRCP has no la window

@@ -1,0 +1,304 @@
+"""Tile-DAG scheduling backend (DESIGN.md §16, ISSUE 9).
+
+Five contract groups over :mod:`repro.core.tiles`:
+
+* **DAG structure** — ``build_dag`` dataflow analysis: duplicate-key
+  rejection, dep/wave invariants, and the exact wavefront layouts of the
+  tile-Cholesky and tile-QR programs (including the V/A resource split
+  that keeps ``UNMQR`` off the ``TSQRT`` chain's critical path).
+* **Determinism** — the wavefront executor runs tasks in a fixed order,
+  so two runs are *bitwise* identical (the property the §16 numerics
+  policy leans on).
+* **Numerics policy** — tiled Cholesky is bitwise equal to ``mtb``/
+  ``rtm`` at the same block schedule (POTRF/TRSM/SYRK/GEMM are the same
+  ops the pipeline variants emit); single-tile QR degenerates to GEQRF
+  and is bitwise; multi-tile QR is a *different* (incremental) reflector
+  set and is held to reconstruction/orthogonality tolerance instead.
+* **Policy gates** — ``make_tiled`` refuses ``la_unsafe`` declarations
+  and declarations without a ``tiles`` hook; the registry exposes
+  ``"tiled"`` for qr/cholesky only and rejects depth suffixes.
+* **Integration** — solve drivers return :class:`TiledQRFactors`, the
+  factored form round-trips through jit as a pytree, and traced runs
+  emit ``TILE`` spans that :func:`repro.obs.report.tile_dag` folds into
+  a critical-path report.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import tiles as T
+from repro.core.backend import get_backend
+from repro.core.lookahead import deepen, get_variant, list_variants
+from repro.core.qr import QR_OPS
+from repro.core.qrcp import QRCP_OPS
+from repro.obs import report
+from repro.obs import tracer as obs
+
+jax.config.update("jax_enable_x64", True)
+
+BE = get_backend("jnp")
+TOL = 1e-10
+
+
+def _rand(m, n, seed=0, dtype=np.float64):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal((m, n)).astype(dtype))
+
+
+def _spd(n, seed=0, dtype=np.float64):
+    a = np.asarray(_rand(n, n, seed, dtype))
+    return jnp.asarray(a @ a.T + n * np.eye(n, dtype=dtype))
+
+
+def _bitwise(x, y):
+    assert np.array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# DAG structure.
+# ---------------------------------------------------------------------------
+def test_build_dag_rejects_duplicate_keys():
+    t = T.TileTask("POTRF", (0, 0, 0), reads=(("A", 0, 0),),
+                   writes=(("A", 0, 0),), run=lambda st: None)
+    with pytest.raises(ValueError, match="unique"):
+        T.build_dag([t, t])
+
+
+@pytest.mark.parametrize("tasks", [
+    T._qr_tasks(1, 3), T._qr_tasks(2, 2), T._qr_tasks(3, 3),
+    T._qr_tasks(4, 2), T._cholesky_tasks(1), T._cholesky_tasks(4),
+], ids=["qr1x3", "qr2x2", "qr3x3", "qr4x2", "chol1", "chol4"])
+def test_dag_invariants(tasks):
+    dag = T.build_dag(tasks)
+    assert len(dag.tasks) == len(tasks)
+    keys = {t.key for t in dag.tasks}
+    for t in dag.tasks:
+        assert t.kind in T.TILE_TASK_KINDS
+        for d in dag.deps[t.key]:
+            assert d in keys
+            # every dependency is scheduled at least one wave earlier
+            assert dag.wave[d] < dag.wave[t.key]
+        if not dag.deps[t.key]:
+            assert dag.wave[t.key] == 0
+    # waves partition the task set and are sorted by canonical key
+    flat = [t.key for w in dag.waves for t in w]
+    assert sorted(flat) == sorted(keys)
+    for w in dag.waves:
+        ks = [t.key for t in w]
+        assert ks == sorted(ks)
+    assert dag.depth == len(dag.waves) == 1 + max(dag.wave.values())
+
+
+def test_cholesky_wave_layout_nt3():
+    dag = T.build_dag(T._cholesky_tasks(3))
+    assert dag.depth == 7
+    expect = {(0, 0, 0): 0,                          # POTRF
+              (0, 1, 0): 1, (0, 2, 0): 1,           # TRSMs
+              (0, 1, 1): 2, (0, 2, 1): 2, (0, 2, 2): 2,  # SYRK/GEMM/SYRK
+              (1, 1, 1): 3,                          # POTRF
+              (1, 2, 1): 4,                          # TRSM
+              (1, 2, 2): 5,                          # SYRK
+              (2, 2, 2): 6}                          # POTRF
+    assert dag.wave == expect
+
+
+def test_qr_wave_layout_2x2():
+    dag = T.build_dag(T._qr_tasks(2, 2))
+    assert dag.depth == 4
+    assert dag.wave == {(0, 0, 0): 0,   # GEQRT
+                        (0, 0, 1): 1,   # UNMQR
+                        (0, 1, 0): 1,   # TSQRT
+                        (0, 1, 1): 2,   # TSMQR
+                        (1, 1, 1): 3}   # GEQRT
+    # the V/A split: UNMQR(0, j) reads ("V",0,0) only, so it does NOT
+    # serialize against the TSQRT chain rewriting tile (0, 0)
+    assert dag.deps[(0, 0, 1)] == frozenset({(0, 0, 0)})
+
+
+def test_tile_grid():
+    assert T.tile_grid(100, 32) == ((0, 32), (32, 32), (64, 32), (96, 4))
+    # sequence BlockSpec: consumed in order, last entry repeats, clipped
+    assert T.tile_grid(100, (48, 32)) == ((0, 48), (48, 32), (80, 20))
+
+
+# ---------------------------------------------------------------------------
+# Determinism — two runs are bitwise identical.
+# ---------------------------------------------------------------------------
+def test_qr_tiles_deterministic():
+    a = _rand(70, 45, seed=1)
+    t1, t2 = T.qr_tiles(a, 16), T.qr_tiles(a, 16)
+    _bitwise(t1.r, t2.r)
+    assert len(t1.factors) == len(t2.factors)
+    for f1, f2 in zip(t1.factors, t2.factors):
+        _bitwise(f1.v, f2.v)
+        _bitwise(f1.t, f2.t)
+        assert (f1.col, f1.rows0, f1.rows1) == (f2.col, f2.rows0, f2.rows1)
+
+
+def test_cholesky_tiles_deterministic():
+    a = _spd(100, seed=2)
+    _bitwise(T.cholesky_tiles(a, 32), T.cholesky_tiles(a, 32))
+
+
+# ---------------------------------------------------------------------------
+# Numerics policy (documented in tests/conformance.py VARIANT_CHECKS).
+# ---------------------------------------------------------------------------
+def test_cholesky_tiled_bitwise_vs_pipeline_variants():
+    a = _spd(100, seed=3)
+    tiled = T.cholesky_tiles(a, 32)
+    for variant in ("mtb", "rtm"):
+        _bitwise(tiled, get_variant("cholesky", variant)(a, 32, backend=BE))
+
+
+def test_cholesky_tiled_schedule_blockspec():
+    a = _spd(100, seed=4)
+    # expanded uniform schedule drives the same tile grid → bitwise
+    _bitwise(T.cholesky_tiles(a, 32),
+             T.cholesky_tiles(a, (32, 32, 32, 4)))
+
+
+def test_qr_single_tile_is_geqrf_bitwise():
+    a = _rand(24, 16, seed=5)
+    tqr = T.qr_tiles(a, 32)             # b >= m, n → one tile, GEQRT only
+    assert len(tqr.factors) == 1
+    packed, _taus = get_variant("qr", "mtb")(a, 32, backend=BE)
+    _bitwise(tqr.r, jnp.triu(packed))
+
+
+@pytest.mark.parametrize("shape,b", [((70, 45), 16), ((45, 70), 16),
+                                     ((64, 64), 16)],
+                         ids=["tall", "wide", "square"])
+def test_qr_tiles_reconstruction(shape, b):
+    a = _rand(*shape, seed=6)
+    tqr = T.qr_tiles(a, b)
+    r = tqr.r
+    # R upper-triangular exactly (zeros written, not small values)
+    assert float(jnp.abs(jnp.tril(r[: r.shape[1]], -1)).max()) == 0.0
+    q = T.qr_form_q(tqr, backend=BE)
+    m = shape[0]
+    assert float(jnp.linalg.norm(q @ r - a) / jnp.linalg.norm(a)) < TOL
+    assert float(jnp.linalg.norm(q.T @ q - jnp.eye(m, dtype=a.dtype))) < TOL
+
+
+def test_qr_apply_qt_matches_form_q():
+    a = _rand(70, 45, seed=7)
+    tqr = T.qr_tiles(a, 16)
+    q = T.qr_form_q(tqr, backend=BE)
+    c = _rand(70, 3, seed=8)
+    qtc = T.qr_apply_qt(tqr, c, backend=BE)
+    assert float(jnp.linalg.norm(q.T @ c - qtc) / jnp.linalg.norm(c)) < TOL
+    # 1-D rhs promotes and demotes
+    v = T.qr_apply_qt(tqr, c[:, 0], backend=BE)
+    assert v.shape == (70,)
+    _bitwise(v, qtc[:, 0])
+
+
+# ---------------------------------------------------------------------------
+# Policy gates: make_tiled + the variant registry.
+# ---------------------------------------------------------------------------
+def test_make_tiled_refuses_la_unsafe():
+    with pytest.raises(ValueError, match="cannot emit a tile DAG for 'qrcp'"):
+        T.make_tiled(QRCP_OPS)
+
+
+def test_make_tiled_refuses_missing_tiles_hook():
+    with pytest.raises(ValueError, match="per-tile fragmentation"):
+        T.make_tiled(dataclasses.replace(QR_OPS, tiles=None))
+
+
+def test_make_tiled_unknown_program():
+    with pytest.raises(KeyError, match="no tile task program"):
+        T.make_tiled(dataclasses.replace(QR_OPS, name="mystery"))
+
+
+def test_registry_exposure():
+    assert "tiled" in list_variants("qr")
+    assert "tiled" in list_variants("cholesky")
+    assert "tiled" not in list_variants("lu")
+    assert get_variant("qr", "tiled") is T.qr_tiles
+    assert get_variant("cholesky", "tiled") is T.cholesky_tiles
+
+
+def test_registry_excluded_and_depth():
+    with pytest.raises(KeyError, match="excluded by policy"):
+        get_variant("qrcp", "tiled")
+    with pytest.raises(ValueError, match="no look-ahead window"):
+        deepen("tiled", 2)
+    with pytest.raises(KeyError):
+        get_variant("qr", "tiled2")
+
+
+# ---------------------------------------------------------------------------
+# Integration: solve drivers, pytree/jit, observability.
+# ---------------------------------------------------------------------------
+def test_solve_drivers_return_tiled_factors():
+    from repro.solve import drivers
+    from repro.solve.factors import TiledQRFactors
+
+    a = _rand(40, 24, seed=9)
+    b = _rand(40, 2, seed=10)
+    f = drivers.qr_factor(a, 16, variant="tiled")
+    assert isinstance(f, TiledQRFactors)
+    assert (f.m, f.n) == (40, 24)
+    x = f.solve(b)
+    # least-squares optimality: residual orthogonal to range(A)
+    assert float(jnp.linalg.norm(a.T @ (a @ x - b))
+                 / jnp.linalg.norm(b)) < 1e-8
+    xv = f.solve(b[:, 0])
+    assert xv.shape == (24,)
+    _bitwise(xv, x[:, 0])
+    # gels routes through the same factored form
+    _bitwise(drivers.gels(a, b, 16, variant="tiled"), x)
+
+
+def test_tiled_factors_solve_requires_tall():
+    from repro.solve import drivers
+
+    f = drivers.qr_factor(_rand(24, 40, seed=11), 16, variant="tiled")
+    with pytest.raises(ValueError, match="m >= n"):
+        f.solve(_rand(24, 1, seed=12))
+
+
+def test_tiled_factors_logdet_magnitude():
+    from repro.solve import drivers
+
+    a = _spd(32, seed=13)
+    sign, logabs = drivers.qr_factor(a, 16, variant="tiled").logdet()
+    assert float(sign) == 0.0           # sign unknown by design (§16)
+    ref = jnp.linalg.slogdet(a)[1]
+    assert abs(float(logabs - ref)) < 1e-8
+
+
+def test_tileqr_pytree_jit_roundtrip():
+    a = _rand(40, 24, seed=14)
+    eager = T.qr_tiles(a, 16)
+    jitted = jax.jit(lambda x: T.qr_tiles(x, 16))(a)
+    assert isinstance(jitted, T.TileQR)
+    _bitwise(eager.r, jitted.r)
+    # tree_map preserves structure (leaves are v/t arrays, meta static)
+    mapped = jax.tree_util.tree_map(lambda x: x, eager)
+    _bitwise(mapped.r, eager.r)
+    assert mapped.factors[0].rows0 == eager.factors[0].rows0
+
+
+def test_traced_run_emits_tile_spans_and_report():
+    a = _spd(96, seed=15)
+    nt = len(T.tile_grid(96, 32))
+    n_tasks = len(T._cholesky_tasks(nt))
+    dag = T.build_dag(T._cholesky_tasks(nt))
+    with obs.trace() as tr:
+        out = T.cholesky_tiles(a, 32)
+    _bitwise(out, T.cholesky_tiles(a, 32))  # tracing is numerics-invisible
+    tile = [s for s in tr.spans if s.cat == "TILE"]
+    assert len(tile) == n_tasks
+    for s in tile:
+        assert s.meta["kind"] in T.TILE_TASK_KINDS
+        assert 0 <= s.meta["dag_depth"] < dag.depth
+    rep = report.tile_dag(tr.spans)
+    assert rep["n_tasks"] == n_tasks
+    assert rep["n_waves"] == dag.depth
+    assert rep["critical_path_s"] <= rep["serialized_s"] + 1e-12
+    assert rep["ideal_speedup"] >= 1.0

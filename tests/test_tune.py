@@ -468,3 +468,114 @@ def test_search_module_rename_and_shim():
     assert shim.search is search_mod.search
     assert shim._measure is search_mod._measure
     assert callable(shim)
+
+
+# ---------------------------------------------------------------------------
+# Cache schema migration matrix (ISSUE 9 satellite 3): all three cache
+# generations load, unknown future keys are tolerated, None fields are
+# omitted on write.
+# ---------------------------------------------------------------------------
+def _strip(entry, *keys):
+    e = dict(entry)
+    for k in keys:
+        e.pop(k, None)
+    return e
+
+
+def test_config_json_migration_matrix():
+    full = _cfg(kernel_blocks=(8, 16, 32), tile=None).to_json()
+    # generation pre-ISSUE-3: no depth, no kernel_blocks, no tile
+    pre3 = _strip(full, "depth", "kernel_blocks", "tile")
+    cfg = tune.TuneConfig.from_json(pre3)
+    assert (cfg.depth, cfg.kernel_blocks, cfg.tile) == (1, None, None)
+    # generation pre-ISSUE-8: depth present, no kernel_blocks, no tile
+    pre8 = _strip(full, "kernel_blocks", "tile")
+    pre8["variant"], pre8["depth"] = "la2", 2
+    cfg = tune.TuneConfig.from_json(pre8)
+    assert (cfg.depth, cfg.kernel_blocks, cfg.tile) == (2, None, None)
+    # generation pre-ISSUE-9: kernel_blocks present, no tile
+    pre9 = _strip(full, "tile")
+    cfg = tune.TuneConfig.from_json(pre9)
+    assert cfg.kernel_blocks == (8, 16, 32) and cfg.tile is None
+    # current generation round-trips the tile axis
+    now = _cfg(variant="tiled", tile=32).to_json()
+    assert now["tile"] == 32
+    assert tune.TuneConfig.from_json(now).tile == 32
+
+
+def test_config_json_tolerates_unknown_future_keys():
+    entry = _cfg().to_json()
+    entry["from_the_future"] = {"nested": [1, 2, 3]}
+    entry["another_axis"] = "simd"
+    cfg = tune.TuneConfig.from_json(entry)
+    assert cfg.schedule == (32, 32)
+    assert not hasattr(cfg, "from_the_future")
+
+
+def test_config_json_omits_absent_new_fields():
+    # a config with no kernel blocking and no tile writes the pre-ISSUE-8
+    # schema — older readers (and schema-diff tooling) see no new keys
+    entry = _cfg().to_json()
+    assert "kernel_blocks" not in entry and "tile" not in entry
+    assert "from_cache" not in entry
+
+
+def test_cache_migration_matrix_on_disk(tmp_path):
+    path = tmp_path / "tune.json"
+    full = _cfg(kernel_blocks=(8, 16, 32)).to_json()
+    k3 = tune.cache_key("lu", 16, "float32", "jnp")
+    k8 = tune.cache_key("lu", 32, "float32", "jnp")
+    k9 = tune.cache_key("lu", 48, "float32", "jnp")
+    disk = {
+        k3: {**_strip(full, "depth", "kernel_blocks", "tile"),
+             "shape": [16, 16]},
+        k8: {**_strip(full, "kernel_blocks", "tile"), "shape": [32, 32]},
+        k9: {**_strip(full, "tile"), "shape": [48, 48],
+             "a_future_key": True},
+    }
+    path.write_text(json.dumps(disk))
+    cache = tune.TuneCache(path)
+    assert cache.get(k3).depth == 1
+    assert cache.get(k8).kernel_blocks is None
+    assert cache.get(k9).kernel_blocks == (8, 16, 32)
+    assert all(cache.get(k).tile is None for k in (k3, k8, k9))
+
+
+# ---------------------------------------------------------------------------
+# Tile-granularity axis (ISSUE 9 tentpole wiring).
+# ---------------------------------------------------------------------------
+def test_candidates_include_tiled_with_tile_axis():
+    cands = search_mod._candidates("qr", N, np.float32, (16,), None, ("jnp",))
+    tiled = [c for c in cands if c.variant == "tiled"]
+    assert tiled
+    for c in tiled:
+        assert c.tile == c.schedule[0]
+        assert f"/t{c.tile}" in c.label()
+    assert all(c.tile is None for c in cands if c.variant != "tiled")
+    # lu has no tiled program — the axis never appears
+    assert not any(c.variant == "tiled" for c in
+                   search_mod._candidates("lu", N, np.float32, (16,), None,
+                                          ("jnp",)))
+
+
+def test_search_records_tile_and_tuned_dispatches_tiled(cache, monkeypatch):
+    from repro.core.tiles import TileQR
+
+    monkeypatch.setattr(
+        search_mod, "_measure",
+        lambda dmf, c, a, **k: 1e-4 if c.variant == "tiled" else 1e-2)
+    cfg = tune.search("qr", N, variants=("tiled",), cache=cache, **KW)
+    assert cfg.variant == "tiled"
+    assert cfg.tile == cfg.schedule[0]
+    hit = tune.TuneCache(cache.path).get(
+        tune.cache_key("qr", N, "float32", "jnp"))
+    assert hit.variant == "tiled" and hit.tile == cfg.tile
+    a = _rand(N, seed=5)
+    old = tune.set_default_cache(cache)
+    try:
+        out = get_variant("qr", "tuned")(a, 32)
+    finally:
+        tune.set_default_cache(old)
+    assert isinstance(out, TileQR)
+    ref = get_variant("qr", "tiled")(a, hit.schedule)
+    np.testing.assert_array_equal(np.asarray(out.r), np.asarray(ref.r))
