@@ -60,6 +60,15 @@ def _groups(args):
         # paired measurements run eagerly and CI gives them their own job.
         from benchmarks import bench_tiles
         groups.append(("tiles", bench_tiles.run))
+    if args.distributed:
+        # ISSUE 10: the mesh-engine depth sweep (mtb vs la/la2/la3 per
+        # device count, broadcast-hidden fraction per row) — opt-in
+        # because each traced eager run forces 8 host devices in a child;
+        # writes BENCH_dist.json itself (rows carry overlap extras the
+        # shared --json schema doesn't).
+        groups.append(("distributed-sweep",
+                       lambda: bench_distributed.run_extended(
+                           json_path=args.distributed_json)))
     return groups
 
 
@@ -79,6 +88,13 @@ def main(argv=None) -> None:
                     help="include the tile-DAG scheduling group (tiled vs la "
                          "paired rows + the tuned-arbitration row -> "
                          "BENCH_tiles.json rows)")
+    ap.add_argument("--distributed", action="store_true",
+                    help="include the mesh-engine depth-sweep group (mtb vs "
+                         "la/la2/la3 per device count, broadcast-hidden "
+                         "fraction per row -> BENCH_dist.json)")
+    ap.add_argument("--distributed-json", default="BENCH_dist.json",
+                    metavar="PATH",
+                    help="BENCH_dist.json path for --distributed rows")
     ap.add_argument("--only", default=None, metavar="NAME",
                     help="run only benchmark groups whose name contains NAME")
     ap.add_argument("--csv", default=None, metavar="PATH",
@@ -108,9 +124,9 @@ def main(argv=None) -> None:
         try:
             rows += fn()
         except Exception as e:  # subprocess env issues shouldn't kill the run
-            if name != "distributed":
+            if not name.startswith("distributed"):
                 raise
-            print(f"bench_distributed skipped: {e!r}", file=sys.stderr)
+            print(f"bench_{name} skipped: {e!r}", file=sys.stderr)
     print(f"\n# {len(rows)} rows")
 
     if args.csv:

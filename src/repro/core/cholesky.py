@@ -127,10 +127,16 @@ CHOLESKY_OPS = StepOps(
 # ---------------------------------------------------------------------------
 def cholesky_blocked(a: jnp.ndarray, b: BlockSpec = 128, *,
                      backend: Backend = JNP_BACKEND,
-                     panel_fn: Optional[Callable] = None) -> jnp.ndarray:
-    """Right-looking blocked Cholesky — the MTB analogue."""
+                     panel_fn: Optional[Callable] = None,
+                     mesh=None, layout=None) -> jnp.ndarray:
+    """Right-looking blocked Cholesky — the MTB analogue.
+
+    ``mesh=`` runs the same schedule over block-cyclic shards, bitwise
+    (DESIGN.md §17).
+    """
     return pipeline.factorize(CHOLESKY_OPS, a, b, variant="mtb",
-                              backend=backend, panel_fn=panel_fn)
+                              backend=backend, panel_fn=panel_fn,
+                              mesh=mesh, layout=layout)
 
 
 def cholesky_tiled(a: jnp.ndarray, b: BlockSpec = 128, *,
@@ -150,12 +156,16 @@ def cholesky_lookahead(
     panel_fn: Optional[Callable] = None,
     fused_pu: Optional[Callable] = None,
     depth: int = 1,
+    mesh=None,
+    layout=None,
 ) -> jnp.ndarray:
     """Cholesky with static look-ahead; ``depth`` panels in flight.
 
     ``fused_pu``: optional fused kernel ``(l21_top, l21_rest, panel) ->
     factored_panel`` realizing GEMM-update + PF in one VMEM-resident call.
+    ``mesh=``: the same depth-d schedule over block-cyclic shards, bitwise
+    (DESIGN.md §17).
     """
     return pipeline.factorize(CHOLESKY_OPS, a, b, variant="la", depth=depth,
                               backend=backend, panel_fn=panel_fn,
-                              fused_pu=fused_pu)
+                              fused_pu=fused_pu, mesh=mesh, layout=layout)

@@ -226,10 +226,16 @@ def lu_blocked(
     *,
     backend: Backend = JNP_BACKEND,
     panel_fn: Optional[Callable] = None,
+    mesh=None,
+    layout=None,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """Right-looking blocked LUpp (MTB).  Returns (packed LU, global ipiv)."""
+    """Right-looking blocked LUpp (MTB).  Returns (packed LU, global ipiv).
+
+    ``mesh=`` runs the same schedule over block-cyclic shards, bitwise
+    (pivots included) — DESIGN.md §17.
+    """
     return pipeline.factorize(LU_OPS, a, b, variant="mtb", backend=backend,
-                              panel_fn=panel_fn)
+                              panel_fn=panel_fn, mesh=mesh, layout=layout)
 
 
 def lu_tiled(
@@ -255,8 +261,14 @@ def lu_lookahead(
     panel_fn: Optional[Callable] = None,
     fused_pu: Optional[Callable] = None,
     depth: int = 1,
+    mesh=None,
+    layout=None,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """LUpp with static look-ahead; ``depth`` panels in flight.
+
+    ``mesh=`` runs the same depth-d schedule over block-cyclic shards with
+    the panel broadcast issued before the bulk update (DESIGN.md §17);
+    results stay bitwise, pivots included.
 
     The pivots of ``PF(k+1)`` are applied lazily at the start of iteration
     k+1 (row interchanges commute with the row-parallel GEMM update),
@@ -268,4 +280,4 @@ def lu_lookahead(
     """
     return pipeline.factorize(LU_OPS, a, b, variant="la", depth=depth,
                               backend=backend, panel_fn=panel_fn,
-                              fused_pu=fused_pu)
+                              fused_pu=fused_pu, mesh=mesh, layout=layout)

@@ -157,12 +157,22 @@ def factorize(
     backend: Backend = JNP_BACKEND,
     panel_fn: Optional[Callable] = None,
     fused_pu: Optional[Callable] = None,
+    mesh=None,
+    layout=None,
 ):
     """Run one scheduling variant of ``ops`` over ``a``.
 
     ``variant`` ∈ {``"mtb"``, ``"rtm"``, ``"la"``}; ``depth`` (``la`` only)
     is the number of panels kept in flight — ``depth=1`` is the paper's
     Listing 5, bit-identical to the pre-refactor ``*_lookahead`` drivers.
+
+    ``mesh=`` (a ``jax.sharding.Mesh``) lowers the same schedule to a
+    shard_map'd SPMD loop over 1-D column block-cyclic shards —
+    :func:`repro.core.distributed.factorize_mesh` — bitwise identical to
+    the single-device engine at the same schedule, pivots included
+    (DESIGN.md §17).  ``layout=`` (a ``distributed.Layout``) selects the
+    mesh axis; by default the active ``parallel.sharding`` Rules table's
+    ``"panels"`` entry decides.
 
     When the caller passes no ``panel_fn``, the backend's per-DMF panel
     registry (``Backend.panel_fns``, keyed by ``ops.name``) supplies the
@@ -175,6 +185,15 @@ def factorize(
     update+factor PU chain — the tuner arbitrates fused-vs-composed as the
     ``la``-vs-``la_mb`` axis.
     """
+    if mesh is not None:
+        from repro.core import distributed as _dist
+
+        return _dist.factorize_mesh(ops, a, b, variant=variant, depth=depth,
+                                    backend=backend, panel_fn=panel_fn,
+                                    fused_pu=fused_pu, mesh=mesh,
+                                    layout=layout)
+    if layout is not None:
+        raise ValueError("layout= is a mesh-path parameter; pass mesh= too")
     if panel_fn is None and backend.panel_fns is not None:
         panel_fn = backend.panel_fns.get(ops.name)
     if variant == "mtb":

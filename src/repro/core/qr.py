@@ -255,10 +255,15 @@ QR_OPS = StepOps(
 def qr_blocked(a: jnp.ndarray, b: BlockSpec = 128, *,
                backend: Backend = JNP_BACKEND,
                panel_fn: Optional[Callable] = None,
+               mesh=None, layout=None,
                ) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """Blocked GEQRF — the MTB analogue.  Returns (packed A, tau)."""
+    """Blocked GEQRF — the MTB analogue.  Returns (packed A, tau).
+
+    ``mesh=`` (m >= n only) runs the same schedule over block-cyclic
+    shards, bitwise (DESIGN.md §17).
+    """
     return pipeline.factorize(QR_OPS, a, b, variant="mtb", backend=backend,
-                              panel_fn=panel_fn)
+                              panel_fn=panel_fn, mesh=mesh, layout=layout)
 
 
 def qr_tiled(a: jnp.ndarray, b: BlockSpec = 128, *,
@@ -279,8 +284,14 @@ def qr_lookahead(
     panel_fn: Optional[Callable] = None,
     fused_pu: Optional[Callable] = None,
     depth: int = 1,
+    mesh=None,
+    layout=None,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """GEQRF with static look-ahead; ``depth`` panels in flight.
+
+    ``mesh=`` (m >= n only) runs the same depth-d schedule over
+    block-cyclic shards with the panel broadcast issued before the bulk
+    reflector application (DESIGN.md §17); results stay bitwise.
 
     Iteration k (panel k already factored, reflectors in the panel ctx):
       * ``PU(k+1)``   : apply ``Qᵀ_k`` to the next panel columns, factor them,
@@ -293,7 +304,7 @@ def qr_lookahead(
     """
     return pipeline.factorize(QR_OPS, a, b, variant="la", depth=depth,
                               backend=backend, panel_fn=panel_fn,
-                              fused_pu=fused_pu)
+                              fused_pu=fused_pu, mesh=mesh, layout=layout)
 
 
 def form_q(a_packed: jnp.ndarray, taus: jnp.ndarray, b: BlockSpec = 128, *,

@@ -32,17 +32,31 @@ _LANES: Dict[str, tuple] = {
     "PU": (0, "update (TU)"),
     "SWAP": (0, "update (TU)"),
     "EPI": (0, "update (TU)"),
+    "BCAST": (5, "collective (BCAST)"),
     "drive": (2, "drivers"),
     "sweep": (2, "drivers"),
     "serve": (3, "serve"),
 }
 _DEFAULT_LANE = (4, "other")
 
+#: Distributed traces tag spans with ``meta["shard"]`` (the owning device
+#: of a broadcast/panel, the target device of a narrow PU — see
+#: :mod:`repro.core.distributed`).  Each shard gets its own block of
+#: thread ids so Perfetto renders one lane group per device: shard *s*'s
+#: copy of base track ``t`` lands at tid ``(s + 1) * stride + t``.
+#: Untagged spans (bulk TU, swaps, single-device runs) keep the base tids.
+_SHARD_STRIDE = 8
+
 PID = 1
 
 
 def _lane(span: Span) -> tuple:
-    return _LANES.get(span.cat, _DEFAULT_LANE)
+    tid, track = _LANES.get(span.cat, _DEFAULT_LANE)
+    shard = span.meta.get("shard")
+    if shard is not None:
+        tid += _SHARD_STRIDE * (int(shard) + 1)
+        track = f"{track} @dev{int(shard)}"
+    return tid, track
 
 
 def chrome_trace(spans: Sequence[Span], *, label: str = "repro") -> dict:
@@ -86,7 +100,7 @@ def write_chrome_trace(path: str, spans: Sequence[Span], *,
 # Terminal timeline.
 # ---------------------------------------------------------------------------
 _GLYPH = {"PF": "P", "panel": "p", "TU": "U", "PU": "u", "SWAP": "s",
-          "EPI": "e", "drive": "d", "sweep": "w", "serve": "S"}
+          "EPI": "e", "BCAST": "B", "drive": "d", "sweep": "w", "serve": "S"}
 
 
 def render_timeline(spans: Iterable[Span], *, width: int = 72) -> str:

@@ -39,8 +39,10 @@ __all__ = ["ENGINE_CATS", "overlap", "tile_dag", "attainment_row",
 
 #: Categories emitted by the pipeline engine itself (the timeline layer the
 #: overlap/critical-path math is defined over; driver/serve wrapper spans
-#: would double-count their enclosed engine spans).
-ENGINE_CATS = ("PF", "TU", "PU", "SWAP", "EPI")
+#: would double-count their enclosed engine spans).  ``BCAST`` is emitted
+#: only by the distributed engine (:mod:`repro.core.distributed`) — absent
+#: from single-device traces, so their numbers are unchanged.
+ENGINE_CATS = ("PF", "TU", "PU", "SWAP", "EPI", "BCAST")
 
 
 def _engine(spans: Sequence[Span]) -> List[Span]:
@@ -48,25 +50,45 @@ def _engine(spans: Sequence[Span]) -> List[Span]:
 
 
 def overlap(spans: Sequence[Span]) -> Dict[str, float]:
-    """Overlap-efficiency + critical-path accounting for one traced run."""
+    """Overlap-efficiency + critical-path accounting for one traced run.
+
+    Distributed traces add ``BCAST`` spans (panel broadcasts,
+    :mod:`repro.core.distributed`).  A broadcast recorded with
+    ``depth >= 1`` was issued inside the PU chain, ahead of the bulk
+    update it is data-independent of — the same structural argument as
+    chain PF time, so ``bcast_hidden_s`` is the per-iteration
+    ``min(chain BCAST, bulk TU)`` and ``bcast_hidden_frac`` the hidden
+    share of **all** broadcast time (mtb's serial ``depth=0`` broadcasts
+    pull it below 1.0 by construction).  ``bcast_bytes`` totals the
+    ``meta["bytes"]`` payload tags.  Single-device traces have no BCAST
+    spans: every ``bcast_*`` key is 0 and the other keys are unchanged.
+    """
     eng = _engine(spans)
     panel_s = sum(s.dur for s in eng if s.cat == "PF")
     update_s = sum(s.dur for s in eng if s.cat in ("TU", "PU"))
+    bcast_s = sum(s.dur for s in eng if s.cat == "BCAST")
+    bcast_bytes = sum(float(s.meta.get("bytes", 0)) for s in eng
+                      if s.cat == "BCAST")
     serialized_s = sum(s.dur for s in eng)
 
     iters = sorted({s.it for s in eng})
     hidden_s = 0.0
+    bcast_hidden_s = 0.0
     critical_s = 0.0
     for i in iters:
         mine = [s for s in eng if s.it == i]
-        # lane A: the PU chain — pre-factorizations and narrow updates the
-        # schedule moved ahead (depth >= 1); lane B: the bulk update.
+        # lane A: the PU chain — pre-factorizations, narrow updates, and
+        # panel broadcasts the schedule moved ahead (depth >= 1); lane B:
+        # the bulk update.
         chain = sum(s.dur for s in mine if s.depth >= 1)
         bulk = sum(s.dur for s in mine if s.cat == "TU" and s.depth == 0)
         serial = sum(s.dur for s in mine) - chain - bulk
         chain_pf = sum(s.dur for s in mine if s.cat == "PF" and s.depth >= 1)
+        chain_bc = sum(s.dur for s in mine
+                       if s.cat == "BCAST" and s.depth >= 1)
         if i >= 0:
             hidden_s += min(chain_pf, bulk)
+            bcast_hidden_s += min(chain_bc, bulk)
         critical_s += serial + max(chain, bulk)
 
     wall_s = (max((s.t1 for s in eng), default=0.0)
@@ -76,6 +98,10 @@ def overlap(spans: Sequence[Span]) -> Dict[str, float]:
         "panel_s": panel_s,
         "update_s": update_s,
         "hidden_s": hidden_s,
+        "bcast_s": bcast_s,
+        "bcast_bytes": bcast_bytes,
+        "bcast_hidden_s": bcast_hidden_s,
+        "bcast_hidden_frac": bcast_hidden_s / bcast_s if bcast_s > 0 else 0.0,
         "serialized_s": serialized_s,
         "critical_path_s": critical_s,
         "ideal_speedup": serialized_s / critical_s if critical_s > 0 else 1.0,

@@ -58,8 +58,8 @@ __all__ = ["Span", "Tracer", "trace", "active"]
 #: Span categories emitted by the instrumented layers.  Engine categories
 #: mirror the paper's task names (``TILE`` = one tile-DAG task,
 #: DESIGN.md §16); the outer layers add their own lanes.
-CATEGORIES = ("PF", "TU", "PU", "SWAP", "EPI", "TILE", "panel", "drive",
-              "sweep", "serve")
+CATEGORIES = ("PF", "TU", "PU", "SWAP", "EPI", "BCAST", "TILE", "panel",
+              "drive", "sweep", "serve")
 
 #: The currently installed tracer (None = tracing disabled, the default).
 #: Instrumented sites read this through :func:`active` — one predicate
@@ -134,7 +134,15 @@ def _note_traced(name: str) -> None:
 
 def _fence(value: Any) -> None:
     """Block until ``value``'s arrays are computed; silently a no-op for
-    non-array pytrees."""
+    non-array pytrees.
+
+    Sharded-safe: ``jax.block_until_ready`` waits on *every* shard of a
+    multi-device array (it fences the underlying per-device buffers), so
+    the distributed engine (:mod:`repro.core.distributed`) can span its
+    shard_map steps with the same wrapper — a BCAST/TU span's end stamp
+    bounds the slowest participating device, not just the addressable
+    shard.  The try/except keeps non-jax values (ints, pivot tuples,
+    host-side aux) free."""
     try:
         import jax
 

@@ -13,6 +13,10 @@ Default layout (DESIGN.md §5):
 * ``heads``/``mlp``/``vocab``/``experts`` → "model" — TP/EP shard
 * ``seq``        → "model"          — SP at layer boundaries for long contexts
 * ``kv_heads``   → "model"
+* ``panels``     → "model"          — the DMF engine's 1-D column block-cyclic
+  axis: ``pipeline.factorize(mesh=...)`` resolves its layout axis through the
+  active rules' ``"panels"`` entry (DESIGN.md §17), so model code and the
+  factorization layer agree on which mesh axis carries tensor parallelism.
 """
 from __future__ import annotations
 
@@ -96,6 +100,7 @@ def default_rules(mesh: Mesh, *, seq_shard: bool = True) -> Rules:
         "layers": None,
         "conv": None,
         "state": "model",
+        "panels": "model",
     }
     return Rules(mesh=mesh, table=table)
 

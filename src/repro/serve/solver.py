@@ -66,6 +66,12 @@ class ServerConfig:
     block: int = 32            # panel width — keep bucket-quantum aligned
     cache_capacity: int = 64   # FactorCache entries
     backend: str = "jnp"
+    #: optional jax.sharding.Mesh — direct gesv/posv batches factor each
+    #: system over block-cyclic shards (DESIGN.md §17) instead of vmapping;
+    #: the large-system regime where one matrix outgrows a device.  Bitwise
+    #: the vmap path's answers (the mesh engine's contract), so responses
+    #: keep the serve layer's bit-stability guarantee.
+    mesh: Optional[object] = None
 
 
 @dataclasses.dataclass
@@ -293,6 +299,15 @@ class SolveServer:
     def _run_direct(self, key: BucketKey, batch: List[SolveRequest]):
         slots = bucketing.batch_slots(len(batch), self.config.max_batch)
         ab, bb = self._stack(key, batch, slots)
+        if self.config.mesh is not None and key.dmf in ("gesv", "posv"):
+            # mesh-sharded direct path: eager per-system SPMD loop (the
+            # shard_map steps cannot nest under vmap) — solve.batched owns
+            # the fallback; other dmfs keep the single-device vmap path.
+            from repro.solve import batched as _batched
+
+            fn = (_batched.gesv_batched if key.dmf == "gesv"
+                  else _batched.posv_batched)
+            return fn(ab, bb, self.config.block, mesh=self.config.mesh)
         ekey = (key, slots)
         if ekey not in self._solve_exec:
             fn = _DRIVER_FNS[key.dmf]

@@ -10,6 +10,15 @@ cached, and consumed by a separately ``jit``-compiled solve step.
 All entry points are jit-compiled with the scheduling knobs static, so the
 whole batch lowers to one XLA computation (the batched analogue of the
 paper's single-process experiments).
+
+``mesh=`` composes differently: the engine's mesh path (DESIGN.md §17) is an
+eagerly-dispatched SPMD loop over shard_map steps, which cannot nest under
+``vmap``/``jit``.  The batched entry points therefore fall back to an eager
+per-system loop when a mesh is passed — each system factored over the full
+mesh in sequence (the large-system regime a mesh is for; for many small
+systems the vmap path is the right tool and ``mesh`` should stay ``None``).
+Results are bitwise the vmap path's answers either way, because each
+per-system factorization is bitwise the single-device driver's.
 """
 from __future__ import annotations
 
@@ -27,48 +36,92 @@ __all__ = [
 ]
 
 
+def _stack_trees(items):
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *items)
+
+
 @functools.partial(jax.jit,
                    static_argnames=("block", "variant", "depth", "backend"))
+def _gesv_vmapped(a, b, block, variant, depth, backend):
+    fn = functools.partial(drivers.gesv, block=block,
+                           variant=variant, depth=depth, backend=backend)
+    return jax.vmap(fn)(a, b)
+
+
 def gesv_batched(a: jnp.ndarray, b: jnp.ndarray, block: BlockSpec = 32, *,
                  variant: str = "la", depth: int = 1,
-                 backend: str = "jnp") -> jnp.ndarray:
+                 backend: str = "jnp", mesh=None, layout=None) -> jnp.ndarray:
     """Solve ``A[i]·X[i] = B[i]`` for a stack of general square systems."""
-    fn = functools.partial(drivers.gesv, block=normalize_block(block),
-                           variant=variant, depth=depth, backend=backend)
-    return jax.vmap(fn)(a, b)
+    block = normalize_block(block)
+    if mesh is not None:
+        return jnp.stack([
+            drivers.gesv(a[i], b[i], block, variant=variant, depth=depth,
+                         backend=backend, mesh=mesh, layout=layout)
+            for i in range(a.shape[0])])
+    return _gesv_vmapped(a, b, block, variant, depth, backend)
 
 
 @functools.partial(jax.jit,
                    static_argnames=("block", "variant", "depth", "backend"))
+def _posv_vmapped(a, b, block, variant, depth, backend):
+    fn = functools.partial(drivers.posv, block=block,
+                           variant=variant, depth=depth, backend=backend)
+    return jax.vmap(fn)(a, b)
+
+
 def posv_batched(a: jnp.ndarray, b: jnp.ndarray, block: BlockSpec = 32, *,
                  variant: str = "la", depth: int = 1,
-                 backend: str = "jnp") -> jnp.ndarray:
+                 backend: str = "jnp", mesh=None, layout=None) -> jnp.ndarray:
     """Solve a stack of SPD systems via batched Cholesky."""
-    fn = functools.partial(drivers.posv, block=normalize_block(block),
-                           variant=variant, depth=depth, backend=backend)
-    return jax.vmap(fn)(a, b)
+    block = normalize_block(block)
+    if mesh is not None:
+        return jnp.stack([
+            drivers.posv(a[i], b[i], block, variant=variant, depth=depth,
+                         backend=backend, mesh=mesh, layout=layout)
+            for i in range(a.shape[0])])
+    return _posv_vmapped(a, b, block, variant, depth, backend)
 
 
 @functools.partial(jax.jit,
                    static_argnames=("block", "variant", "depth", "backend"))
+def _lu_factor_vmapped(a, block, variant, depth, backend):
+    fn = functools.partial(drivers.lu_factor, block=block,
+                           variant=variant, depth=depth, backend=backend)
+    return jax.vmap(fn)(a)
+
+
 def lu_factor_batched(a: jnp.ndarray, block: BlockSpec = 32, *,
                       variant: str = "la", depth: int = 1,
-                      backend: str = "jnp"):
+                      backend: str = "jnp", mesh=None, layout=None):
     """Factor a stack of systems once; returns batched :class:`LUFactors`."""
-    fn = functools.partial(drivers.lu_factor, block=normalize_block(block),
-                           variant=variant, depth=depth, backend=backend)
-    return jax.vmap(fn)(a)
+    block = normalize_block(block)
+    if mesh is not None:
+        return _stack_trees([
+            drivers.lu_factor(a[i], block, variant=variant, depth=depth,
+                              backend=backend, mesh=mesh, layout=layout)
+            for i in range(a.shape[0])])
+    return _lu_factor_vmapped(a, block, variant, depth, backend)
 
 
 @functools.partial(jax.jit,
                    static_argnames=("block", "variant", "depth", "backend"))
-def cholesky_factor_batched(a: jnp.ndarray, block: BlockSpec = 32, *,
-                            variant: str = "la", depth: int = 1,
-                            backend: str = "jnp"):
-    """Factor a stack of SPD systems; returns batched :class:`CholeskyFactors`."""
-    fn = functools.partial(drivers.cholesky_factor, block=normalize_block(block),
+def _cholesky_factor_vmapped(a, block, variant, depth, backend):
+    fn = functools.partial(drivers.cholesky_factor, block=block,
                            variant=variant, depth=depth, backend=backend)
     return jax.vmap(fn)(a)
+
+
+def cholesky_factor_batched(a: jnp.ndarray, block: BlockSpec = 32, *,
+                            variant: str = "la", depth: int = 1,
+                            backend: str = "jnp", mesh=None, layout=None):
+    """Factor a stack of SPD systems; returns batched :class:`CholeskyFactors`."""
+    block = normalize_block(block)
+    if mesh is not None:
+        return _stack_trees([
+            drivers.cholesky_factor(a[i], block, variant=variant, depth=depth,
+                                    backend=backend, mesh=mesh, layout=layout)
+            for i in range(a.shape[0])])
+    return _cholesky_factor_vmapped(a, block, variant, depth, backend)
 
 
 @jax.jit

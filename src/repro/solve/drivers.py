@@ -91,32 +91,48 @@ def _deepen(variant: str, depth: int) -> str:
     return variant if depth == 1 else deepen(variant, depth)
 
 
+def _mesh_kw(mesh, layout) -> dict:
+    """Driver kwargs for the engine's mesh path (DESIGN.md §17).
+
+    Empty when no mesh was requested, so single-device calls reach variant
+    drivers that predate the ``mesh=`` parameter (``rtm``/``tiled``)
+    unchanged; with a mesh, only ``mtb``/``la``-family variants resolve.
+    """
+    return {} if mesh is None else {"mesh": mesh, "layout": layout}
+
+
 # ---------------------------------------------------------------------------
 # Factor steps — factor once, reuse the object for many solves.
 # ---------------------------------------------------------------------------
 @_traced
 def lu_factor(a: jnp.ndarray, block: BlockSpec = 128, *, variant: str = "la",
-              depth: int = 1, backend: BackendLike = "jnp") -> LUFactors:
+              depth: int = 1, backend: BackendLike = "jnp",
+              mesh=None, layout=None) -> LUFactors:
     be = _resolve(backend)
-    lu, ipiv = get_variant("lu", _deepen(variant, depth))(a, block, backend=be)
+    lu, ipiv = get_variant("lu", _deepen(variant, depth))(
+        a, block, backend=be, **_mesh_kw(mesh, layout))
     return LUFactors.from_packed(lu, ipiv, block=_static_block(block),
                                  backend=be)
 
 
 @_traced
 def cholesky_factor(a: jnp.ndarray, block: BlockSpec = 128, *, variant: str = "la",
-                    depth: int = 1, backend: BackendLike = "jnp") -> CholeskyFactors:
+                    depth: int = 1, backend: BackendLike = "jnp",
+                    mesh=None, layout=None) -> CholeskyFactors:
     be = _resolve(backend)
-    l = get_variant("cholesky", _deepen(variant, depth))(a, block, backend=be)
+    l = get_variant("cholesky", _deepen(variant, depth))(
+        a, block, backend=be, **_mesh_kw(mesh, layout))
     return CholeskyFactors(l=l, block=_static_block(block), backend=be)
 
 
 @_traced
 def qr_factor(a: jnp.ndarray, block: BlockSpec = 128, *, variant: str = "la",
-              depth: int = 1, backend: BackendLike = "jnp"
+              depth: int = 1, backend: BackendLike = "jnp",
+              mesh=None, layout=None
               ) -> Union[QRFactors, TiledQRFactors]:
     be = _resolve(backend)
-    out = get_variant("qr", _deepen(variant, depth))(a, block, backend=be)
+    out = get_variant("qr", _deepen(variant, depth))(
+        a, block, backend=be, **_mesh_kw(mesh, layout))
     if isinstance(out, TileQR):
         # variant="tiled" (or "tuned" resolving to a cached tiled winner)
         # returns the tile-DAG factored form, not the GEQRF packed layout
@@ -191,26 +207,34 @@ def gehrd(a: jnp.ndarray, block: BlockSpec = 128, *, variant: str = "mtb",
 @_traced
 def gesv(a: jnp.ndarray, b: jnp.ndarray, block: BlockSpec = 128, *,
          variant: str = "la", depth: int = 1,
-         backend: BackendLike = "jnp") -> jnp.ndarray:
-    """Solve ``A·X = B`` for general square A (LU with partial pivoting)."""
+         backend: BackendLike = "jnp", mesh=None, layout=None) -> jnp.ndarray:
+    """Solve ``A·X = B`` for general square A (LU with partial pivoting).
+
+    ``mesh=`` factors over block-cyclic shards (DESIGN.md §17) — bitwise
+    the single-device answer, pivots included.
+    """
     return lu_factor(a, block, variant=variant, depth=depth,
-                     backend=backend).solve(b)
+                     backend=backend, mesh=mesh, layout=layout).solve(b)
 
 
 @_traced
 def posv(a: jnp.ndarray, b: jnp.ndarray, block: BlockSpec = 128, *,
          variant: str = "la", depth: int = 1,
-         backend: BackendLike = "jnp") -> jnp.ndarray:
-    """Solve ``A·X = B`` for symmetric positive-definite A (Cholesky)."""
+         backend: BackendLike = "jnp", mesh=None, layout=None) -> jnp.ndarray:
+    """Solve ``A·X = B`` for symmetric positive-definite A (Cholesky).
+
+    ``mesh=`` factors over block-cyclic shards (DESIGN.md §17), bitwise.
+    """
     return cholesky_factor(a, block, variant=variant, depth=depth,
-                           backend=backend).solve(b)
+                           backend=backend, mesh=mesh, layout=layout).solve(b)
 
 
 @_traced
 def gels(a: jnp.ndarray, b: jnp.ndarray, block: BlockSpec = 128, *,
          variant: str = "la", depth: int = 1,
          backend: BackendLike = "jnp", pivot: bool = False,
-         local: bool = False, rcond=None) -> jnp.ndarray:
+         local: bool = False, rcond=None, mesh=None,
+         layout=None) -> jnp.ndarray:
     """Least-squares ``argmin‖A·X − B‖₂`` for m ≥ n via Householder QR.
 
     ``pivot=True`` routes through the column-pivoted factorization
@@ -225,6 +249,11 @@ def gels(a: jnp.ndarray, b: jnp.ndarray, block: BlockSpec = 128, *,
     (DESIGN.md §12; weaker rank-revealing guarantee).
     """
     if pivot:
+        if mesh is not None:
+            # qrcp/qrcp_local have no DistOps lowering — the mesh registry
+            # shares the la_unsafe exclusion rationale (DESIGN.md §17)
+            raise ValueError("pivot=True has no mesh path: column-pivoted "
+                             "QR is mesh-excluded (DESIGN.md §17)")
         if local:
             return geqp3(a, block, variant=variant, local=True, depth=depth,
                          backend=backend).solve(b, rcond=rcond)
@@ -241,7 +270,7 @@ def gels(a: jnp.ndarray, b: jnp.ndarray, block: BlockSpec = 128, *,
         raise ValueError("rcond requires pivot=True (rank truncation needs "
                          "the column-pivoted factorization)")
     return qr_factor(a, block, variant=variant, depth=depth,
-                     backend=backend).solve(b)
+                     backend=backend, mesh=mesh, layout=layout).solve(b)
 
 
 @_traced

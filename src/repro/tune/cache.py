@@ -63,6 +63,12 @@ class TuneConfig:
     #: Tile size of a ``variant="tiled"`` winner (the tuner's
     #: tile-granularity axis, DESIGN.md §16) — None for pipeline variants.
     tile: Optional[int] = None
+    #: Device layout of a mesh-measured winner (the tuner's device-layout
+    #: axis, DESIGN.md §17) — ``(nd,)`` for the engine's 1-D block-cyclic
+    #: column cycle, None for single-device winners.  Records *where* the
+    #: measurement ran; ``tuned()`` dispatch stays single-device unless the
+    #: caller supplies a live mesh.
+    mesh_shape: Optional[Tuple[int, ...]] = None
     from_cache: bool = False         # True when returned without measuring
 
     def __post_init__(self):
@@ -80,6 +86,10 @@ class TuneConfig:
             d["kernel_blocks"] = list(self.kernel_blocks)
         if self.tile is None:
             d.pop("tile")                    # pre-ISSUE-9 schema compatible
+        if self.mesh_shape is None:
+            d.pop("mesh_shape")              # pre-ISSUE-10 schema compatible
+        else:
+            d["mesh_shape"] = list(self.mesh_shape)
         return d
 
     @classmethod
@@ -96,6 +106,7 @@ class TuneConfig:
             depth = parse_variant(d["variant"])[1]
         kb = d.get("kernel_blocks")          # absent in pre-ISSUE-8 entries
         tile = d.get("tile")                 # absent in pre-ISSUE-9 entries
+        ms = d.get("mesh_shape")             # absent in pre-ISSUE-10 entries
         # unknown *future* keys are dropped here by construction (explicit
         # field list) — a newer writer's cache loads in an older reader
         return cls(dmf=d["dmf"], shape=tuple(d["shape"]), dtype=d["dtype"],
@@ -105,6 +116,7 @@ class TuneConfig:
                    depth=int(depth),
                    kernel_blocks=tuple(kb) if kb else None,
                    tile=int(tile) if tile else None,
+                   mesh_shape=tuple(ms) if ms else None,
                    from_cache=from_cache)
 
 

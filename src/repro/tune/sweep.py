@@ -70,6 +70,13 @@ class Candidate:
     #: ``variant="tiled"`` candidates (the leading width of the schedule,
     #: which the tile grid is built from), None for pipeline variants.
     tile: Optional[int] = None
+    #: Device-layout axis (ISSUE 10, DESIGN.md §17): the mesh shape the
+    #: candidate's block-cyclic run is measured over — ``(nd,)`` for the
+    #: engine's 1-D column cycle.  None = single-device.  Only enumerated
+    #: when a live mesh is passed to :func:`search`; the winner persists it
+    #: in ``TuneConfig.mesh_shape`` so ``"tuned"`` arbitrates
+    #: depth × device layout.
+    mesh_shape: Optional[Tuple[int, ...]] = None
 
     def label(self) -> str:
         b0 = self.schedule[0]
@@ -80,6 +87,11 @@ class Candidate:
             lbl += f"/kb{bm}x{bn}x{bk}"
         if self.tile is not None:
             lbl += f"/t{self.tile}"
+        if self.mesh_shape is not None:
+            nd = 1
+            for d in self.mesh_shape:
+                nd *= d
+            lbl += f"/d{nd}"
         return lbl
 
 
@@ -142,13 +154,25 @@ def _candidate_backend(cand: Candidate):
 
 
 def _measure(dmf: str, cand: Candidate, a: jnp.ndarray, *,
-             warmup: int, repeats: int) -> float:
-    """Median seconds for one candidate (jit-compiled, block_until_ready)."""
+             warmup: int, repeats: int, mesh=None) -> float:
+    """Median seconds for one candidate (jit-compiled, block_until_ready).
+
+    Mesh candidates run eagerly: the engine's mesh path is an SPMD loop of
+    per-hook jitted shard_map steps (each cached — DESIGN.md §17), so the
+    hooks are compiled but the loop itself cannot nest under one jit.
+    """
     from repro.core.lookahead import get_variant
 
     fn = get_variant(dmf, cand.variant)
     be = _candidate_backend(cand)
-    timed = jax.jit(lambda x: fn(x, cand.schedule, backend=be))
+    if cand.mesh_shape is not None:
+        if mesh is None:
+            raise ValueError(
+                f"candidate {cand.label()} needs the live mesh it was "
+                f"enumerated for")
+        timed = lambda x: fn(x, cand.schedule, backend=be, mesh=mesh)
+    else:
+        timed = jax.jit(lambda x: fn(x, cand.schedule, backend=be))
     return _time_fn(timed, a, warmup=warmup, repeats=repeats)
 
 
@@ -236,7 +260,34 @@ def _candidates(dmf: str, n: int, dtype, blocks: Sequence[int],
     return out
 
 
-def _trace_candidates(dmf, n, dtype, a, timings) -> list:
+def _mesh_twins(dmf: str, chosen: Sequence[Candidate], mesh) -> list:
+    """Block-cyclic twins of the ranked candidates (device-layout axis).
+
+    Only ``mtb``/``la``-family candidates with uniform schedules have a
+    mesh lowering (DESIGN.md §17) — and only DMFs in the mesh registry.
+    Twins are appended *after* ranking (like the baseline) so a live mesh
+    always gets measured instead of competing with single-device
+    candidates inside the model's top-k.
+    """
+    from repro.core.distributed import DIST_REGISTRY, resolve_axis
+
+    if dmf not in DIST_REGISTRY:
+        return []
+    nd = mesh.shape[resolve_axis(mesh)]
+    twins = []
+    for c in chosen:
+        base, _ = parse_variant(c.variant)
+        if base not in ("mtb", "la") or not is_uniform(c.schedule):
+            continue
+        if c.kernel_blocks is not None or c.tile is not None:
+            continue
+        twin = dataclasses.replace(c, mesh_shape=(nd,))
+        if twin not in twins and twin not in chosen:
+            twins.append(twin)
+    return twins
+
+
+def _trace_candidates(dmf, n, dtype, a, timings, mesh=None) -> list:
     """One eager traced run per measured candidate (module doc of
     :class:`CandidateTrace`)."""
     from repro.core.lookahead import get_variant
@@ -247,8 +298,9 @@ def _trace_candidates(dmf, n, dtype, a, timings) -> list:
     for cand, measured_s in timings.items():
         fn = get_variant(dmf, cand.variant)
         be = _candidate_backend(cand)
+        mkw = {} if cand.mesh_shape is None else {"mesh": mesh}
         with obs_tracer.trace() as trc:
-            jax.block_until_ready(fn(a, cand.schedule, backend=be))
+            jax.block_until_ready(fn(a, cand.schedule, backend=be, **mkw))
         try:
             predicted = model.predict(dmf, n, dtype, cand.variant,
                                       cand.schedule, cand.backend,
@@ -278,6 +330,7 @@ def search(
     seed: int = 0,
     verbose: bool = False,
     trace_sink: Optional[list] = None,
+    mesh=None,
 ) -> TuneConfig:
     """Tune ``dmf`` at size ``n`` and persist the winner (module doc).
 
@@ -291,6 +344,14 @@ def search(
     the §9 predicted cost — the observability hook, DESIGN.md §14).  The
     traced runs happen *after* the timed measurements, so they never
     perturb the numbers the cache persists.
+
+    ``mesh``: pass a live ``jax.sharding.Mesh`` to also sweep the
+    device-layout axis (DESIGN.md §17): every ranked uniform-schedule
+    ``mtb``/``la``-family candidate gets a block-cyclic twin
+    (``Candidate.mesh_shape``, label suffix ``/d{nd}``) measured over the
+    mesh, and a mesh winner persists its layout in
+    ``TuneConfig.mesh_shape`` — so ``"tuned"`` arbitrates look-ahead depth
+    against device layout per (shape, dtype, backend).
     """
     from repro.core.lookahead import TUNABLE
 
@@ -323,12 +384,14 @@ def search(
             variant=base_variant,
             schedule=expand_schedule(n, min(BASELINE_BLOCK, n)), backend=be)
     chosen += [b for b in baselines.values() if b not in chosen]
+    if mesh is not None:
+        chosen += _mesh_twins(dmf, chosen, mesh)
 
     timings = {}
     for cand in chosen:
         try:
             timings[cand] = _measure(dmf, cand, a, warmup=warmup,
-                                     repeats=repeats)
+                                     repeats=repeats, mesh=mesh)
         except ValueError as e:
             # a schedule this DMF rejects (band reduction's uniformity rule);
             # anything else — a genuinely broken variant — must propagate
@@ -341,7 +404,7 @@ def search(
 
     if trace_sink is not None:
         trace_sink.extend(
-            _trace_candidates(dmf, n, dtype, a, timings))
+            _trace_candidates(dmf, n, dtype, a, timings, mesh=mesh))
 
     # one entry per cold backend: tuned() dispatches on the *caller's*
     # backend, so each key must record the best candidate measured there
@@ -356,6 +419,7 @@ def search(
             depth=parse_variant(best.variant)[1],
             kernel_blocks=best.kernel_blocks,
             tile=best.tile,
+            mesh_shape=best.mesh_shape,
             seconds=mine[best],
             baseline_seconds=mine.get(baselines[be], mine[best]))
         cache.put(cache_key(dmf, n, dtype, be), hits[be])

@@ -70,11 +70,17 @@ class Case:
     backend: str
     dtype: str
     shape_class: str
+    #: Device count of a mesh-engine case (``pipeline.factorize(mesh=...)``,
+    #: DESIGN.md §17); 0 = single-device.  Mesh cases skip at runtime unless
+    #: XLA provides enough devices (the distributed-smoke CI lane forces 8
+    #: host devices and selects them via the ``-mesh{nd}`` id suffix).
+    mesh_nd: int = 0
 
     @property
     def id(self) -> str:
-        return (f"{self.dmf}-{self.variant}-{self.backend}-"
+        base = (f"{self.dmf}-{self.variant}-{self.backend}-"
                 f"{self.dtype}-{self.shape_class}")
+        return f"{base}-mesh{self.mesh_nd}" if self.mesh_nd else base
 
 
 def shape_classes_for(dmf: str, variant: str, backend: str):
@@ -114,6 +120,35 @@ def build_cases():
                     for sc in shape_classes_for(dmf, variant, backend):
                         cases.append(Case(dmf, variant, backend,
                                           np.dtype(dtype).name, sc))
+    cases.extend(build_mesh_cases())
+    return cases
+
+
+#: Mesh-engine sweep (DESIGN.md §17): only the DMFs in ``DIST_REGISTRY``
+#: have a mesh lowering, and only the mtb/la-family schedules (rtm updates
+#: the *whole* trailing matrix per panel — no bulk/narrow split to
+#: distribute; qrcp/hessenberg pivot/two-sided globally and stay excluded
+#: like look-ahead itself).
+MESH_DMFS = ("lu", "cholesky", "qr")
+MESH_VARIANTS = ("mtb", "la", "la2")
+MESH_ND = 4
+
+
+def build_mesh_cases():
+    """Mesh-engine cases: contract checks + bitwise vs single-device.
+
+    Skipped at runtime when XLA provides fewer than ``MESH_ND`` devices
+    (the default single-device suite), executed by the distributed-smoke
+    CI lane under ``--xla_force_host_platform_device_count=8``.
+    """
+    cases = []
+    for dmf in MESH_DMFS:
+        for variant in MESH_VARIANTS:
+            for dtype in DTYPES:
+                for sc in ("square", "ragged"):
+                    cases.append(Case(dmf, variant, "jnp",
+                                      np.dtype(dtype).name, sc,
+                                      mesh_nd=MESH_ND))
     return cases
 
 
@@ -325,7 +360,26 @@ def run_case(case: Case):
         assert n % b == 0                 # exact tiling by contract
     a = make_input(case.dmf, m, n, seed=m * 131 + n, dtype=case.dtype)
     fn = get_variant(case.dmf, case.variant)
-    out = fn(a, b, backend=get_backend(case.backend))
+    kw = {}
+    if case.mesh_nd:
+        import jax
+        import pytest
+
+        if jax.device_count() < case.mesh_nd:
+            pytest.skip(f"mesh case needs {case.mesh_nd} devices, "
+                        f"XLA provides {jax.device_count()}")
+        kw["mesh"] = jax.make_mesh((case.mesh_nd,), ("model",))
+    out = fn(a, b, backend=get_backend(case.backend), **kw)
     base, _ = parse_variant(case.variant)
     check = VARIANT_CHECKS.get((case.dmf, base), CHECKS[case.dmf])
     check(a, out, tolerance(case), b, case.backend)
+    if case.mesh_nd:
+        # the mesh engine's contract is *bitwise* equality with the
+        # single-device engine at the same schedule — pivots included
+        # (repro.core.distributed module docstring)
+        import jax
+        import jax.numpy as jnp
+
+        ref = fn(a, b, backend=get_backend(case.backend))
+        for r, g in zip(jax.tree.leaves(ref), jax.tree.leaves(out)):
+            assert bool((jnp.asarray(r) == jnp.asarray(g)).all()), case.id
